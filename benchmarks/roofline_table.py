@@ -1,0 +1,45 @@
+"""Aggregate the dry-run JSONs into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from .common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells(mesh: str = "16x16") -> List[Dict]:
+    cells = []
+    for fp in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(fp))
+        if r.get("mesh") == mesh or (r.get("status") == "skipped"
+                                     and mesh in fp):
+            cells.append(r)
+    return cells
+
+
+def bench_roofline() -> List[str]:
+    lines = []
+    cells = load_cells("16x16")
+    if not cells:
+        return [emit("roofline.missing", 0.0,
+                     "run repro.launch.dryrun first")]
+    n_ok = sum(1 for c in cells if c.get("status") == "ok")
+    n_skip = sum(1 for c in cells if c.get("status") == "skipped")
+    lines.append(emit("roofline.cells", 0.0,
+                      f"ok={n_ok};skipped={n_skip}"))
+    for c in cells:
+        if c.get("status") != "ok":
+            continue
+        t_dom = max(c["t_compute_s"], c["t_memory_s"], c["t_collective_s"])
+        lines.append(emit(
+            f"roofline.{c['arch']}.{c['shape']}", t_dom * 1e6,
+            f"bottleneck={c['bottleneck']};"
+            f"tc={c['t_compute_s']:.3e};tm={c['t_memory_s']:.3e};"
+            f"tcoll={c['t_collective_s']:.3e};"
+            f"frac={c.get('roofline_fraction', 0):.4f}"))
+    return lines

@@ -1,0 +1,50 @@
+"""Batched serving example: continuous-batching engine + HGQ-packed weights.
+
+Runs a reduced llama-family model, serves a batch of requests through the
+KV-cache decode path, and shows the packed-weight (int8 + 2^-f scale)
+matmul agreeing with the float path — the TPU serving win of HGQ
+(DESIGN.md SS2: decode is HBM-bound; packed weights halve the bytes).
+
+    PYTHONPATH=src python examples/serve_llm.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get
+from repro.kernels import pack_weights, qmatmul_any
+from repro.models import model_for
+from repro.serving import Engine, Request
+
+
+def main():
+    cfg = get("llama3.2-3b", smoke=True)
+    M = model_for(cfg)
+    params, qstate = M.init(jax.random.PRNGKey(0), cfg)
+
+    # ---- continuous-batching engine over the KV-cache decode path ----
+    eng = Engine(M, params, qstate, cfg, batch_slots=4, max_len=64)
+    reqs = [Request(prompt=[1 + i, 7, 42], max_new=8) for i in range(6)]
+    eng.run(reqs)
+    for i, r in enumerate(reqs):
+        print(f"request {i}: prompt={r.prompt} -> {r.out}")
+
+    # ---- packed-weight serving path (per-channel trained bits) ----
+    lm_head = params["embed"]["table"]  # tied embeddings
+    w = lm_head["w"].T                  # [d, vocab]
+    f = lm_head.get("f")
+    f_cols = jnp.broadcast_to(jnp.asarray(f).T, w.shape) if f is not None \
+        else jnp.full(w.shape, 6.0)
+    w_int, scale = pack_weights(w, jnp.max(f_cols, axis=0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.d_model))
+    y_packed = qmatmul_any(x, w_int, scale)
+    y_float = x @ (w_int.astype(jnp.float32) * scale[None, :])
+    err = float(jnp.max(jnp.abs(y_packed - y_float)))
+    bytes_bf16 = w.size * 2
+    bytes_int8 = w_int.size + 4 * scale.size
+    print(f"packed lm_head: max|err|={err:.2e}  "
+          f"bytes {bytes_bf16} -> {bytes_int8} "
+          f"({bytes_bf16 / bytes_int8:.2f}x HBM saving at decode)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .base import ARCHS, ALIASES, SHAPES, ShapeSpec, get, cells

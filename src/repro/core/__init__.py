@@ -1,0 +1,15 @@
+"""HGQ core: trainable-bitwidth quantization (the paper's contribution)."""
+from .quantizer import (LN2, QuantizerSpec, f_shape_for, grad_scale,
+                        group_size, group_occupied_bits, int_bits_from_range,
+                        occupied_bits, quantize, quantize_inference, sg,
+                        ste_round, train_bits)
+from .ebops import (ebops_conv2d, ebops_dyn_matmul, ebops_matmul, l1_bits,
+                    loss_with_resource)
+from .hgq import (Aux, ActState, QTensor, TRAIN, CALIB, EVAL, init_act_state,
+                  matmul_ebops, dyn_matmul_ebops, observe, quant_act,
+                  quant_weight)
+from .calibrate import (FixedSpec, assert_no_overflow, fixed_spec_for_weights,
+                        fixed_spec_from_range, int_bits_exact)
+from .fixedpoint import representable, to_fixed
+from .pareto import ParetoFront, ParetoPoint
+from .schedule import constant, linear_warmup_cosine, log_ramp

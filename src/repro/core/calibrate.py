@@ -1,0 +1,90 @@
+"""Post-training calibration (paper SSec. III.A, Eq. 3).
+
+After QAT, integer bitwidths are fixed by running a calibration dataset
+through the network in CALIB mode (exact running extremes), then
+
+    i' = max( floor(log2 |vmax_q|) + 1,  ceil(log2 |vmin_q|) )
+    i  = i' + 1  (signed)   |   i' (unsigned)
+
+Optionally pad the computed range by ``margin_bits`` powers of two for
+outlier safety.  The result is a :class:`FixedSpec` per quantizer — total
+bits ``b`` and integer bits ``i`` — consumed by the bit-exact fixed-point
+emulation (``repro.core.fixedpoint``) and by the exact-EBOPs reporter.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hgq import ActState
+from .quantizer import quantize_inference
+
+
+class FixedSpec(NamedTuple):
+    """A concrete fixed-point type fixed<b, i> (AMD HLS convention: the sign
+    bit, when present, is part of the integer bits)."""
+    bits: jax.Array      # total bitwidth b  (>= 0; 0 == pruned / constant 0)
+    int_bits: jax.Array  # integer bits i (incl. sign bit if signed)
+    signed: jax.Array    # bool
+
+
+def int_bits_exact(vmin: jax.Array, vmax: jax.Array,
+                   f: jax.Array, margin_bits: float = 0.0):
+    """Eq. (3) on *quantized* extremes, in exact numpy-friendly form."""
+    fi = jnp.floor(jnp.asarray(f, jnp.float32) + 0.5)
+    vmin_q = quantize_inference(jnp.asarray(vmin, jnp.float32), fi)
+    vmax_q = quantize_inference(jnp.asarray(vmax, jnp.float32), fi)
+    if margin_bits:
+        vmin_q = vmin_q * (2.0 ** margin_bits)
+        vmax_q = vmax_q * (2.0 ** margin_bits)
+    hi = jnp.where(vmax_q > 0, jnp.floor(_log2(jnp.abs(vmax_q))) + 1.0, -127.0)
+    lo = jnp.where(vmin_q < 0, jnp.ceil(_log2(jnp.abs(vmin_q))), -127.0)
+    return jnp.maximum(hi, lo)
+
+
+def _log2(x):
+    return jnp.log2(jnp.maximum(x, 2.0 ** -126))
+
+
+def fixed_spec_from_range(state: ActState, f: jax.Array,
+                          margin_bits: float = 0.0) -> FixedSpec:
+    """Build the deployable fixed-point type for one quantizer."""
+    fi = jnp.floor(jnp.asarray(f, jnp.float32) + 0.5)
+    ip = int_bits_exact(state.vmin, state.vmax, fi, margin_bits)
+    signed = state.vmin < 0
+    i = jnp.where(signed, ip + 1.0, ip)
+    b = jnp.maximum(i + fi, 0.0)
+    # a value whose range collapsed to {0} needs no bits at all
+    dead = (state.vmax <= 0) & (state.vmin >= 0)
+    b = jnp.where(dead, 0.0, b)
+    return FixedSpec(bits=b, int_bits=jnp.where(dead, 0.0, i), signed=signed)
+
+
+def fixed_spec_for_weights(w: jax.Array, f: jax.Array,
+                           f_sh=None) -> FixedSpec:
+    """Weights are constants — their range is known exactly post-training."""
+    f_sh = f.shape if f_sh is None else f_sh
+    from .hgq import _feature_extremes
+    vmin, vmax = _feature_extremes(w, f_sh)
+    return fixed_spec_from_range(ActState(vmin, vmax), f)
+
+
+def assert_no_overflow(x: jax.Array, spec: FixedSpec, f: jax.Array) -> jax.Array:
+    """True iff every element of x (quantized at f) is representable by spec.
+
+    Used by tests to verify the calibration guarantee: running the calib
+    data through a calibrated model never overflows.
+    """
+    fi = jnp.floor(jnp.asarray(f, jnp.float32) + 0.5)
+    xq = quantize_inference(jnp.asarray(x, jnp.float32), fi)
+    frac = fi
+    top = (jnp.exp2(spec.int_bits - spec.signed.astype(jnp.float32))
+           - jnp.exp2(-frac))
+    bot = jnp.where(spec.signed,
+                    -jnp.exp2(spec.int_bits - 1.0), 0.0)
+    top = jnp.where(spec.bits > 0, top, 0.0)
+    bot = jnp.where(spec.bits > 0, bot, 0.0)
+    return jnp.all((xq <= top + 1e-9) & (xq >= bot - 1e-9))

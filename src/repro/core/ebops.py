@@ -1,0 +1,142 @@
+"""EBOPs — Effective Bit Operations (paper SSec. III.C, Eq. 5).
+
+EBOPs = sum over multiplications of b_i * b_j, where constants (weights)
+count their *occupied* bits and variable operands their declared bitwidth.
+Accumulations inside a dot-product chain are folded into the multiplication
+count, so a dense layer contributes  sum_ij b_x[i] * b_w[i,j].
+
+Two flavours:
+
+* ``ebops_*``   — differentiable ~EBOPs used as the training regularizer:
+                  bits = relu(i' + f) from running min/max (upper-bounds the
+                  exact EBOPs; paper SSec. III.D.2).
+* ``exact_*``   — post-training EBOPs with occupied-bit counting on the
+                  quantized weights (used for reporting / Pareto fronts).
+
+All reductions are *separable*:  sum_ij b_x[i] b_w[ij] = <b_x, sum_j b_w>,
+so no [in, out] bit tensor is ever materialized — O(N) instead of O(N^2)
+memory, which is what makes per-parameter granularity affordable at
+LLM scale on TPU (DESIGN.md SS2).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .quantizer import sg
+
+
+def _bsum(bits: jax.Array, full_shape: Sequence[int], axes) -> jax.Array:
+    """Sum ``bits`` (broadcastable to full_shape) over ``axes`` of full_shape,
+    without materializing the broadcast: multiply by the broadcast multiplicity
+    instead."""
+    bits = jnp.asarray(bits, jnp.float32)
+    full_shape = tuple(full_shape)
+    if bits.ndim == 0:
+        bits = bits.reshape((1,) * len(full_shape))
+    assert bits.ndim == len(full_shape), (bits.shape, full_shape)
+    mult = 1.0
+    reduce_axes = []
+    for ax in axes:
+        if bits.shape[ax] == 1 and full_shape[ax] != 1:
+            mult *= full_shape[ax]
+        else:
+            reduce_axes.append(ax)
+    out = jnp.sum(bits, axis=tuple(reduce_axes), keepdims=True) if reduce_axes else bits
+    return out * mult
+
+
+def ebops_matmul(bx: jax.Array, bw: jax.Array,
+                 in_dim: int, out_dim: int) -> jax.Array:
+    """~EBOPs of ``x @ w`` with x:[..., in], w:[in, out].
+
+    ``bx`` broadcastable to [in]; ``bw`` broadcastable to [in, out].
+    Returns scalar  sum_ij bx[i] * bw[i, j].
+    """
+    bx = jnp.asarray(bx, jnp.float32).reshape(-1)  # [in] or [1]
+    bw = jnp.asarray(bw, jnp.float32)
+    if bw.ndim == 0:
+        bw = bw.reshape(1, 1)
+    assert bw.ndim == 2, bw.shape
+    row = _bsum(bw, (bw.shape[0], out_dim), axes=(1,)).reshape(-1)  # [in] or [1]
+    if bx.shape[0] == 1 and row.shape[0] == 1:
+        return (bx[0] * row[0]) * in_dim
+    if bx.shape[0] == 1:
+        return bx[0] * jnp.sum(row)
+    if row.shape[0] == 1:
+        return row[0] * jnp.sum(bx)
+    return jnp.dot(bx, row)
+
+
+def ebops_conv2d(bx: jax.Array, bw: jax.Array, w_shape: Sequence[int]) -> jax.Array:
+    """~EBOPs of a conv2d with kernel [kh, kw, cin, cout].
+
+    Stream-IO counting (paper SSec. V.A / V.C): the physical multipliers are the
+    kh*kw*cin*cout kernel weights, applied through a buffer — each counted
+    once.  ``bx`` broadcastable to [cin] (activation bits per input channel),
+    ``bw`` broadcastable to w_shape.
+    """
+    kh, kw, cin, cout = w_shape
+    bw = jnp.asarray(bw, jnp.float32)
+    if bw.ndim == 0:
+        bw = bw.reshape(1, 1, 1, 1)
+    per_cin = _bsum(bw, (kh, kw, cin, cout), axes=(0, 1, 3)).reshape(-1)  # [cin]|[1]
+    bx = jnp.asarray(bx, jnp.float32).reshape(-1)
+    if bx.shape[0] == 1 and per_cin.shape[0] == 1:
+        return bx[0] * per_cin[0] * cin
+    if bx.shape[0] == 1:
+        return bx[0] * jnp.sum(per_cin)
+    if per_cin.shape[0] == 1:
+        return per_cin[0] * jnp.sum(bx)
+    return jnp.dot(bx, per_cin)
+
+
+def ebops_dyn_matmul(ba: jax.Array, bb: jax.Array,
+                     a_shape: Sequence[int], b_shape: Sequence[int]) -> jax.Array:
+    """~EBOPs of a variable x variable matmul  A[m,k] @ B[k,n]  (e.g. Q.K^T).
+
+    sum_{m,k,n} ba[m,k] * bb[k,n]  =  sum_k (sum_m ba)[k] * (sum_n bb)[k].
+    ``ba``/``bb`` broadcastable to a_shape/b_shape (leading batch dims allowed
+    and summed).
+    """
+    m, k = a_shape[-2], a_shape[-1]
+    k2, n = b_shape[-2], b_shape[-1]
+    assert k == k2, (a_shape, b_shape)
+    ba = jnp.asarray(ba, jnp.float32)
+    bb = jnp.asarray(bb, jnp.float32)
+    ba = ba.reshape((1, 1) if ba.ndim == 0 else ba.shape[-2:])
+    bb = bb.reshape((1, 1) if bb.ndim == 0 else bb.shape[-2:])
+    a_k = _bsum(ba, (m, k), axes=(0,)).reshape(-1)  # [k] or [1]
+    b_k = _bsum(bb, (k, n), axes=(1,)).reshape(-1)
+    if a_k.shape[0] == 1 and b_k.shape[0] == 1:
+        return a_k[0] * b_k[0] * k
+    if a_k.shape[0] == 1:
+        return a_k[0] * jnp.sum(b_k)
+    if b_k.shape[0] == 1:
+        return b_k[0] * jnp.sum(a_k)
+    return jnp.dot(a_k, b_k)
+
+
+def l1_bits(*bit_tensors: jax.Array) -> jax.Array:
+    """L1 regularizer on bitwidths (Eq. 16, gamma term) — keeps bits of values
+    not feeding any multiplier (last-layer outputs, non-linearity inputs)
+    from growing without bound."""
+    tot = jnp.float32(0.0)
+    for b in bit_tensors:
+        tot = tot + jnp.sum(jnp.asarray(b, jnp.float32))
+    return tot
+
+
+def loss_with_resource(base_loss: jax.Array, ebops: jax.Array,
+                       l1: jax.Array, beta: jax.Array,
+                       gamma: jax.Array) -> jax.Array:
+    """Eq. (16):  L = L_base + beta * ~EBOPs + gamma * L1_norm."""
+    return base_loss + beta * ebops + gamma * l1
+
+
+def useful_model_flops_dense(n_params: int, n_tokens: int) -> float:
+    """MODEL_FLOPS = 6 * N * D (dense) — for the roofline 'useful compute'
+    ratio (brief SSRoofline)."""
+    return 6.0 * float(n_params) * float(n_tokens)

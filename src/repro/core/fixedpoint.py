@@ -1,0 +1,43 @@
+"""Bit-exact fixed-point emulation — the "proxy model" of paper SSec. IV.
+
+Emulates AMD Vivado/Vitis HLS ``fixed<b, i>`` arithmetic, including the
+cyclic wrap-around overflow of Eq. (1)/(2), using scaled integers held in
+float64 (exact for b <= 52).  This reproduces the paper's guarantee of exact
+software/firmware correspondence: when no overflow occurs, the proxy output
+equals the QAT-time quantized forward bit for bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .calibrate import FixedSpec
+
+
+def to_fixed(x: jax.Array, spec: FixedSpec, f: jax.Array,
+             epsilon: float = 0.5) -> jax.Array:
+    """Quantize to fixed<b, i> with Eq. (1)/(2) wrap-around overflow.
+
+    ``f`` is the fractional bitwidth (b - i).  Works elementwise with
+    broadcasting; returns float32 values lying exactly on the fixed grid.
+    """
+    x64 = jnp.asarray(x, jnp.float64) if jax.config.jax_enable_x64 \
+        else jnp.asarray(x, jnp.float32)
+    fi = jnp.floor(jnp.asarray(f, jnp.float32) + 0.5).astype(x64.dtype)
+    b = jnp.asarray(spec.bits, x64.dtype)
+    signed = jnp.asarray(spec.signed)
+    m = jnp.floor(x64 * jnp.exp2(fi) + epsilon)  # [x * 2^f]
+    two_b = jnp.exp2(b)
+    half = jnp.exp2(b - 1.0)
+    m_signed = jnp.mod(m + half, two_b) - half          # Eq. (1)
+    m_unsigned = jnp.mod(m, two_b)                      # Eq. (2)
+    m_wrapped = jnp.where(signed, m_signed, m_unsigned)
+    m_wrapped = jnp.where(b > 0, m_wrapped, 0.0)
+    return (m_wrapped * jnp.exp2(-fi)).astype(jnp.float32)
+
+
+def representable(x: jax.Array, spec: FixedSpec, f: jax.Array) -> jax.Array:
+    """Elementwise: is x exactly representable (no wrap) in fixed<b, i>?"""
+    y = to_fixed(x, spec, f)
+    return jnp.abs(y - jnp.asarray(x, jnp.float32)) < jnp.exp2(
+        -jnp.floor(jnp.asarray(f, jnp.float32) + 0.5) - 1.0)

@@ -1,0 +1,162 @@
+"""HGQ glue: quantized tensors, activation-range state, aux accumulation.
+
+Every quantized layer in ``repro.nn`` speaks this protocol:
+
+* Weights carry a trainable fractional-bit tensor ``f`` next to the weight
+  (params subtree ``{'w': ..., 'hgq_f': ...}``).
+* Activations carry a trainable ``f`` plus a *non-trainable* running range
+  state ``(vmin, vmax)`` (the "realized min/max within the epoch" of
+  SSec. III.D.2), threaded functionally through the forward pass.
+* Each multiplicative op contributes its ~EBOPs term; each quantizer its L1
+  term (Eq. 16).  These accumulate in an :class:`Aux` value returned beside
+  the layer output — scan-over-layers simply sums the carried Aux.
+
+Modes:
+  TRAIN  — quantize with surrogate gradients, update ranges with slow-decay
+           running extremes.
+  CALIB  — exact range accumulation (no decay) for Eq.-3 calibration.
+  EVAL   — quantize, frozen ranges.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ebops as ebops_lib
+from .quantizer import (QuantizerSpec, grad_scale, quantize,
+                        quantize_inference, sg, train_bits)
+
+TRAIN, CALIB, EVAL = "train", "calib", "eval"
+
+# decay used by the running extremes in TRAIN mode: old extremes shrink
+# toward zero slowly so stale outliers fade (approximates per-epoch min/max)
+RANGE_DECAY = 0.999
+
+
+class QTensor(NamedTuple):
+    """A value plus its differentiable bitwidth estimate (or None if the
+    value is unquantized — bits None disables EBOPs accounting downstream)."""
+    q: jax.Array
+    bits: Optional[jax.Array]  # broadcastable to q's *feature* dims
+
+
+class ActState(NamedTuple):
+    vmin: jax.Array
+    vmax: jax.Array
+
+
+@dataclasses.dataclass
+class Aux:
+    """Per-forward accumulator (a plain pytree-able triple)."""
+    ebops: jax.Array
+    l1: jax.Array
+
+    @staticmethod
+    def zero() -> "Aux":
+        return Aux(jnp.float32(0.0), jnp.float32(0.0))
+
+    def add(self, ebops=None, l1=None) -> None:
+        if ebops is not None:
+            self.ebops = self.ebops + ebops
+        if l1 is not None:
+            self.l1 = self.l1 + l1
+
+    def merge(self, other: "Aux") -> None:
+        self.ebops = self.ebops + other.ebops
+        self.l1 = self.l1 + other.l1
+
+    def as_tuple(self) -> Tuple[jax.Array, jax.Array]:
+        return (self.ebops, self.l1)
+
+
+def init_act_state(f_sh) -> ActState:
+    return ActState(vmin=jnp.zeros(f_sh, jnp.float32),
+                    vmax=jnp.zeros(f_sh, jnp.float32))
+
+
+def _feature_extremes(x: jax.Array, f_sh) -> Tuple[jax.Array, jax.Array]:
+    """Reduce x over batch/broadcast axes down to the f shape."""
+    f_sh = tuple(f_sh)
+    x32 = sg(jnp.asarray(x, jnp.float32))
+    nd = x32.ndim
+    padded = (1,) * (nd - len(f_sh)) + f_sh
+    axes = tuple(i for i in range(nd) if padded[i] == 1)
+    vmin = jnp.min(x32, axis=axes, keepdims=True).reshape(f_sh)
+    vmax = jnp.max(x32, axis=axes, keepdims=True).reshape(f_sh)
+    return vmin, vmax
+
+
+def observe(x: jax.Array, state: ActState, mode: str) -> ActState:
+    """Update the running activation extremes."""
+    vmin_b, vmax_b = _feature_extremes(x, state.vmin.shape)
+    if mode == CALIB:
+        return ActState(jnp.minimum(state.vmin, vmin_b),
+                        jnp.maximum(state.vmax, vmax_b))
+    if mode == TRAIN:
+        return ActState(jnp.minimum(state.vmin * RANGE_DECAY, vmin_b),
+                        jnp.maximum(state.vmax * RANGE_DECAY, vmax_b))
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Weight / activation quantizer application
+# ---------------------------------------------------------------------------
+
+def quant_weight(w: jax.Array, f: Optional[jax.Array],
+                 mode: str = TRAIN) -> QTensor:
+    """Quantize a weight; bits via Eq.-3 on the per-group weight extremes.
+
+    The regularizer gradient on f is normalized by 1/sqrt(||g||)
+    (SSec. III.D.3) — applied on the *bits* path only, so the loss-path
+    surrogate gradient (through ``quantize``) is untouched.
+    """
+    if f is None:
+        return QTensor(w, None)
+    wq = quantize(w, f) if mode == TRAIN else quantize_inference(w, f)
+    vmin, vmax = _feature_extremes(w, f.shape)
+    gsize = _gsize(w.shape, f.shape)
+    f_reg = grad_scale(f, 1.0 / math.sqrt(gsize))
+    bits = train_bits(f_reg, vmin, vmax, signed_bit=False)
+    return QTensor(wq, bits)
+
+
+def quant_act(x: jax.Array, f: Optional[jax.Array], state: Optional[ActState],
+              mode: str, aux: Aux, gamma_l1: bool = True
+              ) -> Tuple[QTensor, Optional[ActState]]:
+    """Quantize an activation; update range state; add L1 bit regularizer."""
+    if f is None:
+        return QTensor(x, None), state
+    xq = quantize(x, f) if mode == TRAIN else quantize_inference(x, f)
+    new_state = observe(x, state, mode) if state is not None else None
+    if new_state is not None:
+        bits = train_bits(grad_scale(f, 1.0 / math.sqrt(_gsize(x.shape, f.shape))),
+                          new_state.vmin, new_state.vmax, signed_bit=True)
+    else:
+        bits = jax.nn.relu(f) + 1.0
+    if gamma_l1:
+        aux.add(l1=ebops_lib.l1_bits(jax.nn.relu(f)))
+    return QTensor(xq, bits), new_state
+
+
+def _gsize(value_shape, f_sh) -> float:
+    n_val = math.prod(value_shape) if value_shape else 1
+    n_f = math.prod(f_sh) if f_sh else 1
+    # activations: group size counts feature multiplicity, not batch
+    return max(float(n_val) / float(n_f), 1.0)
+
+
+def matmul_ebops(aux: Aux, x_bits, w_bits, in_dim: int, out_dim: int) -> None:
+    """Record ~EBOPs of a dense matmul if both operands are quantized."""
+    if x_bits is None or w_bits is None:
+        return
+    aux.add(ebops=ebops_lib.ebops_matmul(x_bits, w_bits, in_dim, out_dim))
+
+
+def dyn_matmul_ebops(aux: Aux, a_bits, b_bits, a_shape, b_shape) -> None:
+    if a_bits is None or b_bits is None:
+        return
+    aux.add(ebops=ebops_lib.ebops_dyn_matmul(a_bits, b_bits, a_shape, b_shape))

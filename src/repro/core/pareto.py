@@ -1,0 +1,57 @@
+"""EBOPs-vs-metric Pareto-front checkpoint tracker (paper SSec. V).
+
+The paper recovers the whole accuracy/resource trade-off curve from a single
+training run by checkpointing every epoch that lands on the running Pareto
+front of (validation metric, EBOPs).  This module implements that tracker.
+
+``better_metric``: 'max' (accuracy) or 'min' (resolution / loss).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class ParetoPoint:
+    metric: float
+    ebops: float
+    step: int
+    payload: Any = None  # e.g. a checkpoint path or params snapshot
+
+
+class ParetoFront:
+    def __init__(self, better_metric: str = "max"):
+        assert better_metric in ("max", "min")
+        self.sign = 1.0 if better_metric == "max" else -1.0
+        self.points: List[ParetoPoint] = []
+
+    def _dominates(self, a: ParetoPoint, b: ParetoPoint) -> bool:
+        """a dominates b: no worse on both axes, strictly better on one."""
+        am, bm = self.sign * a.metric, self.sign * b.metric
+        return (am >= bm and a.ebops <= b.ebops
+                and (am > bm or a.ebops < b.ebops))
+
+    def offer(self, metric: float, ebops: float, step: int,
+              payload: Any = None) -> bool:
+        """Insert if non-dominated; prune anything the new point dominates.
+        Returns True iff the point joined the front (=> checkpoint it)."""
+        cand = ParetoPoint(float(metric), float(ebops), int(step), payload)
+        for p in self.points:
+            if self._dominates(p, cand) or (p.metric == cand.metric
+                                            and p.ebops == cand.ebops):
+                return False
+        self.points = [p for p in self.points if not self._dominates(cand, p)]
+        self.points.append(cand)
+        self.points.sort(key=lambda p: p.ebops)
+        return True
+
+    def front(self) -> List[Tuple[float, float, int]]:
+        return [(p.metric, p.ebops, p.step) for p in self.points]
+
+    def best(self, max_ebops: Optional[float] = None) -> Optional[ParetoPoint]:
+        elig = [p for p in self.points
+                if max_ebops is None or p.ebops <= max_ebops]
+        if not elig:
+            return None
+        return max(elig, key=lambda p: self.sign * p.metric)

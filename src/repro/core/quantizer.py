@@ -1,0 +1,223 @@
+"""HGQ fixed-point quantizer with gradient-trainable fractional bitwidths.
+
+Implements Algorithm 1 of the paper:
+
+    f   <- ste(f_fp)                          # STE on the (float) bitwidth
+    x_q <- sg(round(x * 2^f) * 2^-f)          # Eq. (4) quantization
+    d   <- sg(x - x_q)                        # quantization error delta_f
+    d   <- sg(d + ln2 * f * d) - ln2 * f * d  # surrogate grad  d(delta)/df = -ln2*delta
+    x_q <- x - d                              # STE in x, surrogate grad in f
+
+so that  d(x_q)/dx = 1  (straight-through) and  d(x_q)/df_fp = +ln2 * delta
+(Eq. (15)).  Integer bits are *not* tracked during training (Eq. 4); they are
+fixed post-hoc by calibration (see `repro.core.calibrate`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+LN2 = 0.6931471805599453
+
+sg = jax.lax.stop_gradient
+
+
+def ste_round(x: jax.Array, epsilon: float = 0.5) -> jax.Array:
+    """Round-to-integer with a straight-through gradient (QKeras convention).
+
+    ``[x] = floor(x + eps)`` with midpoint round-up at eps=1/2 (Eq. 1 footnote).
+    """
+    return x + sg(jnp.floor(x + epsilon) - x)
+
+
+def grad_scale(x: jax.Array, scale) -> jax.Array:
+    """Identity in the forward pass; multiplies the gradient by ``scale``.
+
+    Used for the 1/sqrt(||g||) normalization of the regularizer gradient on
+    shared bitwidths (paper SSec. III.D.3).
+    """
+    return x * scale + sg(x * (1.0 - scale))
+
+
+def quantize(x: jax.Array, f: jax.Array, epsilon: float = 0.5) -> jax.Array:
+    """HGQ Algorithm-1 quantizer. Differentiable in ``x`` (STE) and ``f``.
+
+    ``f`` broadcasts against ``x`` (per-tensor scalar, per-channel, or full
+    per-parameter shape).  Math is done in float32 regardless of x dtype so
+    the fixed-point grid is exact, and cast back at the end.
+    """
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    fi = ste_round(f.astype(jnp.float32))
+    scale = jnp.exp2(fi)  # exact for integer fi
+    xq = sg(jnp.floor(x32 * scale + epsilon) / scale)
+    delta = sg(x32 - xq)
+    delta = sg(delta + LN2 * fi * delta) - LN2 * fi * delta
+    return (x32 - delta).astype(dtype)
+
+
+def quantize_inference(x: jax.Array, f: jax.Array, epsilon: float = 0.5) -> jax.Array:
+    """Pure (non-differentiable) Eq.-(4) quantization: round(x*2^f)*2^-f."""
+    x32 = x.astype(jnp.float32)
+    fi = jnp.floor(f.astype(jnp.float32) + 0.5)
+    scale = jnp.exp2(fi)
+    return (jnp.floor(x32 * scale + epsilon) / scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Granularity / parameter groups
+# ---------------------------------------------------------------------------
+
+Granularity = str  # 'per_tensor' | 'per_channel' | 'per_parameter'
+
+_GRANULARITIES = ("per_tensor", "per_channel", "per_parameter")
+
+
+def f_shape_for(shape: Sequence[int], granularity: Granularity,
+                channel_axis: int = -1) -> Tuple[int, ...]:
+    """Shape of the trainable fractional-bit tensor for a value of ``shape``.
+
+    per_tensor    -> ()            one shared bitwidth
+    per_channel   -> broadcastable along ``channel_axis`` only
+    per_parameter -> same shape as the value (maximum granularity)
+    """
+    if granularity not in _GRANULARITIES:
+        raise ValueError(f"unknown granularity {granularity!r}")
+    shape = tuple(shape)
+    if granularity == "per_tensor" or not shape:
+        return ()
+    if granularity == "per_parameter":
+        return shape
+    ax = channel_axis % len(shape)
+    return tuple(d if i == ax else 1 for i, d in enumerate(shape))
+
+
+def group_size(value_shape: Sequence[int], f_sh: Sequence[int]) -> float:
+    """Number of parameters sharing one bitwidth, ``||g||`` in the paper."""
+    import math
+    n_val = math.prod(value_shape) if value_shape else 1
+    n_f = math.prod(f_sh) if f_sh else 1
+    return float(n_val) / float(n_f)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizerSpec:
+    """Static configuration of one HGQ quantizer."""
+    granularity: Granularity = "per_parameter"
+    init_frac_bits: float = 2.0
+    channel_axis: int = -1
+    trainable: bool = True
+    # extra margin (in powers of two) added during calibration for outliers
+    calib_margin_bits: float = 0.0
+
+    def init_f(self, value_shape: Sequence[int]) -> jax.Array:
+        return jnp.full(f_shape_for(value_shape, self.granularity,
+                                    self.channel_axis),
+                        self.init_frac_bits, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Integer-bit estimation (Eq. 3) — used by the ~EBOPs regularizer and by
+# post-training calibration.
+# ---------------------------------------------------------------------------
+
+_NEG_LARGE = -127.0  # "no integer bits needed" sentinel (value is ~0)
+
+
+def int_bits_from_range(vmin: jax.Array, vmax: jax.Array) -> jax.Array:
+    """Eq. (3): integer bits i' (sign bit excluded) needed to cover [vmin, vmax].
+
+    i' = max( floor(log2|vmax|) + 1, ceil(log2|vmin|) )
+
+    Zero-range values get a large negative i' so that relu(i' + f) == 0 and
+    the parameter contributes nothing to ~EBOPs (it is effectively pruned).
+    """
+    vmin = sg(jnp.asarray(vmin, jnp.float32))
+    vmax = sg(jnp.asarray(vmax, jnp.float32))
+    hi = jnp.where(vmax > 0, jnp.floor(_safe_log2(vmax)) + 1.0, _NEG_LARGE)
+    lo = jnp.where(vmin < 0, jnp.ceil(_safe_log2(-vmin)), _NEG_LARGE)
+    return jnp.maximum(hi, lo)
+
+
+def _safe_log2(x: jax.Array) -> jax.Array:
+    x = jnp.asarray(x, jnp.float32)
+    return jnp.log2(jnp.maximum(x, jnp.float32(2.0 ** _NEG_LARGE)))
+
+
+def train_bits(f: jax.Array, vmin: jax.Array, vmax: jax.Array,
+               signed_bit: bool = True) -> jax.Array:
+    """Differentiable (in f) bitwidth estimate ``max(i' + f, 0)`` used by ~EBOPs.
+
+    ``signed_bit`` adds one bit when the observed range goes negative
+    (variable operands carry their sign bit on-chip).
+    """
+    ip = int_bits_from_range(vmin, vmax)
+    bits = jax.nn.relu(ip + f)
+    if signed_bit:
+        bits = bits + sg((jnp.asarray(vmin) < 0).astype(jnp.float32)) * (bits > 0)
+    return bits
+
+
+# ---------------------------------------------------------------------------
+# Exact occupied-bit counting (EBOPs, SSec. III.C) — post-training, on
+# quantized constants.  "bits enclosed by the most and least significant
+# non-zero bits": e.g. 001xx1000 counts 4 bits.
+# ---------------------------------------------------------------------------
+
+def occupied_bits(w: jax.Array, f: jax.Array) -> jax.Array:
+    """Exact per-element occupied bits of quantized constants ``w``.
+
+    Represent |w_q| = m * 2^-f with integer m; occupied bits =
+    floor(log2 m) - trailing_zeros(m) + 1, and 0 when m == 0.
+    """
+    f = jnp.floor(jnp.asarray(f, jnp.float32) + 0.5)
+    m = jnp.abs(jnp.round(jnp.asarray(w, jnp.float32) * jnp.exp2(f)))
+    m = m.astype(jnp.int32)
+    msb = jnp.where(m > 0, jnp.floor(_safe_log2(m.astype(jnp.float32))), -1.0)
+    tz = _trailing_zeros(m)
+    return jnp.where(m > 0, msb - tz + 1.0, 0.0)
+
+
+def _trailing_zeros(m: jax.Array) -> jax.Array:
+    """Trailing zero count of non-negative int32 (0 -> 0)."""
+    m = m.astype(jnp.uint32)
+    lowbit = jnp.bitwise_and(m, (~m + jnp.uint32(1)))  # isolate lowest set bit
+    return jnp.where(m > 0,
+                     jnp.floor(_safe_log2(lowbit.astype(jnp.float32))),
+                     0.0)
+
+
+def group_occupied_bits(w: jax.Array, f: jax.Array,
+                        f_sh: Sequence[int]) -> jax.Array:
+    """Occupied bits when a *group* of weights shares one multiplier.
+
+    The group bitwidth spans the most-significant non-zero bit to the
+    least-significant non-zero bit across the whole group (paper SSec. III.C).
+    Reduction axes are those where f is broadcast (size 1 or missing).
+    """
+    f = jnp.broadcast_to(jnp.asarray(f, jnp.float32), w.shape)
+    fi = jnp.floor(f + 0.5)
+    m = jnp.abs(jnp.round(jnp.asarray(w, jnp.float32) * jnp.exp2(fi)))
+    m = m.astype(jnp.int32)
+    msb = jnp.where(m > 0, jnp.floor(_safe_log2(m.astype(jnp.float32))) - fi,
+                    jnp.float32(_NEG_LARGE))
+    lsb = jnp.where(m > 0, _trailing_zeros(m) - fi, jnp.float32(-_NEG_LARGE))
+    axes = _reduce_axes(w.shape, f_sh)
+    if axes:
+        msb = jnp.max(msb, axis=axes, keepdims=True)
+        lsb = jnp.min(lsb, axis=axes, keepdims=True)
+    bits = msb - lsb + 1.0
+    return jnp.where(msb >= lsb, bits, 0.0).reshape(f_sh if f_sh else ())
+
+
+def _reduce_axes(value_shape: Sequence[int], f_sh: Sequence[int]):
+    value_shape = tuple(value_shape)
+    f_sh = tuple(f_sh)
+    if not f_sh:
+        return tuple(range(len(value_shape)))
+    assert len(f_sh) == len(value_shape), (f_sh, value_shape)
+    return tuple(i for i, (v, g) in enumerate(zip(value_shape, f_sh))
+                 if g == 1 and v != 1)

@@ -1,0 +1,41 @@
+"""beta / learning-rate schedules.
+
+The paper sweeps the resource-regularization strength beta along a log ramp
+within a single training run (e.g. 1e-6 -> 1e-4 for jet tagging), recovering
+the Pareto front from one run.  gamma (the L1 term) stays fixed (2e-6).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> value
+
+
+def constant(v: float) -> Schedule:
+    def fn(step):
+        return jnp.float32(v)
+    return fn
+
+
+def log_ramp(v0: float, v1: float, total_steps: int) -> Schedule:
+    """beta(t) = v0 * (v1/v0)^(t / T), clamped at v1 (paper SSec. V.B-D)."""
+    lv0, lv1 = math.log(v0), math.log(v1)
+
+    def fn(step):
+        t = jnp.clip(step / float(max(total_steps, 1)), 0.0, 1.0)
+        return jnp.exp(jnp.float32(lv0) + t * jnp.float32(lv1 - lv0))
+    return fn
+
+
+def linear_warmup_cosine(peak: float, warmup: int, total: int,
+                         floor: float = 0.0) -> Schedule:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos).astype(jnp.float32)
+    return fn

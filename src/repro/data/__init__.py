@@ -1,0 +1,2 @@
+from .synthetic import (jet_batch, svhn_batch, muon_batch, lm_batch,
+                        DataSpec, make_pipeline)

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated on CPU via interpret=True).
+
+* hgq_quantize — Algorithm-1 quantizer forward (hottest elementwise op)
+* qmatmul      — packed int8 x fp fused dequant-matmul (serving path)
+"""
+from .hgq_quantize.ops import hgq_quantize
+from .qmatmul.ops import pack_weights, qmatmul_any

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: HGQ quantizer forward (Eq. 4).
+
+This op runs over every weight and activation on every training step — the
+framework's hottest elementwise op.  The kernel fuses the (round f ->
+exp2 -> scale -> floor -> unscale) chain into one VMEM pass, tiled
+(block_rows, 128)-aligned for the VPU lanes.
+
+Three broadcast layouts cover the granularity spectrum:
+  * per_tensor    — f is a scalar in SMEM
+  * per_channel   — f is a [cols] row, broadcast across rows
+  * per_parameter — f has x's shape, streamed tile-by-tile beside x
+
+The backward pass (STE in x, ln2*delta surrogate in f, Alg. 1) is attached
+in ops.py via jax.custom_vjp — the kernel computes the forward only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+LANE = 128  # TPU VPU lane width; last-dim tiles must be multiples
+
+
+def _quantize_math(x, fi, epsilon):
+    scale = jnp.exp2(fi)
+    return jnp.floor(x.astype(jnp.float32) * scale + epsilon) / scale
+
+
+def _kernel_per_tensor(x_ref, f_ref, o_ref, *, epsilon):
+    fi = jnp.floor(f_ref[0] + 0.5)
+    o_ref[...] = _quantize_math(x_ref[...], fi, epsilon).astype(o_ref.dtype)
+
+
+def _kernel_per_channel(x_ref, f_ref, o_ref, *, epsilon):
+    fi = jnp.floor(f_ref[...] + 0.5)          # [1, block_cols]
+    o_ref[...] = _quantize_math(x_ref[...], fi, epsilon).astype(o_ref.dtype)
+
+
+def _kernel_per_param(x_ref, f_ref, o_ref, *, epsilon):
+    fi = jnp.floor(f_ref[...] + 0.5)          # same tile shape as x
+    o_ref[...] = _quantize_math(x_ref[...], fi, epsilon).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("epsilon", "block_rows",
+                                             "interpret"))
+def hgq_quantize_2d(x: jax.Array, f: jax.Array, *, epsilon: float = 0.5,
+                    block_rows: int = DEFAULT_BLOCK_ROWS,
+                    interpret: bool = True) -> jax.Array:
+    """Quantize a 2-D array [rows, cols].  f: scalar, [cols], or x.shape.
+
+    cols is padded to the 128-lane boundary by the caller (ops.py handles
+    arbitrary shapes by reshaping/padding).
+    """
+    rows, cols = x.shape
+    assert cols % LANE == 0, f"cols {cols} must be lane-aligned"
+    br = min(block_rows, rows)
+    grid = (pl.cdiv(rows, br),)
+    x_spec = pl.BlockSpec((br, cols), lambda i: (i, 0))
+    if f.ndim == 0:
+        kern = functools.partial(_kernel_per_tensor, epsilon=epsilon)
+        f_arg = f.reshape(1).astype(jnp.float32)
+        f_spec = pl.BlockSpec((1,), lambda i: (0,))
+    elif f.ndim == 1:
+        kern = functools.partial(_kernel_per_channel, epsilon=epsilon)
+        f_arg = f.reshape(1, cols).astype(jnp.float32)
+        f_spec = pl.BlockSpec((1, cols), lambda i: (0, 0))
+    else:
+        kern = functools.partial(_kernel_per_param, epsilon=epsilon)
+        f_arg = f.astype(jnp.float32)
+        f_spec = pl.BlockSpec((br, cols), lambda i: (i, 0))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[x_spec, f_spec],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+        interpret=interpret,
+    )(x, f_arg)

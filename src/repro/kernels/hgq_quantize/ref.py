@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the HGQ quantizer forward (Eq. 4)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hgq_quantize_ref(x: jnp.ndarray, f: jnp.ndarray,
+                     epsilon: float = 0.5) -> jnp.ndarray:
+    """round(x * 2^f) * 2^-f with f rounded via floor(f + 0.5), f broadcast
+    against x.  Math in fp32, result cast back to x.dtype."""
+    x32 = x.astype(jnp.float32)
+    fi = jnp.floor(f.astype(jnp.float32) + 0.5)
+    scale = jnp.exp2(fi)
+    return (jnp.floor(x32 * scale + epsilon) / scale).astype(x.dtype)

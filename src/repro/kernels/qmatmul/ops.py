@@ -1,0 +1,75 @@
+"""Public wrapper for the packed dequant-matmul: padding, batching, packing.
+
+``pack_weights`` converts an HGQ-trained (w, f) pair into the serving
+representation (int8 + per-channel 2^-f scale).  ``qmatmul_any`` handles
+leading batch dims and non-aligned shapes.  ``packed_bytes`` is the TPU
+serving cost model: the per-channel trained bits map channels into
+{0, 4, 8} storage classes (0 = pruned — HGQ pruning carries straight
+through to serving).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import qmatmul
+from .ref import pack_ref, qmatmul_ref
+
+
+def pack_weights(w: jax.Array, f: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """[K, N] fp weights + fractional bits (scalar | [N] | [K, N]) ->
+    (int8 weights, [N] scale).  Per-parameter f packs at the per-channel
+    max so every weight in the channel is exactly representable."""
+    f = jnp.asarray(f, jnp.float32)
+    if f.ndim == 0:
+        fcol = jnp.full((w.shape[1],), f)
+    elif f.ndim == 1:
+        fcol = jnp.broadcast_to(f, (w.shape[1],))
+    else:
+        fcol = jnp.max(jnp.broadcast_to(f, w.shape), axis=0)
+    return pack_ref(w, fcol)
+
+
+def qmatmul_any(x: jax.Array, w_int: jax.Array, scale: jax.Array, *,
+                interpret: bool = True, bm: int = 128, bn: int = 128,
+                bk: int = 512) -> jax.Array:
+    """x [..., K] @ packed w [K, N]: flattens leading dims and pads to the
+    (8, 128) tile grid."""
+    K, N = w_int.shape
+    lead = x.shape[:-1]
+    M = math.prod(lead) if lead else 1
+    x2 = x.reshape(M, K)
+
+    def _round_up(v, base):
+        return -(-v // base) * base
+
+    # every dim must be an exact multiple of its tile (partial blocks read
+    # out-of-bounds in the k-accumulation grid)
+    bm_ = min(bm, _round_up(M, 8))
+    bk_ = min(bk, _round_up(K, 128))
+    bn_ = min(bn, _round_up(N, 128))
+    M3, K3, N3 = _round_up(M, bm_), _round_up(K, bk_), _round_up(N, bn_)
+    if M3 > M or K3 > K:
+        x2 = jnp.pad(x2, ((0, M3 - M), (0, K3 - K)))
+    w2, s2 = w_int, scale
+    if K3 > K or N3 > N:
+        w2 = jnp.pad(w_int, ((0, K3 - K), (0, N3 - N)))
+        s2 = jnp.pad(scale, (0, N3 - N))
+    out = qmatmul(x2, w2, s2, bm=bm_, bn=bn_, bk=bk_, interpret=interpret)
+    return out[:M, :N].reshape(*lead, N)
+
+
+def packed_bytes(w: jax.Array, f: jax.Array, vmin, vmax) -> float:
+    """Serving weight bytes under {0,4,8}-bit storage classes chosen from the
+    calibrated per-channel bitwidths b = max(i' + f, 0).  This is the
+    memory-roofline win HGQ buys on TPU decode (DESIGN.md SS2)."""
+    from ...core.quantizer import int_bits_from_range
+    b = jnp.maximum(int_bits_from_range(vmin, vmax)
+                    + jnp.floor(jnp.asarray(f, jnp.float32) + 0.5), 0.0)
+    cls = jnp.where(b <= 0, 0.0, jnp.where(b <= 4, 4.0, 8.0))
+    n_per_channel = w.shape[0] if w.ndim == 2 else 1
+    return float(jnp.sum(cls) / 8.0 * n_per_channel)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the packed-weight dequant matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qmatmul_ref(x: jnp.ndarray, w_int: jnp.ndarray,
+                scale: jnp.ndarray) -> jnp.ndarray:
+    """x [M, K] fp; w_int [K, N] int8; scale [N] fp (= 2^-f per channel).
+
+    Dequantize-then-matmul in fp32: x @ (w_int * scale)."""
+    w = w_int.astype(jnp.float32) * scale.astype(jnp.float32)[None, :]
+    return jnp.dot(x.astype(jnp.float32), w).astype(x.dtype)
+
+
+def pack_ref(w: jnp.ndarray, f: jnp.ndarray):
+    """Quantize fp weights [K, N] to int8 + per-channel scale from the HGQ
+    fractional bits f [N] (scale = 2^-f)."""
+    fi = jnp.floor(f.astype(jnp.float32) + 0.5)
+    scale = jnp.exp2(-fi)
+    m = jnp.clip(jnp.floor(w.astype(jnp.float32) / scale[None, :] + 0.5),
+                 -128, 127).astype(jnp.int8)
+    return m, scale

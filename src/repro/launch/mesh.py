@@ -1,0 +1,31 @@
+"""Production mesh builders.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init, smoke tests keep 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod (v5e-class pod slice); 2 pods = 512 chips.
+
+    ``pod`` is an outer data axis: the gradient all-reduce crosses the
+    (slower) inter-pod links once per step; TP traffic stays inside a pod.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke tests/examples."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """All data-parallel axes of a mesh (pod is outer-DP)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,102 @@
+"""Pod-scale LM training launcher: pjit'd train step under the production
+mesh with the full sharding rules.
+
+On this CPU container it runs the smoke config on a 1x1 mesh; on hardware,
+``--multi-pod`` builds the (2, 16, 16) mesh and the same code paths shard
+per repro.dist.sharding (exactly what launch/dryrun.py proves compiles).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --steps 20 --batch 4 --seq 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get
+from ..data import DataSpec, make_pipeline
+from ..dist.axes import set_axes
+from ..dist.sharding import batch_sharding, replicated, shard_tree
+from ..models import model_for
+from ..optim import adamw_init
+from ..train import TrainConfig, lm_loss, make_train_step
+from ..train import checkpoint as ckpt_lib
+from .mesh import make_host_mesh, make_production_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--grad-compression", choices=["none", "bf16", "int8"],
+                    default="none")
+    args = ap.parse_args()
+
+    cfg = get(args.arch, smoke=not args.full)
+    M = model_for(cfg)
+    if args.production_mesh or args.multi_pod:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        daxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        dsize = 1
+        for a in daxes:
+            dsize *= sizes[a]
+        set_axes(daxes, "model", data_size=dsize, model_size=sizes["model"])
+    else:
+        mesh = make_host_mesh()
+
+    params, qstate = M.init(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    pipe = make_pipeline(DataSpec(kind="lm", batch=args.batch, seq=args.seq,
+                                  vocab=cfg.vocab))
+    tcfg = TrainConfig(steps=args.steps, lr=1e-3, beta0=1e-9, beta1=1e-7,
+                       ckpt_dir=args.ckpt_dir)
+    fwd = lambda p, q, b, mode: M.forward(p, q, b, cfg, mode)
+    step_fn = make_train_step(fwd, lambda out, b: lm_loss(out, b["tokens"]),
+                              tcfg)
+    with mesh:
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(shard_tree(params, mesh, "train"),
+                          shard_tree(qstate, mesh, "train"),
+                          type(opt)(step=replicated(mesh),
+                                    mu=shard_tree(opt.mu, mesh, "train"),
+                                    nu=shard_tree(opt.nu, mesh, "train")),
+                          {"tokens": batch_sharding(mesh, args.batch, 2)},
+                          replicated(mesh)),
+            donate_argnums=(0, 2))
+        start = 0
+        if args.ckpt_dir:
+            last = ckpt_lib.latest_step(args.ckpt_dir)
+            if last is not None:
+                start, trees = ckpt_lib.restore(
+                    args.ckpt_dir, last, {"params": params, "qstate": qstate,
+                                          "opt": opt})
+                params, qstate, opt = (trees["params"], trees["qstate"],
+                                       trees["opt"])
+                print(f"resumed from step {start}")
+        t0 = time.time()
+        for step in range(start, args.steps):
+            params, qstate, opt, m = jitted(params, qstate, opt, pipe(step),
+                                            jnp.int32(step))
+            if step % max(args.steps // 10, 1) == 0:
+                print(f"step {step}: loss={float(m['loss']):.4f} "
+                      f"ebops={float(m['ebops']):.3g}")
+            if args.ckpt_dir and step and step % tcfg.ckpt_every == 0:
+                ckpt_lib.save(args.ckpt_dir, step,
+                              {"params": params, "qstate": qstate,
+                               "opt": opt})
+        print(f"done: {args.steps - start} steps in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+from .config import ModelConfig
+from .lm import TransformerLM
+from .rwkv import RWKVLM, RWKVCaches
+from .griffin import GriffinLM, GriffinCaches
+from .whisper import WhisperModel, WhisperCaches
+from .tasks import JetTagger, SVHNNet, MuonTracker
+
+
+def model_for(cfg: ModelConfig):
+    """Dispatch an arch config to its model implementation."""
+    if cfg.family == "ssm":
+        return RWKVLM
+    if cfg.family == "hybrid":
+        return GriffinLM
+    if cfg.family == "audio":
+        return WhisperModel
+    return TransformerLM  # dense | moe | vlm

@@ -1,0 +1,257 @@
+"""Griffin / RecurrentGemma: RG-LRU recurrent blocks + local attention, 1:2.
+
+Pattern: (recurrent, recurrent, attention) repeating; trailing remainder
+layers are recurrent.  The stack scans over *pattern units* (homogeneous),
+with the remainder unrolled — keeps the HLO small while supporting L % 3 != 0
+(recurrentgemma-2b has 26 layers = 8 units + 2 remainder).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import hgq
+from ..core.hgq import Aux, QTensor
+from ..dist.axes import constrain
+from ..nn.attention import AttnConfig, GQAAttention, KVCache
+from ..nn.basic import HDense, HEmbedding, RMSNorm
+from ..nn.mlp import GLUMLP
+from ..nn.recurrent import GriffinState, RecurrentBlock, RGLRUConfig
+from .config import ModelConfig
+
+
+class GriffinCaches(NamedTuple):
+    conv: jax.Array      # [n_rec, B, cw-1, d_rnn]
+    h: jax.Array         # [n_rec, B, d_rnn]
+    k: jax.Array         # [n_att, B, W, KV, hd]
+    v: jax.Array
+
+
+def _rg_cfg(cfg: ModelConfig) -> RGLRUConfig:
+    return RGLRUConfig(d_model=cfg.d_model, d_rnn=cfg.d_model)
+
+
+def _attn_cfg(cfg: ModelConfig) -> AttnConfig:
+    return AttnConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                      n_kv=cfg.n_kv, head_dim=cfg.hd, rope_theta=10000.0,
+                      window=cfg.window, causal=True,
+                      q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk)
+
+
+def _layer_counts(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(#pattern units, #remainder recurrent layers, #attention layers)."""
+    units = cfg.n_layers // 3
+    rem = cfg.n_layers - units * 3
+    return units, rem, units
+
+
+class GriffinLM:
+    @staticmethod
+    def init(key, cfg: ModelConfig):
+        dtype = cfg.np_dtype
+        rg, ac = _rg_cfg(cfg), _attn_cfg(cfg)
+        units, rem, _ = _layer_counts(cfg)
+        ke, ku, kr, kf, kh = jax.random.split(key, 5)
+        p: Dict[str, Any] = {}
+        q: Dict[str, Any] = {}
+        p["embed"], q["embed"] = HEmbedding.init(ke, cfg.vocab, cfg.d_model,
+                                                 cfg.hgq, dtype)
+
+        def block_init(k, kind: str):
+            k1, k2, k3, k4 = jax.random.split(k, 4)
+            lp, lq = {}, {}
+            lp["ln1"], lq["ln1"] = RMSNorm.init(k1, cfg.d_model, cfg.hgq,
+                                                dtype=dtype)
+            if kind == "rec":
+                lp["mix"], lq["mix"] = RecurrentBlock.init(k2, rg, cfg.hgq,
+                                                           dtype)
+            else:
+                lp["mix"], lq["mix"] = GQAAttention.init(k2, ac, cfg.hgq,
+                                                         dtype)
+            lp["ln2"], lq["ln2"] = RMSNorm.init(k3, cfg.d_model, cfg.hgq,
+                                                dtype=dtype)
+            lp["mlp"], lq["mlp"] = GLUMLP.init(k4, cfg.d_model, cfg.d_ff,
+                                               cfg.hgq, act="gelu",
+                                               dtype=dtype)
+            return lp, lq
+
+        def unit_init(k):
+            ka, kb, kc = jax.random.split(k, 3)
+            r1 = block_init(ka, "rec")
+            r2 = block_init(kb, "rec")
+            at = block_init(kc, "att")
+            return {"rec1": r1[0], "rec2": r2[0], "att": at[0]}, \
+                   {"rec1": r1[1], "rec2": r2[1], "att": at[1]}
+
+        p["units"], q["units"] = jax.vmap(unit_init)(
+            jax.random.split(ku, units))
+        p["rem"], q["rem"] = [], []
+        rem_p, rem_q = [], []
+        for i, k in enumerate(jax.random.split(kr, max(rem, 1))[:rem]):
+            bp, bq = block_init(k, "rec")
+            rem_p.append(bp)
+            rem_q.append(bq)
+        p["rem"], q["rem"] = rem_p, rem_q
+        p["final_norm"], q["final_norm"] = RMSNorm.init(kf, cfg.d_model,
+                                                        cfg.hgq, dtype=dtype)
+        p["lm_head"], q["lm_head"] = HDense.init(kh, cfg.d_model, cfg.vocab,
+                                                 cfg.hgq, bias=False,
+                                                 out_q=False, dtype=dtype)
+        return p, q
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _block(lp, lq, x, kind, cfg, mode, aux, positions, rec_state=None,
+               kv_cache=None, cache_pos=None):
+        newq: Dict[str, Any] = {}
+        h, newq["ln1"] = RMSNorm.apply(lp["ln1"], lq["ln1"], x, mode=mode,
+                                       aux=aux)
+        new_state = None
+        new_cache = None
+        if kind == "rec":
+            m, newq["mix"], new_state = RecurrentBlock.apply(
+                lp["mix"], lq["mix"], h, rec_state, cfg=_rg_cfg(cfg),
+                mode=mode, aux=aux)
+        else:
+            m, newq["mix"], new_cache = GQAAttention.apply(
+                lp["mix"], lq["mix"], h, cfg=_attn_cfg(cfg), mode=mode,
+                aux=aux, positions=positions, cache=kv_cache,
+                cache_pos=cache_pos)
+        x = x + m.q
+        h, newq["ln2"] = RMSNorm.apply(lp["ln2"], lq["ln2"], x, mode=mode,
+                                       aux=aux)
+        m, newq["mlp"] = GLUMLP.apply(lp["mlp"], lq["mlp"], h, mode=mode,
+                                      aux=aux, act="gelu")
+        return x + m.q, newq, new_state, new_cache
+
+    @staticmethod
+    def _stack(p, q, x, positions, cfg: ModelConfig, mode,
+               caches: Optional[GriffinCaches], cache_pos):
+        units, rem, _ = _layer_counts(cfg)
+        decode = caches is not None
+
+        def unit_body(carry, xs):
+            h, ebops, l1 = carry
+            carry = (h, ebops, l1)
+            if decode:
+                up, uq, (c1, h1, c2, h2, kc, vc) = xs
+                s1, s2 = GriffinState(c1, h1), GriffinState(c2, h2)
+                kvc = KVCache(kc, vc)
+            else:
+                up, uq = xs
+                s1 = s2 = kvc = None
+            aux = Aux.zero()
+            nq: Dict[str, Any] = {}
+            h, nq["rec1"], ns1, _ = GriffinLM._block(
+                up["rec1"], uq["rec1"], h, "rec", cfg, mode, aux, positions,
+                rec_state=s1)
+            h, nq["rec2"], ns2, _ = GriffinLM._block(
+                up["rec2"], uq["rec2"], h, "rec", cfg, mode, aux, positions,
+                rec_state=s2)
+            h, nq["att"], _, nkv = GriffinLM._block(
+                up["att"], uq["att"], h, "att", cfg, mode, aux, positions,
+                kv_cache=kvc, cache_pos=cache_pos)
+            e, l = aux.as_tuple()
+            if decode:
+                out = (nq, (ns1.conv, ns1.h, ns2.conv, ns2.h, nkv.k, nkv.v))
+            else:
+                out = nq
+            return (h.astype(carry[0].dtype), ebops + e, l1 + l), out
+
+        if cfg.remat:
+            unit_body = jax.checkpoint(
+                unit_body, policy=jax.checkpoint_policies.nothing_saveable)
+        if decode:
+            nrec = 2 * units
+            xs = (p["units"], q["units"],
+                  (caches.conv[:nrec:2], caches.h[:nrec:2],
+                   caches.conv[1:nrec:2], caches.h[1:nrec:2],
+                   caches.k, caches.v))
+        else:
+            xs = (p["units"], q["units"])
+        (x, ebops, l1), out = jax.lax.scan(
+            unit_body, (x, jnp.float32(0.0), jnp.float32(0.0)), xs)
+        aux_tot = Aux(ebops, l1)
+        newq = {"units": out[0] if decode else out}
+        new_caches = None
+        rem_states = []
+        # remainder recurrent layers (unrolled)
+        rem_newq = []
+        for i in range(rem):
+            aux = Aux.zero()
+            st = GriffinState(caches.conv[2 * units + i],
+                              caches.h[2 * units + i]) if decode else None
+            x, nq, ns, _ = GriffinLM._block(p["rem"][i], q["rem"][i], x,
+                                            "rec", cfg, mode, aux, positions,
+                                            rec_state=st)
+            rem_newq.append(nq)
+            rem_states.append(ns)
+            aux_tot.merge(aux)
+        newq["rem"] = rem_newq
+        if decode:
+            c1, h1, c2, h2, kc, vc = out[1]
+            conv_u = jnp.stack([c1, c2], axis=1).reshape(
+                (2 * units,) + c1.shape[1:])
+            h_u = jnp.stack([h1, h2], axis=1).reshape(
+                (2 * units,) + h1.shape[1:])
+            if rem:
+                conv_u = jnp.concatenate(
+                    [conv_u, jnp.stack([s.conv for s in rem_states])], 0)
+                h_u = jnp.concatenate(
+                    [h_u, jnp.stack([s.h for s in rem_states])], 0)
+            new_caches = GriffinCaches(conv=conv_u, h=h_u, k=kc, v=vc)
+        return x, newq, new_caches, aux_tot
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def forward(p, q, batch, cfg: ModelConfig, mode: str = hgq.TRAIN):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        aux = Aux.zero()
+        newq: Dict[str, Any] = {}
+        e, newq["embed"] = HEmbedding.apply(p["embed"], q["embed"], tokens,
+                                            mode=mode, aux=aux)
+        x, nq, _, aux2 = GriffinLM._stack(p, q, constrain(e.q, "b.."),
+                                          jnp.arange(S), cfg, mode,
+                                          None, None)
+        newq.update(nq)
+        aux.merge(aux2)
+        h, newq["final_norm"] = RMSNorm.apply(p["final_norm"],
+                                              q["final_norm"], x, mode=mode,
+                                              aux=aux)
+        lt, newq["lm_head"] = HDense.apply(p["lm_head"], q["lm_head"], h,
+                                           mode=mode, aux=aux)
+        return constrain(lt.q, "b.m"), newq, aux
+
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> GriffinCaches:
+        units, rem, natt = _layer_counts(cfg)
+        nrec = 2 * units + rem
+        W = min(max_len, cfg.window or max_len)
+        rg = _rg_cfg(cfg)
+        return GriffinCaches(
+            conv=jnp.zeros((nrec, batch, rg.conv_width - 1, rg.d_rnn),
+                           jnp.float32),
+            h=jnp.zeros((nrec, batch, rg.d_rnn), jnp.float32),
+            k=jnp.zeros((natt, batch, W, cfg.n_kv, cfg.hd), dtype),
+            v=jnp.zeros((natt, batch, W, cfg.n_kv, cfg.hd), dtype))
+
+    @staticmethod
+    def decode_step(p, q, caches: GriffinCaches, tokens, cache_pos,
+                    cfg: ModelConfig, mode: str = hgq.EVAL):
+        B, S = tokens.shape
+        aux = Aux.zero()
+        newq: Dict[str, Any] = {}
+        e, newq["embed"] = HEmbedding.apply(p["embed"], q["embed"], tokens,
+                                            mode=mode, aux=aux)
+        positions = cache_pos + jnp.arange(S)
+        x, nq, new_caches, _ = GriffinLM._stack(p, q, e.q, positions, cfg,
+                                                mode, caches, cache_pos)
+        h, _ = RMSNorm.apply(p["final_norm"], q["final_norm"], x, mode=mode,
+                             aux=aux)
+        lt, _ = HDense.apply(p["lm_head"], q["lm_head"], h, mode=mode,
+                             aux=aux)
+        return constrain(lt.q, "b.m"), new_caches

@@ -1,0 +1,148 @@
+"""RWKV-6 (Finch) language model — attention-free, O(1)-state decode."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import hgq
+from ..core.hgq import Aux, QTensor
+from ..dist.axes import constrain
+from ..nn.basic import HDense, HEmbedding, LayerNorm
+from ..nn.recurrent import (RWKVChannelMix, RWKVConfig, RWKVState,
+                            RWKVTimeMix)
+from .config import ModelConfig
+
+
+class RWKVCaches(NamedTuple):
+    shift_a: jax.Array   # [L, B, d]
+    shift_f: jax.Array   # [L, B, d]
+    wkv: jax.Array       # [L, B, H, N, N]
+
+
+def _rwkv_cfg(cfg: ModelConfig) -> RWKVConfig:
+    return RWKVConfig(d_model=cfg.d_model,
+                      n_heads=cfg.d_model // 64,
+                      d_ff=cfg.d_ff, time_chunk=cfg.rwkv_chunk)
+
+
+class RWKVLM:
+    @staticmethod
+    def init(key, cfg: ModelConfig):
+        dtype = cfg.np_dtype
+        rc = _rwkv_cfg(cfg)
+        ke, kl, kf, kh = jax.random.split(key, 4)
+        p: Dict[str, Any] = {}
+        q: Dict[str, Any] = {}
+        p["embed"], q["embed"] = HEmbedding.init(ke, cfg.vocab, cfg.d_model,
+                                                 cfg.hgq, dtype)
+
+        def layer_init(k):
+            k1, k2, k3, k4 = jax.random.split(k, 4)
+            lp, lq = {}, {}
+            lp["ln1"], lq["ln1"] = LayerNorm.init(k1, cfg.d_model, cfg.hgq,
+                                                  dtype=dtype)
+            lp["att"], lq["att"] = RWKVTimeMix.init(k2, rc, cfg.hgq, dtype)
+            lp["ln2"], lq["ln2"] = LayerNorm.init(k3, cfg.d_model, cfg.hgq,
+                                                  dtype=dtype)
+            lp["ffn"], lq["ffn"] = RWKVChannelMix.init(k4, rc, cfg.hgq, dtype)
+            return lp, lq
+
+        p["layers"], q["layers"] = jax.vmap(layer_init)(
+            jax.random.split(kl, cfg.n_layers))
+        p["final_norm"], q["final_norm"] = LayerNorm.init(
+            kf, cfg.d_model, cfg.hgq, dtype=dtype)
+        p["lm_head"], q["lm_head"] = HDense.init(kh, cfg.d_model, cfg.vocab,
+                                                 cfg.hgq, bias=False,
+                                                 out_q=False, dtype=dtype)
+        return p, q
+
+    @staticmethod
+    def _stack(p, q, x, cfg: ModelConfig, mode: str,
+               caches: Optional[RWKVCaches]):
+        rc = _rwkv_cfg(cfg)
+
+        def body(carry, xs):
+            h, ebops, l1 = carry
+            carry = (h, ebops, l1)
+            if caches is not None:
+                lp, lq, (sa, sf, wkv) = xs
+                st = RWKVState(sa, sf, wkv)
+            else:
+                lp, lq = xs
+                st = None
+            aux = Aux.zero()
+            newq: Dict[str, Any] = {}
+            n1, newq["ln1"] = LayerNorm.apply(lp["ln1"], lq["ln1"], h,
+                                              mode=mode, aux=aux)
+            a, newq["att"], (sa_n, wkv_n) = RWKVTimeMix.apply(
+                lp["att"], lq["att"], n1,
+                st if st is not None else None, cfg=rc, mode=mode, aux=aux)
+            h = h + a.q
+            n2, newq["ln2"] = LayerNorm.apply(lp["ln2"], lq["ln2"], h,
+                                              mode=mode, aux=aux)
+            f, newq["ffn"], sf_n = RWKVChannelMix.apply(
+                lp["ffn"], lq["ffn"], n2,
+                st.shift_f if st is not None else None, mode=mode, aux=aux)
+            h = (h + f.q).astype(carry[0].dtype)
+            e, l = aux.as_tuple()
+            out = (newq, (sa_n, sf_n, wkv_n)) if caches is not None else newq
+            return (h, ebops + e, l1 + l), out
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        xs = (p["layers"], q["layers"]) if caches is None else \
+            (p["layers"], q["layers"],
+             (caches.shift_a, caches.shift_f, caches.wkv))
+        (x, ebops, l1), out = jax.lax.scan(
+            body, (x, jnp.float32(0.0), jnp.float32(0.0)), xs)
+        if caches is None:
+            return x, out, None, (ebops, l1)
+        newq, (sa, sf, wkv) = out
+        return x, newq, RWKVCaches(sa, sf, wkv), (ebops, l1)
+
+    @staticmethod
+    def forward(p, q, batch, cfg: ModelConfig, mode: str = hgq.TRAIN):
+        tokens = batch["tokens"]
+        aux = Aux.zero()
+        newq: Dict[str, Any] = {}
+        e, newq["embed"] = HEmbedding.apply(p["embed"], q["embed"], tokens,
+                                            mode=mode, aux=aux)
+        x, newq["layers"], _, (eb, l1) = RWKVLM._stack(
+            p, q, constrain(e.q, "b.."), cfg, mode, None)
+        aux.add(ebops=eb, l1=l1)
+        h, newq["final_norm"] = LayerNorm.apply(p["final_norm"],
+                                                q["final_norm"], x, mode=mode,
+                                                aux=aux)
+        lt, newq["lm_head"] = HDense.apply(p["lm_head"], q["lm_head"], h,
+                                           mode=mode, aux=aux)
+        return constrain(lt.q, "b.m"), newq, aux
+
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.float32) -> RWKVCaches:
+        d = cfg.d_model
+        H = d // 64
+        L = cfg.n_layers
+        return RWKVCaches(
+            shift_a=jnp.zeros((L, batch, d), dtype),
+            shift_f=jnp.zeros((L, batch, d), dtype),
+            wkv=jnp.zeros((L, batch, H, 64, 64), jnp.float32))
+
+    @staticmethod
+    def decode_step(p, q, caches: RWKVCaches, tokens, cache_pos,
+                    cfg: ModelConfig, mode: str = hgq.EVAL):
+        aux = Aux.zero()
+        newq: Dict[str, Any] = {}
+        e, newq["embed"] = HEmbedding.apply(p["embed"], q["embed"], tokens,
+                                            mode=mode, aux=aux)
+        x, newq["layers"], new_caches, _ = RWKVLM._stack(p, q, e.q, cfg, mode,
+                                                         caches)
+        h, newq["final_norm"] = LayerNorm.apply(p["final_norm"],
+                                                q["final_norm"], x, mode=mode,
+                                                aux=aux)
+        lt, _ = HDense.apply(p["lm_head"], q["lm_head"], h, mode=mode,
+                             aux=aux)
+        return constrain(lt.q, "b.m"), new_caches

@@ -1,0 +1,171 @@
+"""The paper's three benchmark models (Tables I-III), built from H-layers
+with per-parameter granularity — the exact regime HGQ targets on FPGAs.
+
+* JetTagger   — 16 -> 64 -> 32 -> 32 -> 5 MLP (jet tagging, Table I)
+* SVHNNet     — LeNet-like conv net from [64] (SVHN classifier, Table II)
+* MuonTracker — multistage dense regression from [65] (Table III)
+
+Each model starts with an input quantizer (the paper's ``HQuantize`` layer,
+Listing 2).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import hgq
+from ..core.hgq import Aux, QTensor
+from ..nn.basic import HConv2D, HDense
+from ..nn.common import HGQConfig, act_q_init, apply_act_q
+
+
+def _input_q(cfg: HGQConfig, feature_shape=()):
+    f, st = act_q_init(cfg, feature_shape)
+    return f, st
+
+
+class JetTagger:
+    WIDTHS = (64, 32, 32, 5)
+
+    @staticmethod
+    def init(key, cfg: HGQConfig, d_in: int = 16):
+        ks = jax.random.split(key, len(JetTagger.WIDTHS))
+        p: Dict[str, Any] = {}
+        q: Dict[str, Any] = {}
+        f, st = _input_q(cfg, (d_in,) if cfg.act_gran != "per_tensor" else ())
+        if f is not None:
+            p["inp_f"] = f
+            q["inp"] = st
+        din = d_in
+        for i, (w, k) in enumerate(zip(JetTagger.WIDTHS, ks)):
+            act = "relu" if i < len(JetTagger.WIDTHS) - 1 else None
+            out_q = i < len(JetTagger.WIDTHS) - 1
+            p[f"d{i}"], q[f"d{i}"] = HDense.init(k, din, w, cfg, act=act,
+                                                 out_q=out_q)
+            din = w
+        return p, q
+
+    @staticmethod
+    def forward(p, q, batch, mode: str = hgq.TRAIN):
+        x = batch["x"]
+        aux = Aux.zero()
+        newq: Dict[str, Any] = {}
+        if "inp_f" in p:
+            xq, newq["inp"] = apply_act_q(x, p["inp_f"], q.get("inp"), mode,
+                                          aux)
+        else:
+            xq = QTensor(x, None)
+        h = xq
+        for i in range(len(JetTagger.WIDTHS)):
+            act = "relu" if i < len(JetTagger.WIDTHS) - 1 else ""
+            h, newq[f"d{i}"] = HDense.apply(p[f"d{i}"], q[f"d{i}"], h,
+                                            mode=mode, aux=aux, act=act)
+        return h.q, newq, aux
+
+
+class SVHNNet:
+    """conv16-conv16-conv24 (each + maxpool) -> dense42 -> dense64 -> 10."""
+
+    @staticmethod
+    def init(key, cfg: HGQConfig, img: int = 32, cin: int = 3):
+        ks = jax.random.split(key, 6)
+        p: Dict[str, Any] = {}
+        q: Dict[str, Any] = {}
+        f, st = _input_q(cfg)
+        if f is not None:
+            p["inp_f"] = f
+            q["inp"] = st
+        p["c0"], q["c0"] = HConv2D.init(ks[0], 3, 3, cin, 16, cfg, act="relu")
+        p["c1"], q["c1"] = HConv2D.init(ks[1], 3, 3, 16, 16, cfg, act="relu")
+        p["c2"], q["c2"] = HConv2D.init(ks[2], 3, 3, 16, 24, cfg, act="relu")
+        # 32x32 -> conv(30) pool(15) -> conv(13) pool(6) -> conv(4) pool(2)
+        flat = 2 * 2 * 24
+        p["d0"], q["d0"] = HDense.init(ks[3], flat, 42, cfg, act="relu")
+        p["d1"], q["d1"] = HDense.init(ks[4], 42, 64, cfg, act="relu")
+        p["d2"], q["d2"] = HDense.init(ks[5], 64, 10, cfg, out_q=False)
+        return p, q
+
+    @staticmethod
+    def forward(p, q, batch, mode: str = hgq.TRAIN):
+        x = batch["x"]  # [B, 32, 32, 3]
+        aux = Aux.zero()
+        newq: Dict[str, Any] = {}
+        if "inp_f" in p:
+            xq, newq["inp"] = apply_act_q(x, p["inp_f"], q.get("inp"), mode,
+                                          aux)
+        else:
+            xq = QTensor(x, None)
+        h = xq
+        for name in ("c0", "c1", "c2"):
+            h, newq[name] = HConv2D.apply(p[name], q[name], h, mode=mode,
+                                          aux=aux, act="relu")
+            pooled = jax.lax.reduce_window(
+                h.q, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                "VALID")
+            h = QTensor(pooled, h.bits)
+        B = h.q.shape[0]
+        h = QTensor(h.q.reshape(B, -1),
+                    None if h.bits is None else jnp.max(h.bits))
+        for name in ("d0", "d1", "d2"):
+            h, newq[name] = HDense.apply(p[name], q[name], h, mode=mode,
+                                         aux=aux,
+                                         act="relu" if name != "d2" else "")
+        return h.q, newq, aux
+
+
+class MuonTracker:
+    """Three detector stations (3x50 binary hit maps) -> per-station dense
+    encoders -> concatenated trunk -> angle (mrad) regression."""
+
+    STATION_WIDTH = 32
+    TRUNK = (64, 32)
+
+    @staticmethod
+    def init(key, cfg: HGQConfig):
+        ks = jax.random.split(key, 6)
+        p: Dict[str, Any] = {}
+        q: Dict[str, Any] = {}
+        f, st = _input_q(cfg)
+        if f is not None:
+            p["inp_f"] = f
+            q["inp"] = st
+        for i in range(3):
+            p[f"s{i}"], q[f"s{i}"] = HDense.init(
+                ks[i], 150, MuonTracker.STATION_WIDTH, cfg, act="relu")
+        din = 3 * MuonTracker.STATION_WIDTH
+        for j, w in enumerate(MuonTracker.TRUNK):
+            p[f"t{j}"], q[f"t{j}"] = HDense.init(ks[3 + j], din, w, cfg,
+                                                 act="relu")
+            din = w
+        p["out"], q["out"] = HDense.init(ks[5], din, 1, cfg, out_q=False)
+        return p, q
+
+    @staticmethod
+    def forward(p, q, batch, mode: str = hgq.TRAIN):
+        """batch['stations']: [B, 3, 150] (flattened 3x50 hit maps)."""
+        x = batch["stations"]
+        aux = Aux.zero()
+        newq: Dict[str, Any] = {}
+        if "inp_f" in p:
+            xq, newq["inp"] = apply_act_q(x, p["inp_f"], q.get("inp"), mode,
+                                          aux)
+        else:
+            xq = QTensor(x, None)
+        outs = []
+        for i in range(3):
+            hi, newq[f"s{i}"] = HDense.apply(
+                p[f"s{i}"], q[f"s{i}"],
+                QTensor(xq.q[:, i], xq.bits), mode=mode, aux=aux, act="relu")
+            outs.append(hi)
+        bits = None
+        if outs[0].bits is not None:
+            bits = jnp.max(jnp.stack([jnp.max(o.bits) for o in outs]))
+        h = QTensor(jnp.concatenate([o.q for o in outs], axis=-1), bits)
+        for j in range(len(MuonTracker.TRUNK)):
+            h, newq[f"t{j}"] = HDense.apply(p[f"t{j}"], q[f"t{j}"], h,
+                                            mode=mode, aux=aux, act="relu")
+        h, newq["out"] = HDense.apply(p["out"], q["out"], h, mode=mode,
+                                      aux=aux)
+        return h.q[..., 0], newq, aux

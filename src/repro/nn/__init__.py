@@ -1,0 +1,7 @@
+from .common import HGQConfig, FP_BASELINE
+from .basic import HDense, HConv2D, HEmbedding, RMSNorm, LayerNorm, activation
+from .attention import AttnConfig, GQAAttention, KVCache, rope
+from .mlp import GLUMLP, MLP
+from .moe import MoE, MoEConfig
+from .recurrent import (RWKVConfig, RWKVTimeMix, RWKVChannelMix, RWKVState,
+                        RGLRUConfig, RecurrentBlock, GriffinState)

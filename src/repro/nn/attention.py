@@ -1,0 +1,318 @@
+"""Quantized GQA attention: chunked (flash-style) train/prefill, KV-cache
+decode, optional local window (RecurrentGemma), RoPE.
+
+Memory: full S x S score tensors are never materialized — a two-level
+``lax.scan`` over query/key chunks with online softmax keeps the working set
+O(chunk^2), which is what lets the 32k-prefill cells compile within HBM on
+the production mesh (and is the natural chunking a TPU flash kernel uses).
+
+EBOPs: the dynamic QK^T / PV matmuls use per-tensor activation bits, so
+their ~EBOPs terms are computed *analytically* from the static shapes —
+no extra tensor work inside the scan (DESIGN.md SS2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import hgq
+from ..core.hgq import Aux, QTensor
+from ..core.quantizer import quantize, quantize_inference, sg
+from ..dist.axes import constrain, get_model_size
+from .basic import HDense
+from .common import HGQConfig, act_q_init, apply_act_q
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    window: Optional[int] = None      # local attention window (RG / pixtral)
+    causal: bool = True
+    q_chunk: int = 1024
+    k_chunk: int = 1024
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, S_max, KV, hd]
+    v: jax.Array
+
+
+# int8 KV cache (beyond-paper, HGQ-machinery): k/v stored as round(x * 2^4)
+# — halves cache HBM traffic vs bf16 at decode.  Static scale: post-HGQ
+# activations are range-calibrated, |k|,|v| < 8 by construction.
+KV_INT8_SCALE = 16.0
+
+
+def _cache_store(x: jax.Array, cache_dtype) -> jax.Array:
+    if cache_dtype == jnp.int8:
+        return jnp.clip(jnp.round(x.astype(jnp.float32) * KV_INT8_SCALE),
+                        -127, 127).astype(jnp.int8)
+    return x.astype(cache_dtype)
+
+
+def _cache_load(x: jax.Array) -> jax.Array:
+    if x.dtype == jnp.int8:
+        return x.astype(jnp.float32) * (1.0 / KV_INT8_SCALE)
+    return x
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [B, S] or [S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.log(theta) * (jnp.arange(half, dtype=jnp.float32)
+                                       / half))
+    pos = positions.astype(jnp.float32)
+    ang = pos[..., None] * freqs  # [B?, S, half]
+    while ang.ndim < x.ndim:
+        ang = ang[..., None, :] if ang.ndim == x.ndim - 1 else ang[None]
+    # ang now [B, S, 1, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+class GQAAttention:
+    @staticmethod
+    def init(key, cfg: AttnConfig, qcfg: HGQConfig, dtype=jnp.float32):
+        ks = jax.random.split(key, 4)
+        d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+        p: Dict[str, Any] = {}
+        q: Dict[str, Any] = {}
+        for name, dout, kk in (("wq", H * hd, ks[0]), ("wk", KV * hd, ks[1]),
+                               ("wv", KV * hd, ks[2])):
+            p[name], q[name] = HDense.init(kk, d, dout, qcfg,
+                                           bias=cfg.qkv_bias, dtype=dtype)
+        p["wo"], q["wo"] = HDense.init(ks[3], H * hd, d, qcfg, bias=False,
+                                       out_q=False, dtype=dtype)
+        if qcfg.enabled:
+            p["probs_f"] = jnp.full((), qcfg.init_act_f, jnp.float32)
+            f, st = act_q_init(qcfg)
+            p["attnout_f"] = f
+            q["attnout"] = st
+        return p, q
+
+    @staticmethod
+    def apply(p, q, x: QTensor, *, cfg: AttnConfig, mode: str, aux: Aux,
+              positions: jax.Array, cache: Optional[KVCache] = None,
+              cache_pos: Optional[jax.Array] = None
+              ) -> Tuple[QTensor, Dict[str, Any], Optional[KVCache]]:
+        B, S, _ = x.q.shape
+        H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+        newq: Dict[str, Any] = {}
+        qt, newq["wq"] = HDense.apply(p["wq"], q["wq"], x, mode=mode, aux=aux)
+        kt, newq["wk"] = HDense.apply(p["wk"], q["wk"], x, mode=mode, aux=aux)
+        vt, newq["wv"] = HDense.apply(p["wv"], q["wv"], x, mode=mode, aux=aux)
+        qh = constrain(qt.q.reshape(B, S, H, hd), "b.m.")
+        # under head-TP (H %% TP == 0) k/v get repeated to full heads inside
+        # the chunked path; keep the small KV-head tensors replicated over
+        # `model` here so the repeat is a local broadcast, not an all-to-all
+        # (observed: 344 GB of all-to-all at qwen110 prefill)
+        kv_pat = "b..." if (get_model_size() > 1
+                            and H % get_model_size() == 0) else "b.m."
+        kh = constrain(kt.q.reshape(B, S, KV, hd), kv_pat)
+        vh = constrain(vt.q.reshape(B, S, KV, hd), kv_pat)
+        qh = rope(qh, positions, cfg.rope_theta)
+        kh = rope(kh, positions, cfg.rope_theta)
+
+        probs_f = p.get("probs_f")
+        new_cache = None
+        if cache is not None:
+            # decode: append new k/v, attend over the cache.  Windowed caches
+            # are ring buffers of size W: global position g lives in slot g%W.
+            W = cache.k.shape[1]
+            slot = cache_pos % W if cfg.window is not None else cache_pos
+            k_all = jax.lax.dynamic_update_slice(
+                cache.k, _cache_store(kh, cache.k.dtype), (0, slot, 0, 0))
+            v_all = jax.lax.dynamic_update_slice(
+                cache.v, _cache_store(vh, cache.v.dtype), (0, slot, 0, 0))
+            new_cache = KVCache(k_all, v_all)
+            if cfg.window is not None:
+                # slot s holds global position cache_pos - ((cache_pos - s) % W)
+                spos = jnp.arange(W)
+                tpos = cache_pos - jnp.mod(cache_pos - spos, W)
+            else:
+                tpos = jnp.arange(W)
+            out = _decode_attention(qh, _cache_load(k_all),
+                                    _cache_load(v_all), cache_pos + S, cfg,
+                                    probs_f, mode, tpos=tpos)
+            kv_len = W
+        else:
+            out = _chunked_attention(qh, kh, vh, positions, cfg, probs_f, mode)
+            kv_len = S
+        # analytic ~EBOPs for the dynamic matmuls (per-tensor bits)
+        if qt.bits is not None and probs_f is not None:
+            n_qk = float(B * H * S) * float(kv_len) * hd
+            b_p = jax.nn.relu(1.0 + p["probs_f"])  # p~ in [0, 1] => i' = 1
+            aux.add(ebops=jnp.max(qt.bits) * jnp.max(kt.bits) * n_qk
+                    + b_p * jnp.max(vt.bits) * n_qk)
+            aux.add(l1=jax.nn.relu(p["probs_f"]))
+        o = constrain(out.reshape(B, S, H * hd), "b.m")
+        if p.get("attnout_f") is not None:
+            oq, st = apply_act_q(o, p["attnout_f"], q.get("attnout"), mode, aux)
+            newq["attnout"] = st
+        else:
+            oq = QTensor(o, None)
+        yo, newq["wo"] = HDense.apply(p["wo"], q["wo"], oq, mode=mode, aux=aux)
+        return yo, newq, new_cache
+
+
+def _quant_probs(pt: jax.Array, probs_f, mode: str) -> jax.Array:
+    if probs_f is None:
+        return pt
+    fn = quantize if mode == hgq.TRAIN else quantize_inference
+    return fn(pt, probs_f)
+
+
+def _group_heads(qh, KV):
+    """[B, S, H, hd] -> [B, KV, G, S, hd]."""
+    B, S, H, hd = qh.shape
+    G = H // KV
+    return qh.reshape(B, S, KV, G, hd).transpose(0, 2, 3, 1, 4)
+
+
+def _chunked_attention(qh, kh, vh, positions, cfg: AttnConfig, probs_f,
+                       mode) -> jax.Array:
+    """Online-softmax attention, scanned over query and key chunks.
+
+    TP strategy (EXPERIMENTS.md SSPerf, iteration log):
+    * H %% TP == 0: repeat k/v to full heads (the standard TPU prefill
+      trick — GQA bandwidth savings matter at decode, not prefill) and
+      shard the head axis.  Without the repeat, GSPMD composite-shards
+      (KV, G) and any other constraint forces a full reshard per layer
+      (observed: 343 GB/layer "involuntary full rematerialization").
+    * otherwise (e.g. qwen2: H=14): sequence-parallel — shard the q-chunk
+      axis; q rows are independent so the score/AV matmuls split with no
+      extra collectives (k/v chunks replicated across `model`).
+    """
+    B, S, H, hd = qh.shape
+    msize = get_model_size()
+    head_tp = msize > 1 and H % msize == 0
+    if head_tp:
+        G = H // cfg.n_kv
+        kh = jnp.repeat(kh, G, axis=2)              # [B, S, H, hd]
+        vh = jnp.repeat(vh, G, axis=2)
+        KV, G = H, 1
+    else:
+        KV = cfg.n_kv
+        G = H // KV
+    scale = hd ** -0.5
+    cq = min(cfg.q_chunk, S)
+    ck = min(cfg.k_chunk, S)
+    nq, nk = -(-S // cq), -(-S // ck)
+    pad_q, pad_k = nq * cq - S, nk * ck - S
+    qg = _group_heads(qh, KV)                       # [B, KV, G, S, hd]
+    kg = kh.transpose(0, 2, 1, 3)                   # [B, KV, S, hd]
+    vg = vh.transpose(0, 2, 1, 3)
+    if pad_q:
+        qg = jnp.pad(qg, ((0, 0),) * 3 + ((0, pad_q), (0, 0)))
+    if pad_k:
+        kg = jnp.pad(kg, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vg = jnp.pad(vg, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    q_pat = ".bm..." if head_tp else ".b..m."
+    kv_pat = ".bm.." if head_tp else ".b..."
+    qs = constrain(
+        qg.reshape(B, KV, G, nq, cq, hd).transpose(3, 0, 1, 2, 4, 5), q_pat)
+    ks = constrain(kg.reshape(B, KV, nk, ck, hd).transpose(2, 0, 1, 3, 4),
+                   kv_pat)
+    vs = constrain(vg.reshape(B, KV, nk, ck, hd).transpose(2, 0, 1, 3, 4),
+                   kv_pat)
+    kpos_all = jnp.arange(nk * ck)
+
+    def q_step(_, qi):
+        qi_idx, qc = qi                                  # qc [B,KV,G,cq,hd]
+        qpos = qi_idx * cq + jnp.arange(cq)
+
+        @jax.checkpoint
+        def k_step(carry, ki):
+            m, l, o = carry
+            ki_idx, kc, vc = ki
+            kpos = ki_idx * ck + jnp.arange(ck)
+            s = constrain(
+                jnp.einsum("bkgqh,bkch->bkgqc", qc, kc,
+                           preferred_element_type=jnp.float32), "b..m.") \
+                * scale
+            mask = jnp.ones((cq, ck), bool)
+            if cfg.causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if cfg.window is not None:
+                mask &= (qpos[:, None] - kpos[None, :]) < cfg.window
+            mask &= (kpos < S)[None, :]  # mask key padding
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            pt = jnp.exp(s - m_new[..., None])
+            pt = jnp.where(mask, pt, 0.0)
+            pt = _quant_probs(pt, probs_f, mode)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(pt, axis=-1)
+            o_new = o * corr[..., None] + jnp.einsum(
+                "bkgqc,bkch->bkgqh", pt, vc,
+                preferred_element_type=jnp.float32)
+            # keep the online-softmax carries sharded like q: an unsharded
+            # carry would make XLA all-gather the sharded probs on EVERY
+            # inner step (observed: 44 TB of all-gathers at qwen110 prefill)
+            c_pat = "bm.." if head_tp else "b..m"
+            return (constrain(m_new, c_pat), constrain(l_new, c_pat),
+                    constrain(o_new, c_pat + ".")), None
+
+        c_pat = "bm.." if head_tp else "b..m"
+        m0 = constrain(jnp.full((B, KV, G, cq), NEG_INF, jnp.float32), c_pat)
+        l0 = constrain(jnp.zeros((B, KV, G, cq), jnp.float32), c_pat)
+        o0 = constrain(jnp.zeros((B, KV, G, cq, hd), jnp.float32),
+                       c_pat + ".")
+        (m, l, o), _ = jax.lax.scan(
+            k_step, (m0, l0, o0), (jnp.arange(nk), ks, vs))
+        o = o / jnp.maximum(l, 1e-20)[..., None]
+        # cast BEFORE the chunk->token layout transition: the boundary
+        # reshard otherwise moves fp32
+        return None, constrain(o.astype(qh.dtype), c_pat + ".")
+
+    # remat both scan levels: the backward pass recomputes the score chunks
+    # (flash-attention backward) instead of storing [nq, nk, cq, ck] score
+    # tensors — without this, autodiff materializes full S x S scores.
+    q_step = jax.checkpoint(q_step,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    # outs: [nq, B, KV, G, cq, hd] -> [B, S, H, hd]
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, KV * G, nq * cq, hd)
+    out = out[:, :, :S].transpose(0, 2, 1, 3)
+    return out.astype(qh.dtype)
+
+
+def _decode_attention(qh, k_all, v_all, kv_len, cfg: AttnConfig, probs_f,
+                      mode, tpos=None) -> jax.Array:
+    """Single-step (S small) attention over the full cache."""
+    B, S, H, hd = qh.shape
+    KV = cfg.n_kv
+    G = H // KV
+    scale = hd ** -0.5
+    qg = qh.reshape(B, S, KV, G, hd)
+    s = constrain(jnp.einsum("bskgh,btkh->bkgst", qg, k_all,
+                             preferred_element_type=jnp.float32),
+                  "b...m") * scale
+    if tpos is None:
+        tpos = jnp.arange(k_all.shape[1])
+    qpos = kv_len - S + jnp.arange(S)
+    mask = (tpos[None, :] <= qpos[:, None]) & (tpos[None, :] >= 0)
+    if cfg.window is not None:
+        mask &= (qpos[:, None] - tpos[None, :]) < cfg.window
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    pt = jnp.exp(s - m)
+    pt = jnp.where(mask, pt, 0.0)
+    pt = _quant_probs(pt, probs_f, mode)
+    l = jnp.sum(pt, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgst,btkh->bskgh", pt / jnp.maximum(l, 1e-20), v_all,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, S, H, hd).astype(qh.dtype)

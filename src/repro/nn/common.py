@@ -1,0 +1,95 @@
+"""Shared plumbing for the quantized functional layer library.
+
+Layers are pure functions over nested-dict params.  Every quantizable
+weight is stored as ``{'w': array, 'f': frac-bit array}``; every quantized
+activation has a trainable ``f`` in params and an (vmin, vmax) ActState in
+the separate ``qstate`` tree (same tree structure as params, only at
+activation-quantizer leaves).
+
+Convention:  ``Layer.init(key, ...) -> (params, qstate)`` and
+``Layer.apply(params, qstate, x, *, cfg, mode, aux) -> (y, new_qstate)``.
+With HGQ disabled (cfg.hgq.enabled = False) params carry no ``f`` leaves and
+apply() degenerates to the float baseline — this is how the paper's BF/BP
+baselines are expressed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import hgq
+from ..core.hgq import ActState, Aux, QTensor
+from ..core.quantizer import f_shape_for
+
+
+@dataclasses.dataclass(frozen=True)
+class HGQConfig:
+    """Per-model quantization policy."""
+    enabled: bool = True
+    weight_gran: str = "per_parameter"   # paper tasks; LLMs use per_channel
+    act_gran: str = "per_tensor"
+    init_weight_f: float = 2.0           # paper: jet=2, svhn/muon=6
+    init_act_f: float = 2.0
+    # beta/gamma live in the training loop (Eq. 16), not in the layers
+
+    def off(self) -> "HGQConfig":
+        return dataclasses.replace(self, enabled=False)
+
+
+FP_BASELINE = HGQConfig(enabled=False)
+
+
+def uniform_init(key, shape, scale=None, dtype=jnp.float32):
+    """LeCun-uniform (matches Keras defaults used by the paper's library)."""
+    fan_in = shape[0] if len(shape) > 1 else max(shape[-1], 1)
+    if len(shape) == 4:  # conv kernel [kh, kw, cin, cout]
+        fan_in = shape[0] * shape[1] * shape[2]
+    limit = scale if scale is not None else (3.0 / fan_in) ** 0.5
+    return jax.random.uniform(key, shape, dtype, -limit, limit)
+
+
+def qweight_init(key, shape, cfg: HGQConfig, channel_axis: int = -1,
+                 scale: float = None, dtype=jnp.float32) -> Dict[str, Any]:
+    p = {"w": uniform_init(key, shape, scale, dtype)}
+    if cfg.enabled:
+        p["f"] = jnp.full(f_shape_for(shape, cfg.weight_gran, channel_axis),
+                          cfg.init_weight_f, jnp.float32)
+    return p
+
+
+def act_q_init(cfg: HGQConfig, feature_shape=()) -> Tuple[Optional[jax.Array],
+                                                          Optional[ActState]]:
+    """Returns (f param or None, range state or None) for one activation
+    quantizer."""
+    if not cfg.enabled:
+        return None, None
+    f_sh = f_shape_for(feature_shape, cfg.act_gran) if feature_shape else ()
+    f = jnp.full(f_sh, cfg.init_act_f, jnp.float32)
+    return f, hgq.init_act_state(f_sh)
+
+
+def get_qw(p: Dict[str, Any], mode: str) -> QTensor:
+    """Quantize (or pass through) a stored weight.
+
+    Packed serving path (dist.perf.pack_params_for_serving): the kernel is
+    stored int8 + per-channel scale; dequantize at use — XLA fuses this into
+    the consuming matmul, exactly the structure of kernels/qmatmul.
+    """
+    if "w_int8" in p:
+        from ..dist.perf import unpack_weight
+        w = unpack_weight(p)
+        from ..core.quantizer import train_bits
+        return QTensor(w, None if p.get("f") is None else
+                       jax.nn.relu(jnp.asarray(p["f"], jnp.float32)) + 1.0)
+    qt = hgq.quant_weight(p["w"], p.get("f"), mode)
+    from ..dist.perf import cast_for_matmul
+    return QTensor(cast_for_matmul(qt.q), qt.bits)
+
+
+def apply_act_q(x: jax.Array, f: Optional[jax.Array],
+                state: Optional[ActState], mode: str, aux: Aux
+                ) -> Tuple[QTensor, Optional[ActState]]:
+    return hgq.quant_act(x, f, state, mode, aux)

@@ -1,0 +1,72 @@
+"""Quantized MLP blocks: GLU (llama-style) and plain two-layer."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.hgq import Aux, QTensor
+from ..dist.axes import constrain
+from .basic import HDense, activation
+from .common import HGQConfig
+
+
+class GLUMLP:
+    """gate/up/down with silu (SwiGLU) — llama/qwen/deepseek/pixtral/moe-expert."""
+
+    @staticmethod
+    def init(key, d: int, d_ff: int, qcfg: HGQConfig, *, act: str = "silu",
+             dtype=jnp.float32):
+        del act
+        k1, k2, k3 = jax.random.split(key, 3)
+        p: Dict[str, Any] = {}
+        q: Dict[str, Any] = {}
+        p["gate"], q["gate"] = HDense.init(k1, d, d_ff, qcfg, bias=False,
+                                           dtype=dtype)
+        p["up"], q["up"] = HDense.init(k2, d, d_ff, qcfg, bias=False,
+                                       dtype=dtype)
+        p["down"], q["down"] = HDense.init(k3, d_ff, d, qcfg, bias=False,
+                                           out_q=False, dtype=dtype)
+        return p, q
+
+    @staticmethod
+    def apply(p, q, x: QTensor, *, mode: str, aux: Aux, act: str = "silu"
+              ) -> Tuple[QTensor, Dict[str, Any]]:
+        newq: Dict[str, Any] = {}
+        g, newq["gate"] = HDense.apply(p["gate"], q["gate"], x, mode=mode,
+                                       aux=aux, act=act)
+        u, newq["up"] = HDense.apply(p["up"], q["up"], x, mode=mode, aux=aux)
+        # product of two quantized values: bits add (fixed-point multiply)
+        h = constrain(g.q * u.q, "b.m")
+        bits = None
+        if g.bits is not None and u.bits is not None:
+            bits = g.bits + u.bits
+        y, newq["down"] = HDense.apply(p["down"], q["down"], QTensor(h, bits),
+                                       mode=mode, aux=aux)
+        return y, newq
+
+
+class MLP:
+    """Plain act(x W1 + b) W2 + b (whisper / paper-task models)."""
+
+    @staticmethod
+    def init(key, d: int, d_ff: int, qcfg: HGQConfig, *, act: str = "gelu",
+             bias: bool = True, dtype=jnp.float32):
+        k1, k2 = jax.random.split(key)
+        p: Dict[str, Any] = {}
+        q: Dict[str, Any] = {}
+        del act
+        p["fc1"], q["fc1"] = HDense.init(k1, d, d_ff, qcfg, bias=bias,
+                                         dtype=dtype)
+        p["fc2"], q["fc2"] = HDense.init(k2, d_ff, d, qcfg, bias=bias,
+                                         out_q=False, dtype=dtype)
+        return p, q
+
+    @staticmethod
+    def apply(p, q, x: QTensor, *, mode: str, aux: Aux, act: str = "gelu"):
+        newq: Dict[str, Any] = {}
+        h, newq["fc1"] = HDense.apply(p["fc1"], q["fc1"], x, mode=mode,
+                                      aux=aux, act=act)
+        y, newq["fc2"] = HDense.apply(p["fc2"], q["fc2"], h, mode=mode, aux=aux)
+        return y, newq

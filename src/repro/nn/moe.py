@@ -1,0 +1,151 @@
+"""Quantized Mixture-of-Experts block (top-k routing, GLU experts).
+
+Dispatch is *per batch row* (vmap over B): each row sorts its own S*k
+(token, expert) pairs and packs them into a fixed [E, C, d] buffer.  Because
+rows are sharded over the ``data`` mesh axis, the sort/scatter never crosses
+shards — no all-to-all is induced at 512 chips (DESIGN.md SS5); expert weights
+are replicated/TP-sharded on ``model`` (EP=1 — assigned MoEs have tiny
+per-expert d_ff but many experts, so expert-parallel dispatch would be
+collective-dominant instead).
+
+~EBOPs counts *active* compute only (top_k/E of each expert's multipliers),
+matching the paper's "count only ops executed in parallel" rule and the
+6*N_active*D MoE FLOPs convention.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import ebops as ebops_lib
+from ..core import hgq
+from ..core.hgq import Aux, QTensor
+from ..dist.axes import constrain
+from .basic import HDense, activation
+from .common import (HGQConfig, act_q_init, apply_act_q, get_qw,
+                     uniform_init)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int            # per-expert hidden
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    act: str = "silu"
+
+
+def _expert_weight(key, e: int, din: int, dout: int, cfg: HGQConfig,
+                   dtype=jnp.float32) -> Dict[str, Any]:
+    w = uniform_init(key, (e, din, dout), dtype=dtype)
+    p = {"w": w}
+    if cfg.enabled:
+        if cfg.weight_gran == "per_parameter":
+            f_sh = (e, din, dout)
+        elif cfg.weight_gran == "per_channel":
+            f_sh = (e, 1, dout)            # per-expert, per-out-channel
+        else:
+            f_sh = (e, 1, 1)               # per-expert tensor
+        p["f"] = jnp.full(f_sh, cfg.init_weight_f, jnp.float32)
+    return p
+
+
+class MoE:
+    @staticmethod
+    def init(key, cfg: MoEConfig, qcfg: HGQConfig, dtype=jnp.float32):
+        kr, kg, ku, kd = jax.random.split(key, 4)
+        d, dff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+        p: Dict[str, Any] = {}
+        q: Dict[str, Any] = {}
+        p["router"], q["router"] = HDense.init(kr, d, E, qcfg, bias=False,
+                                               out_q=False, dtype=dtype)
+        p["gate"] = _expert_weight(kg, E, d, dff, qcfg, dtype)
+        p["up"] = _expert_weight(ku, E, d, dff, qcfg, dtype)
+        p["down"] = _expert_weight(kd, E, dff, d, qcfg, dtype)
+        if qcfg.enabled:
+            f, st = act_q_init(qcfg)
+            p["h_f"] = f
+            q["h"] = st
+        return p, q
+
+    @staticmethod
+    def apply(p, q, x: QTensor, *, cfg: MoEConfig, mode: str, aux: Aux
+              ) -> Tuple[QTensor, Dict[str, Any]]:
+        B, S, d = x.q.shape
+        E, k, dff = cfg.n_experts, cfg.top_k, cfg.d_ff
+        newq: Dict[str, Any] = {}
+        logits, newq["router"] = HDense.apply(p["router"], q["router"], x,
+                                              mode=mode, aux=aux)
+        probs = jax.nn.softmax(logits.q.astype(jnp.float32), axis=-1)
+        gates, eidx = jax.lax.top_k(probs, k)            # [B, S, k]
+        gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+        wg = get_qw(p["gate"], mode)
+        wu = get_qw(p["up"], mode)
+        wd = get_qw(p["down"], mode)
+
+        C = max(1, math.ceil(S * k / E * cfg.capacity_factor))
+
+        def row_dispatch(xr, er, gr):
+            """xr [S, d]; er/gr [S, k] -> MoE output [S, d] for one row."""
+            Tk = S * k
+            e_flat = er.reshape(Tk)
+            tok_flat = jnp.repeat(jnp.arange(S), k)
+            g_flat = gr.reshape(Tk)
+            order = jnp.argsort(e_flat, stable=True)
+            se, st_, sg_ = e_flat[order], tok_flat[order], g_flat[order]
+            counts = jnp.bincount(e_flat, length=E)
+            starts = jnp.cumsum(counts) - counts
+            pos = jnp.arange(Tk) - starts[se]
+            valid = pos < C
+            slot = jnp.where(valid, se * C + pos, E * C)   # E*C = dump slot
+            buf = jnp.zeros((E * C + 1, d), xr.dtype).at[slot].set(xr[st_])
+            xe = buf[:E * C].reshape(E, C, d)
+            g_h = jnp.einsum("ecd,edf->ecf", xe, wg.q,
+                             preferred_element_type=jnp.float32)
+            u_h = jnp.einsum("ecd,edf->ecf", xe, wu.q,
+                             preferred_element_type=jnp.float32)
+            h = activation(cfg.act, g_h) * u_h
+            return h.astype(xr.dtype), (slot, st_, sg_)
+
+        def row_combine(h, wdq, meta):
+            slot, st_, sg_ = meta
+            y_e = jnp.einsum("ecf,efd->ecd", h, wdq,
+                             preferred_element_type=jnp.float32)
+            y_flat = jnp.concatenate(
+                [y_e.reshape(E * C, d), jnp.zeros((1, d), y_e.dtype)], axis=0)
+            contrib = y_flat[slot] * sg_[:, None]
+            return jnp.zeros((S, d), jnp.float32).at[st_].add(contrib)
+
+        h_all, meta = jax.vmap(row_dispatch)(x.q, eidx, gates)
+        h_all = constrain(h_all, "b..m")
+        # quantize the expert hidden activation (per-tensor) before down-proj
+        if p.get("h_f") is not None:
+            hq, newq["h"] = apply_act_q(h_all, p["h_f"], q.get("h"), mode, aux)
+            h_all = hq.q
+            h_bits = hq.bits
+        else:
+            h_bits = None
+        y = jax.vmap(row_combine, in_axes=(0, None, 0))(h_all, wd.q, meta)
+        y = constrain(y.astype(x.q.dtype), "b..")
+
+        # ---- active-compute ~EBOPs (analytic, scaled by k/E) ----
+        if x.bits is not None and wg.bits is not None:
+            frac = float(k) / float(E)
+
+            def _wsum(bits, full_shape):
+                mult = math.prod(full_shape) / math.prod(bits.shape)
+                return jnp.sum(bits) * mult
+
+            e_in = jnp.max(x.bits) * (_wsum(wg.bits, (E, d, dff))
+                                      + _wsum(wu.bits, (E, d, dff)))
+            aux.add(ebops=frac * e_in)
+            if h_bits is not None and wd.bits is not None:
+                aux.add(ebops=frac * jnp.max(h_bits)
+                        * _wsum(wd.bits, (E, dff, d)))
+        return QTensor(y, None), newq

@@ -1,0 +1,330 @@
+"""Attention-free sequence mixers: RWKV-6 (Finch) and RG-LRU (Griffin /
+RecurrentGemma).
+
+TPU adaptation notes (DESIGN.md SS2):
+* RG-LRU is a *linear* recurrence h_t = a_t h_{t-1} + b_t — implemented with
+  ``jax.lax.associative_scan`` (log-depth, MXU-friendly), not a sequential
+  loop.  Decode carries (conv buffer, h) state — O(1) per token, which is
+  why these archs run the 500k-token cell.
+* RWKV-6's WKV recurrence has data-dependent per-channel decay; it is
+  evaluated in fixed-size time chunks: within a chunk the quadratic
+  (intra-chunk) part is a batched matmul, across chunks the state is carried
+  by a short scan — the standard chunked-parallel linear-attention form.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import hgq
+from ..core.hgq import Aux, QTensor
+from ..dist.axes import constrain
+from .basic import HDense
+from .common import HGQConfig, act_q_init, apply_act_q, qweight_init, get_qw
+
+
+# ===========================================================================
+# RWKV-6 time mix + channel mix
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    d_model: int
+    n_heads: int          # head dim = d_model // n_heads
+    d_ff: int
+    decay_lora: int = 64
+    time_chunk: int = 64
+    wkv_impl: str = "chunked"  # 'chunked' (fast) | 'sequential' (exact oracle)
+
+
+class RWKVState(NamedTuple):
+    shift_a: jax.Array    # [B, d]  last token (time-mix shift)
+    shift_f: jax.Array    # [B, d]  last token (channel-mix shift)
+    wkv: jax.Array        # [B, H, N, N] recurrent state
+
+
+class RWKVTimeMix:
+    @staticmethod
+    def init(key, cfg: RWKVConfig, qcfg: HGQConfig, dtype=jnp.float32):
+        d = cfg.d_model
+        H = cfg.n_heads
+        N = d // H
+        ks = jax.random.split(key, 8)
+        p: Dict[str, Any] = {"mu": jnp.full((5, d), 0.5, dtype)}  # r,k,v,g,w
+        q: Dict[str, Any] = {}
+        for i, name in enumerate(("wr", "wk", "wv", "wg")):
+            p[name], q[name] = HDense.init(ks[i], d, d, qcfg, bias=False,
+                                           dtype=dtype)
+        p["wo"], q["wo"] = HDense.init(ks[4], d, d, qcfg, bias=False,
+                                       out_q=False, dtype=dtype)
+        # data-dependent decay: w_t = exp(-exp(w0 + (x_w @ A) @ B))
+        p["decay_w0"] = jnp.full((d,), -4.0, dtype)
+        p["decay_a"] = qweight_init(ks[5], (d, cfg.decay_lora), qcfg,
+                                    dtype=dtype)
+        p["decay_b"] = qweight_init(ks[6], (cfg.decay_lora, d), qcfg,
+                                    dtype=dtype)
+        p["bonus_u"] = jnp.zeros((H, N), dtype)
+        p["ln_scale"] = jnp.ones((d,), dtype)
+        return p, q
+
+    @staticmethod
+    def apply(p, q, x: QTensor, state: Optional[RWKVState], *,
+              cfg: RWKVConfig, mode: str, aux: Aux):
+        B, S, d = x.q.shape
+        H = cfg.n_heads
+        N = d // H
+        newq: Dict[str, Any] = {}
+        prev = jnp.concatenate(
+            [state.shift_a[:, None] if state is not None
+             else jnp.zeros((B, 1, d), x.q.dtype), x.q[:, :-1]], axis=1)
+        mu = p["mu"]
+        xz = [x.q + (prev - x.q) * mu[i] for i in range(5)]  # r,k,v,g,w
+
+        def proj(name, xi, act=None):
+            t, newq[name] = HDense.apply(p[name], q[name],
+                                         QTensor(xi, x.bits), mode=mode,
+                                         aux=aux)
+            return t.q if act is None else act(t.q)
+
+        r = constrain(proj("wr", xz[0]).reshape(B, S, H, N), "b.m.")
+        k = constrain(proj("wk", xz[1]).reshape(B, S, H, N), "b.m.")
+        v = constrain(proj("wv", xz[2]).reshape(B, S, H, N), "b.m.")
+        g = proj("wg", xz[3], jax.nn.silu)
+        lw = jnp.tanh(xz[4] @ get_qw(p["decay_a"], mode).q)
+        hgq.matmul_ebops(aux, x.bits, get_qw(p["decay_a"], mode).bits,
+                         d, cfg.decay_lora)
+        lw = lw @ get_qw(p["decay_b"], mode).q
+        hgq.matmul_ebops(aux, None if x.bits is None else jnp.float32(8.0),
+                         get_qw(p["decay_b"], mode).bits, cfg.decay_lora, d)
+        w = jnp.exp(-jnp.exp(p["decay_w0"] + lw))  # (0,1) decay, [B,S,d]
+        w = w.reshape(B, S, H, N)
+        u = p["bonus_u"]
+
+        wkv0 = state.wkv if state is not None \
+            else jnp.zeros((B, H, N, N), jnp.float32)
+        if cfg.wkv_impl == "sequential":
+            y, wkv_out = _wkv_sequential(r, k, v, w, u, wkv0)
+        else:
+            y, wkv_out = _wkv_chunked(r, k, v, w, u, wkv0, cfg.time_chunk)
+        y = y.reshape(B, S, d)
+        # per-head group norm
+        yh = y.reshape(B, S, H, N).astype(jnp.float32)
+        yh = yh * jax.lax.rsqrt(jnp.mean(yh * yh, -1, keepdims=True) + 1e-6)
+        y = (yh.reshape(B, S, d) * p["ln_scale"]).astype(x.q.dtype) * g
+        out, newq["wo"] = HDense.apply(p["wo"], q["wo"], QTensor(y, x.bits),
+                                       mode=mode, aux=aux)
+        new_state = (x.q[:, -1], wkv_out)
+        return out, newq, new_state
+
+
+def _wkv_chunked(r, k, v, w, u, wkv0, chunk: int):
+    """Chunked WKV:  S_t = diag(w_t) S_{t-1} + k_t v_t^T ;
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T).
+
+    r/k/v/w: [B, S, H, N]; u: [H, N]; wkv0: [B, H, N, N] (k-dim x v-dim).
+    Returns y [B, S, H, N], final state.
+    """
+    B, S, H, N = r.shape
+    c = min(chunk, S)
+    nc = -(-S // c)
+    pad = nc * c - S
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    # [nc, B, H, c, N]
+    resh = lambda t: t.reshape(B, nc, c, H, N).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)
+    logw = jnp.log(jnp.maximum(wc, 1e-38))
+    cum = jnp.cumsum(logw, axis=3)                    # inclusive within chunk
+    tot = cum[:, :, :, -1:, :]                        # chunk total decay
+
+    def step(S_in, xs):
+        rc_, kc_, vc_, cum_, tot_ = xs
+        # state contribution at position t decays by exp(cum_{t-1}) (exclusive)
+        excl = jnp.concatenate(
+            [jnp.zeros_like(cum_[:, :, :1]), cum_[:, :, :-1]], axis=2)
+        pre = jnp.exp(excl)
+        # y_state_t = (r_t * pre_t) @ S_in
+        y_state = jnp.einsum("bhtn,bhnm->bhtm", rc_ * pre, S_in)
+        # intra-chunk: A[t,s] = sum_n r_t[n] k_s[n] exp(cum_{t-1,n} - cum_{s,n})
+        # for s < t, computed as (r_t exp(cum_{t-1})) . (k_s exp(-cum_s)).
+        # exp(-cum_s) is clipped for stability: only matters for channels that
+        # decayed below e^-60 inside one chunk, whose contribution is ~0.
+        kd = kc_ * jnp.exp(jnp.minimum(-cum_, 60.0))
+        A = jnp.einsum("bhtn,bhsn->bhts", rc_ * pre, kd)
+        tri = jnp.tril(jnp.ones((A.shape[-2], A.shape[-1])), -1)
+        A = A * tri
+        # bonus (current token) term: r_t . (u * k_t) v_t
+        bonus = jnp.einsum("bhtn,bhtn->bht", rc_, u[None, :, None] * kc_)
+        y = y_state + jnp.einsum("bhts,bhsm->bhtm", A, vc_) \
+            + bonus[..., None] * vc_
+        # state update: S_out = diag(exp(tot)) S_in + sum_s exp(tot - cum_s) k_s v_s
+        S_out = jnp.exp(tot_)[:, :, 0, :, None] * S_in + jnp.einsum(
+            "bhsn,bhsm->bhnm", kc_ * jnp.exp(tot_ - cum_), vc_)
+        return S_out, y
+
+    S_fin, ys = jax.lax.scan(step, wkv0.astype(jnp.float32),
+                             (rc, kc, vc, cum, tot))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, nc * c, H, N)[:, :S]
+    return y.astype(r.dtype), S_fin
+
+
+def _wkv_sequential(r, k, v, w, u, wkv0):
+    """Exact sequential WKV (oracle / harsh-decay fallback).
+
+    Same contract as :func:`_wkv_chunked`.
+    """
+    B, S, H, N = r.shape
+
+    def step(S_in, xs):
+        rt, kt, vt, wt = xs                           # [B, H, N]
+        kv = kt[..., :, None] * vt[..., None, :]      # [B, H, N, N]
+        y = jnp.einsum("bhn,bhnm->bhm", rt, S_in + u[None, :, :, None] * kv)
+        S_out = wt[..., :, None] * S_in + kv
+        return S_out, y
+
+    seq = lambda t: t.transpose(1, 0, 2, 3)           # [S, B, H, N]
+    S_fin, ys = jax.lax.scan(
+        step, wkv0.astype(jnp.float32),
+        (seq(r.astype(jnp.float32)), seq(k.astype(jnp.float32)),
+         seq(v.astype(jnp.float32)), seq(w.astype(jnp.float32))))
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), S_fin
+
+
+class RWKVChannelMix:
+    @staticmethod
+    def init(key, cfg: RWKVConfig, qcfg: HGQConfig, dtype=jnp.float32):
+        k1, k2, k3 = jax.random.split(key, 3)
+        d = cfg.d_model
+        p: Dict[str, Any] = {"mu": jnp.full((2, d), 0.5, dtype)}
+        q: Dict[str, Any] = {}
+        p["wk"], q["wk"] = HDense.init(k1, d, cfg.d_ff, qcfg, bias=False,
+                                       act="relu", dtype=dtype)
+        p["wv"], q["wv"] = HDense.init(k2, cfg.d_ff, d, qcfg, bias=False,
+                                       out_q=False, dtype=dtype)
+        p["wr"], q["wr"] = HDense.init(k3, d, d, qcfg, bias=False,
+                                       act="sigmoid", dtype=dtype)
+        return p, q
+
+    @staticmethod
+    def apply(p, q, x: QTensor, shift: Optional[jax.Array], *, mode: str,
+              aux: Aux):
+        B, S, d = x.q.shape
+        newq: Dict[str, Any] = {}
+        prev = jnp.concatenate(
+            [shift[:, None] if shift is not None
+             else jnp.zeros((B, 1, d), x.q.dtype), x.q[:, :-1]], axis=1)
+        xk = x.q + (prev - x.q) * p["mu"][0]
+        xr = x.q + (prev - x.q) * p["mu"][1]
+        kq, newq["wk"] = HDense.apply(p["wk"], q["wk"], QTensor(xk, x.bits),
+                                      mode=mode, aux=aux, act="relu")
+        k2 = QTensor(kq.q * kq.q,
+                     None if kq.bits is None else 2.0 * kq.bits)
+        vq, newq["wv"] = HDense.apply(p["wv"], q["wv"], k2, mode=mode, aux=aux)
+        rq, newq["wr"] = HDense.apply(p["wr"], q["wr"], QTensor(xr, x.bits),
+                                      mode=mode, aux=aux, act="sigmoid")
+        return QTensor(rq.q * vq.q, None), newq, x.q[:, -1]
+
+
+# ===========================================================================
+# RG-LRU (Griffin / RecurrentGemma) recurrent block
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int
+    conv_width: int = 4
+    c_const: float = 8.0
+
+
+class GriffinState(NamedTuple):
+    conv: jax.Array   # [B, conv_width-1, d_rnn]
+    h: jax.Array      # [B, d_rnn]
+
+
+class RecurrentBlock:
+    """Griffin recurrent block: (gelu branch) * (conv -> RG-LRU branch)."""
+
+    @staticmethod
+    def init(key, cfg: RGLRUConfig, qcfg: HGQConfig, dtype=jnp.float32):
+        ks = jax.random.split(key, 6)
+        d, dr = cfg.d_model, cfg.d_rnn
+        p: Dict[str, Any] = {}
+        q: Dict[str, Any] = {}
+        p["in_gelu"], q["in_gelu"] = HDense.init(ks[0], d, dr, qcfg,
+                                                 bias=False, act="gelu",
+                                                 dtype=dtype)
+        p["in_rnn"], q["in_rnn"] = HDense.init(ks[1], d, dr, qcfg, bias=False,
+                                               dtype=dtype)
+        p["conv_w"] = qweight_init(ks[2], (cfg.conv_width, dr), qcfg,
+                                   dtype=dtype)
+        p["gate_a"], q["gate_a"] = HDense.init(ks[3], dr, dr, qcfg,
+                                               bias=True, dtype=dtype)
+        p["gate_x"], q["gate_x"] = HDense.init(ks[4], dr, dr, qcfg,
+                                               bias=True, dtype=dtype)
+        p["lambda"] = jnp.full((dr,), 2.2, dtype)  # sigmoid ~ 0.9
+        p["out"], q["out"] = HDense.init(ks[5], dr, d, qcfg, bias=False,
+                                         out_q=False, dtype=dtype)
+        return p, q
+
+    @staticmethod
+    def apply(p, q, x: QTensor, state: Optional[GriffinState], *,
+              cfg: RGLRUConfig, mode: str, aux: Aux):
+        B, S, d = x.q.shape
+        dr = cfg.d_rnn
+        cw = cfg.conv_width
+        newq: Dict[str, Any] = {}
+        gelu_b, newq["in_gelu"] = HDense.apply(p["in_gelu"], q["in_gelu"], x,
+                                               mode=mode, aux=aux, act="gelu")
+        rnn_b, newq["in_rnn"] = HDense.apply(p["in_rnn"], q["in_rnn"], x,
+                                             mode=mode, aux=aux)
+        # causal depthwise conv1d (width cw)
+        prev = state.conv if state is not None \
+            else jnp.zeros((B, cw - 1, dr), rnn_b.q.dtype)
+        xc = jnp.concatenate([prev, rnn_b.q], axis=1)
+        wq = get_qw(p["conv_w"], mode)
+        u = constrain(sum(xc[:, i:i + S] * wq.q[i] for i in range(cw)),
+                      "b.m")
+        if rnn_b.bits is not None and wq.bits is not None:
+            aux.add(ebops=jnp.max(rnn_b.bits) * jnp.sum(
+                jnp.broadcast_to(wq.bits, (cw, dr))))
+        uq = QTensor(u, rnn_b.bits)
+        # RG-LRU gates
+        ra, newq["gate_a"] = HDense.apply(p["gate_a"], q["gate_a"], uq,
+                                          mode=mode, aux=aux)
+        rx, newq["gate_x"] = HDense.apply(p["gate_x"], q["gate_x"], uq,
+                                          mode=mode, aux=aux)
+        r_a = jax.nn.sigmoid(ra.q.astype(jnp.float32))
+        i_x = jax.nn.sigmoid(rx.q.astype(jnp.float32))
+        log_a0 = -cfg.c_const * jax.nn.softplus(p["lambda"]).astype(jnp.float32)
+        log_a = log_a0 * r_a                              # [B, S, dr], <= 0
+        a = jnp.exp(log_a)
+        gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+            * i_x * u.astype(jnp.float32)
+        h0 = state.h if state is not None else jnp.zeros((B, dr), jnp.float32)
+        h = constrain(_linear_scan(a, gated, h0), "b.m")  # associative scan
+        y = (gelu_b.q.astype(jnp.float32) * h).astype(x.q.dtype)
+        out, newq["out"] = HDense.apply(p["out"], q["out"],
+                                        QTensor(y, gelu_b.bits), mode=mode,
+                                        aux=aux)
+        new_state = GriffinState(conv=xc[:, -(cw - 1):], h=h[:, -1])
+        return out, newq, new_state
+
+
+def _linear_scan(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t via associative_scan along axis 1."""
+    b = b.at[:, 0].add(a[:, 0] * h0) if h0 is not None else b
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h

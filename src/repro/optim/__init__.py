@@ -1,0 +1,2 @@
+from .optimizers import (AdamWState, adamw_init, adamw_update, clip_by_global_norm,
+                         sgd_update, lion_init, lion_update, LionState)

@@ -1,0 +1,102 @@
+"""Pure-JAX optimizers (no optax in this environment).
+
+AdamW is the default for both network weights and HGQ bitwidths; the paper's
+released library trains both jointly with one optimizer, and the surrogate
+bitwidth gradients (Alg. 1) are already scaled to be commensurate with the
+weight gradients.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.zeros_like, params))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr,
+                 b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                 weight_decay: float = 0.0) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        dp = mh / (jnp.sqrt(vh) + eps)
+        if weight_decay:
+            dp = dp + weight_decay * p.astype(jnp.float32)
+        return (p - lr * dp.astype(p.dtype)).astype(p.dtype), m, v
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    flat_p = tdef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v,
+                                                 flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v)
+
+
+class LionState(NamedTuple):
+    step: jax.Array
+    mu: Any
+
+
+def lion_init(params) -> LionState:
+    return LionState(step=jnp.zeros((), jnp.int32),
+                     mu=jax.tree.map(jnp.zeros_like, params))
+
+
+def lion_update(grads, state: LionState, params, *, lr, b1: float = 0.9,
+                b2: float = 0.99, weight_decay: float = 0.0):
+    """Lion: sign-momentum optimizer — 1/2 the optimizer memory of AdamW, a
+    distributed-training win at 100B+ scale (state bytes halve the
+    checkpoint + the FSDP all-gather volume)."""
+    step = state.step + 1
+
+    def upd(g, m, p):
+        g = g.astype(jnp.float32)
+        u = jnp.sign(b1 * m + (1 - b1) * g)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        m_new = b2 * m + (1 - b2) * g
+        return (p - lr * u.astype(p.dtype)).astype(p.dtype), m_new
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_p = tdef.flatten_up_to(params)
+    out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+    return tdef.unflatten([o[0] for o in out]), \
+        LionState(step=step, mu=tdef.unflatten([o[1] for o in out]))
+
+
+def sgd_update(grads, params, *, lr):
+    return jax.tree.map(lambda p, g: (p - lr * g).astype(p.dtype), params,
+                        grads)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn

@@ -1,0 +1,121 @@
+"""Batched serving engine: prefill + KV-cache greedy/temperature decode.
+
+The decode step is a single jitted function (the same one the dry-run lowers
+for the ``decode_*`` / ``long_*`` cells); the engine adds continuous
+batching at the host level: requests join at slot granularity, finished
+slots are recycled.  Weights can be served from the HGQ-packed int
+representation via ``repro.kernels.qmatmul`` (see serving/packed.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import hgq
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, model, params, qstate, cfg: ModelConfig, *,
+                 batch_slots: int = 8, max_len: int = 512,
+                 eos_id: Optional[int] = None):
+        self.model = model
+        self.p = params
+        self.q = qstate
+        self.cfg = cfg
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.eos = eos_id
+        self.caches = model.init_cache(cfg, batch_slots, max_len)
+        self._decode = jax.jit(
+            lambda p, q, c, t, pos: model.decode_step(p, q, c, t, pos, cfg))
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.slot_pos = [0] * batch_slots
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                return i
+        return None
+
+    def submit(self, req: Request) -> bool:
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = 0
+        # prefill token-by-token through the decode path (slot-local; a
+        # production deployment uses the chunked-prefill forward instead)
+        return True
+
+    def step(self) -> None:
+        """One engine tick: advance every active slot by one token."""
+        tokens = []
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                tokens.append(0)
+            elif self.slot_pos[i] < len(r.prompt):
+                tokens.append(r.prompt[self.slot_pos[i]])
+            else:
+                tokens.append(r.out[-1] if r.out else r.prompt[-1])
+        tok = jnp.asarray(tokens, jnp.int32)[:, None]
+        # all slots share cache_pos per slot — engine uses the max; slots are
+        # aligned because recycling resets to 0 only when all drain (simple
+        # variant; production uses per-slot position tensors)
+        pos = jnp.int32(max(self.slot_pos))
+        logits, self.caches = self._decode(self.p, self.q, self.caches, tok,
+                                           pos)
+        nxt = jnp.argmax(logits[:, -1], axis=-1)
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            self.slot_pos[i] += 1
+            if self.slot_pos[i] >= len(r.prompt):
+                t = int(nxt[i])
+                r.out.append(t)
+                if (self.eos is not None and t == self.eos) or \
+                        len(r.out) >= r.max_new:
+                    r.done = True
+                    self.slot_req[i] = None
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        pending = list(requests)
+        active = True
+        while pending or any(r is not None for r in self.slot_req):
+            while pending and self._free_slot() is not None:
+                self.submit(pending.pop(0))
+            self.step()
+        return requests
+
+
+def generate(model, params, qstate, cfg: ModelConfig, prompt: jax.Array,
+             max_new: int) -> jax.Array:
+    """Single-batch greedy generation (examples / tests)."""
+    B, S = prompt.shape
+    caches = model.init_cache(cfg, B, S + max_new)
+    decode = jax.jit(lambda p, q, c, t, pos:
+                     model.decode_step(p, q, c, t, pos, cfg))
+    toks = prompt
+    pos = 0
+    # prefill through decode path, chunk of the whole prompt at once
+    logits, caches = decode(params, qstate, caches, prompt, jnp.int32(0))
+    pos = S
+    last = jnp.argmax(logits[:, -1:], axis=-1)
+    outs = [last]
+    for _ in range(max_new - 1):
+        logits, caches = decode(params, qstate, caches, last, jnp.int32(pos))
+        last = jnp.argmax(logits[:, -1:], axis=-1)
+        outs.append(last)
+        pos += 1
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,3 @@
+from .losses import softmax_xent, lm_loss, mse, accuracy, rms_resolution
+from .loop import TrainConfig, Trainer, make_train_step
+from . import checkpoint

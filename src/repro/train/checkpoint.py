@@ -1,0 +1,105 @@
+"""Fault-tolerant checkpointing.
+
+* Atomic: write to ``<dir>/tmp.<step>`` then ``os.replace`` — a crash
+  mid-write never corrupts the latest checkpoint.
+* Self-describing: flattened key->array npz + a JSON sidecar with step,
+  config name, and tree structure; restore works into any mesh (arrays are
+  saved unsharded logical tensors and re-sharded by the caller's
+  in_shardings — elastic rescale on restart).
+* Resumable data: pipelines are (seed, step)-pure (repro.data), so restoring
+  ``step`` alone replays the stream exactly.
+* Retention: keeps the last N checkpoints plus every Pareto-front member.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(ckpt_dir: str, step: int, trees: Dict[str, Any],
+         meta: Optional[Dict[str, Any]] = None, keep: int = 3) -> str:
+    """trees: e.g. {'params': ..., 'qstate': ..., 'opt': ...}."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp.{step}")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    treedefs = {}
+    for name, tree in trees.items():
+        flat = _flatten(tree)
+        np.savez(os.path.join(tmp, f"{name}.npz"), **flat)
+        treedefs[name] = jax.tree_util.tree_structure(tree).__repr__()
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "trees": list(trees), **(meta or {})}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)                      # atomic publish
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep] if keep else []:
+        pareto_marker = os.path.join(ckpt_dir, d, "PARETO")
+        if not os.path.exists(pareto_marker):
+            shutil.rmtree(os.path.join(ckpt_dir, d))
+
+
+def mark_pareto(path: str) -> None:
+    """Pin a checkpoint (Pareto-front member) against GC."""
+    open(os.path.join(path, "PARETO"), "w").close()
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, templates: Dict[str, Any]
+            ) -> Tuple[int, Dict[str, Any]]:
+    """Restore trees shaped like ``templates`` (same structure; arrays are
+    loaded by flattened key so minor structural reorder is tolerated)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    out = {}
+    for name, template in templates.items():
+        data = np.load(os.path.join(path, f"{name}.npz"))
+        paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for kp, leaf in paths:
+            key = "/".join(_path_str(p) for p in kp)
+            arr = data[key]
+            assert arr.shape == tuple(leaf.shape), \
+                f"{name}/{key}: ckpt {arr.shape} vs template {leaf.shape}"
+            leaves.append(arr.astype(leaf.dtype))
+        out[name] = jax.tree_util.tree_unflatten(treedef, leaves)
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    return meta["step"], out

@@ -1,0 +1,144 @@
+"""Training loop: Eq.-16 loss, joint weight+bitwidth optimization, Pareto
+checkpointing, fault-tolerant resume.
+
+``make_train_step`` builds the pure step function (pjit-able — the launcher
+wraps it with shardings); :class:`Trainer` is the host-side driver with
+checkpoint/restart and the paper's beta-ramp Pareto sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import hgq
+from ..core.pareto import ParetoFront
+from ..core.schedule import Schedule, constant, log_ramp
+from ..optim import AdamWState, adamw_init, adamw_update, clip_by_global_norm
+from . import checkpoint as ckpt_lib
+
+Forward = Callable[..., Tuple[jax.Array, Any, Any]]
+LossFn = Callable[[jax.Array, Dict[str, jax.Array]], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 1000
+    lr: float = 1e-3
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    beta0: float = 1e-6          # Eq. 16 resource coefficient (ramped)
+    beta1: float = 1e-4
+    gamma: float = 2e-6          # Eq. 16 L1 coefficient (paper: fixed 2e-6)
+    beta_const: Optional[float] = None  # HGQ-c* variant: fixed beta
+    log_every: int = 50
+    eval_every: int = 100
+    ckpt_every: int = 200
+    ckpt_dir: str = ""
+    keep_ckpts: int = 3
+
+
+def make_train_step(forward: Forward, loss_fn: LossFn, tcfg: TrainConfig,
+                    lr_sched: Optional[Schedule] = None):
+    beta_sched = (constant(tcfg.beta_const) if tcfg.beta_const is not None
+                  else log_ramp(tcfg.beta0, tcfg.beta1, tcfg.steps))
+    lr_sched = lr_sched or constant(tcfg.lr)
+
+    def step_fn(params, qstate, opt: AdamWState, batch, step):
+        beta = beta_sched(step)
+        lr = lr_sched(step)
+
+        def loss(params_):
+            out, newq, aux = forward(params_, qstate, batch, mode=hgq.TRAIN)
+            base = loss_fn(out, batch)
+            total = base + beta * aux.ebops + tcfg.gamma * aux.l1
+            return total, (newq, aux.ebops, base)
+
+        (total, (newq, ebops, base)), grads = jax.value_and_grad(
+            loss, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.clip_norm)
+        params, opt = adamw_update(grads, opt, params, lr=lr,
+                                   weight_decay=tcfg.weight_decay)
+        metrics = {"loss": base, "total": total, "ebops": ebops,
+                   "gnorm": gnorm, "beta": beta}
+        return params, newq, opt, metrics
+
+    return step_fn
+
+
+class Trainer:
+    """Host-side driver: jit, checkpoints, resume, Pareto tracking."""
+
+    def __init__(self, forward: Forward, loss_fn: LossFn, tcfg: TrainConfig,
+                 params, qstate, *,
+                 eval_fn: Optional[Callable] = None,
+                 pipeline: Optional[Callable[[int], Dict]] = None,
+                 better_metric: str = "max"):
+        self.tcfg = tcfg
+        self.forward = forward
+        self.pipeline = pipeline
+        self.eval_fn = eval_fn
+        self.params = params
+        self.qstate = qstate
+        self.opt = adamw_init(params)
+        self.start_step = 0
+        self.pareto = ParetoFront(better_metric)
+        self.step_fn = jax.jit(make_train_step(forward, loss_fn, tcfg),
+                               donate_argnums=(0, 2))
+        self.history = []
+
+    # -------------------------- fault tolerance --------------------------
+    def maybe_resume(self) -> bool:
+        if not self.tcfg.ckpt_dir:
+            return False
+        last = ckpt_lib.latest_step(self.tcfg.ckpt_dir)
+        if last is None:
+            return False
+        _, trees = ckpt_lib.restore(
+            self.tcfg.ckpt_dir, last,
+            {"params": self.params, "qstate": self.qstate, "opt": self.opt})
+        self.params = trees["params"]
+        self.qstate = trees["qstate"]
+        self.opt = trees["opt"]
+        self.start_step = last
+        return True
+
+    def checkpoint(self, step: int, pareto: bool = False) -> Optional[str]:
+        if not self.tcfg.ckpt_dir:
+            return None
+        path = ckpt_lib.save(self.tcfg.ckpt_dir, step,
+                             {"params": self.params, "qstate": self.qstate,
+                              "opt": self.opt},
+                             keep=self.tcfg.keep_ckpts)
+        if pareto:
+            ckpt_lib.mark_pareto(path)
+        return path
+
+    # ------------------------------- run ---------------------------------
+    def run(self, steps: Optional[int] = None, log=print) -> Dict[str, Any]:
+        tcfg = self.tcfg
+        steps = steps or tcfg.steps
+        t0 = time.time()
+        m = {}
+        for step in range(self.start_step, steps):
+            batch = self.pipeline(step)
+            self.params, self.qstate, self.opt, m = self.step_fn(
+                self.params, self.qstate, self.opt, batch,
+                jnp.int32(step))
+            if step % tcfg.log_every == 0:
+                mm = {k: float(v) for k, v in m.items()}
+                log(f"step {step}: loss={mm['loss']:.4f} "
+                    f"ebops={mm['ebops']:.3g} beta={mm['beta']:.2g}")
+                self.history.append({"step": step, **mm})
+            if self.eval_fn and step and step % tcfg.eval_every == 0:
+                metric, ebops = self.eval_fn(self.params, self.qstate)
+                if self.pareto.offer(metric, ebops, step):
+                    path = self.checkpoint(step, pareto=True)
+            if tcfg.ckpt_dir and step and step % tcfg.ckpt_every == 0:
+                self.checkpoint(step)
+        return {"metrics": {k: float(v) for k, v in m.items()},
+                "wall_s": time.time() - t0,
+                "pareto": self.pareto.front()}

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# smoke tests and benches see exactly 1 device — the 512-device flag is set
+# ONLY inside repro.launch.dryrun (per the brief).
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,125 @@
+"""Decode-path correctness: incremental KV-cache/state decoding must
+reproduce the full-sequence forward logits (the strongest functional test of
+caches, ring buffers, RoPE offsets, and recurrent state threading)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.core import hgq
+from repro.models import model_for
+
+KEY = jax.random.PRNGKey(3)
+
+# HGQ quantizers make tiny numeric differences between the chunked
+# (forward) and cached (decode) paths; disable activation ranges' effect by
+# using EVAL mode in both.
+# moonshot (MoE) is tested separately: near-tie top-k routing can flip
+# between the forward and decode numeric paths, which is inherent to MoE
+# (not a cache bug) and produces large logit deltas on flipped tokens.
+DECODER_ARCHS = ["llama3.2-3b", "qwen2-0.5b", "recurrentgemma-2b",
+                 "rwkv6-1.6b"]
+
+
+@pytest.mark.parametrize("arch", DECODER_ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = get(arch, smoke=True)
+    M = model_for(cfg)
+    p, q = M.init(KEY, cfg)
+    B, S = 2, 12
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(KEY, (B, cfg.n_patches,
+                                                        cfg.d_model))
+    full_logits, _, _ = M.forward(p, q, batch, cfg, mode=hgq.EVAL)
+
+    cache = M.init_cache(cfg, B, S + 4)
+    got = []
+    for t in range(S):
+        lg, cache = M.decode_step(p, q, cache, toks[:, t:t + 1],
+                                  jnp.int32(t), cfg, mode=hgq.EVAL)
+        got.append(lg[:, 0])
+    got = jnp.stack(got, axis=1)
+    # expected numerics: bf16 KV cache (~1e-3) + probs quantized against
+    # chunk-local vs global softmax max (~5e-3) + associative-vs-sequential
+    # scan order for the recurrent families (~5e-2); none grows with position
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full_logits),
+                               rtol=1e-1, atol=1e-1)
+    # and the decoded distribution must agree where it matters
+    agree = np.mean(np.argmax(np.asarray(got), -1)
+                    == np.argmax(np.asarray(full_logits), -1))
+    assert agree > 0.95, f"top-1 agreement {agree}"
+
+
+def test_windowed_ring_buffer_decode():
+    """RecurrentGemma local attention: decoding past the window must agree
+    with a fresh forward over the same suffix-visible context."""
+    cfg = get("recurrentgemma-2b", smoke=True)   # window = 16
+    M = model_for(cfg)
+    p, q = M.init(KEY, cfg)
+    B, S = 1, 24                                  # exceeds the window
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    full_logits, _, _ = M.forward(p, q, {"tokens": toks}, cfg, mode=hgq.EVAL)
+    cache = M.init_cache(cfg, B, S)
+    got = []
+    for t in range(S):
+        lg, cache = M.decode_step(p, q, cache, toks[:, t:t + 1],
+                                  jnp.int32(t), cfg, mode=hgq.EVAL)
+        got.append(lg[:, 0])
+    got = jnp.stack(got, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full_logits),
+                               rtol=1e-1, atol=1e-1)
+    agree = np.mean(np.argmax(np.asarray(got), -1)
+                    == np.argmax(np.asarray(full_logits), -1))
+    assert agree > 0.95, f"top-1 agreement {agree}"
+
+
+def test_generate_greedy():
+    from repro.serving import generate
+    cfg = get("qwen2-0.5b", smoke=True)
+    M = model_for(cfg)
+    p, q = M.init(KEY, cfg)
+    prompt = jax.random.randint(KEY, (2, 5), 0, cfg.vocab)
+    out = generate(M, p, q, cfg, prompt, max_new=4)
+    assert out.shape == (2, 4)
+    assert bool(jnp.all((out >= 0) & (out < cfg.vocab)))
+
+
+def test_engine_batched_requests():
+    from repro.serving import Engine, Request
+    cfg = get("qwen2-0.5b", smoke=True)
+    M = model_for(cfg)
+    p, q = M.init(KEY, cfg)
+    eng = Engine(M, p, q, cfg, batch_slots=4, max_len=32)
+    reqs = [Request(prompt=[1, 2, 3], max_new=3) for _ in range(6)]
+    done = eng.run(list(reqs))
+    assert all(r.done for r in done)
+    assert all(len(r.out) == 3 for r in done)
+
+
+def test_moe_decode_routing_stability():
+    """MoE decode: logits match except where top-k routing flips on
+    near-ties; top-1 agreement must stay high and errors must not grow
+    unboundedly with position."""
+    cfg = get("moonshot-v1-16b-a3b", smoke=True)
+    M = model_for(cfg)
+    p, q = M.init(KEY, cfg)
+    B, S = 2, 12
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    full_logits, _, _ = M.forward(p, q, {"tokens": toks}, cfg, mode=hgq.EVAL)
+    cache = M.init_cache(cfg, B, S + 4)
+    got = []
+    for t in range(S):
+        lg, cache = M.decode_step(p, q, cache, toks[:, t:t + 1],
+                                  jnp.int32(t), cfg, mode=hgq.EVAL)
+        got.append(lg[:, 0])
+    got = np.asarray(jnp.stack(got, axis=1))
+    full = np.asarray(full_logits)
+    agree = np.mean(np.argmax(got, -1) == np.argmax(full, -1))
+    assert agree > 0.6, f"top-1 agreement {agree}"
+    # the median error stays at quantizer-noise level — only flipped
+    # routings (a minority of (batch, position) pairs) deviate
+    med = np.median(np.abs(got - full))
+    assert med < 5e-2, f"median err {med}"

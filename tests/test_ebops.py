@@ -1,0 +1,81 @@
+"""EBOPs accounting tests (paper Eq. 5, SSec. III.C)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ebops import ebops_conv2d, ebops_dyn_matmul, ebops_matmul
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+dims = st.integers(min_value=1, max_value=9)
+
+
+@given(dims, dims, st.data())
+def test_ebops_matmul_matches_bruteforce(din, dout, data):
+    bx = jnp.asarray(data.draw(st.lists(
+        st.floats(0, 16, width=32), min_size=din, max_size=din)), jnp.float32)
+    bw = jnp.asarray(data.draw(st.lists(
+        st.lists(st.floats(0, 16, width=32), min_size=dout, max_size=dout),
+        min_size=din, max_size=din)), jnp.float32)
+    want = float(jnp.sum(bx[:, None] * bw))
+    got = float(ebops_matmul(bx, bw, din, dout))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@given(dims, dims)
+def test_ebops_matmul_broadcast_forms(din, dout):
+    """scalar / per-channel / full bit tensors must agree when constant."""
+    full = jnp.full((din, dout), 5.0)
+    chan = jnp.full((1, dout), 5.0)
+    scal = jnp.float32(5.0)
+    bx = jnp.full((din,), 3.0)
+    want = 15.0 * din * dout
+    for bw in (full, chan, scal):
+        got = float(ebops_matmul(bx, bw, din, dout))
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+    # scalar activation bits too
+    got = float(ebops_matmul(jnp.float32(3.0), full, din, dout))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_ebops_conv2d():
+    kh, kw, cin, cout = 3, 3, 4, 8
+    bw = jnp.full((kh, kw, cin, cout), 4.0)
+    bx = jnp.full((cin,), 6.0)
+    want = 24.0 * kh * kw * cin * cout
+    np.testing.assert_allclose(float(ebops_conv2d(bx, bw, (kh, kw, cin, cout))),
+                               want, rtol=1e-6)
+    # per-tensor forms
+    np.testing.assert_allclose(
+        float(ebops_conv2d(jnp.float32(6.0), jnp.float32(4.0),
+                           (kh, kw, cin, cout))), want, rtol=1e-6)
+
+
+def test_ebops_dyn_matmul():
+    m, k, n = 4, 6, 5
+    ba = jnp.arange(m * k, dtype=jnp.float32).reshape(m, k) % 7
+    bb = jnp.arange(k * n, dtype=jnp.float32).reshape(k, n) % 5
+    want = float(sum(ba[i, kk] * bb[kk, j]
+                     for i in range(m) for kk in range(k) for j in range(n)))
+    np.testing.assert_allclose(float(ebops_dyn_matmul(ba, bb, (m, k), (k, n))),
+                               want, rtol=1e-5)
+    # scalar bits
+    np.testing.assert_allclose(
+        float(ebops_dyn_matmul(jnp.float32(3), jnp.float32(2), (m, k), (k, n))),
+        6.0 * m * k * n, rtol=1e-6)
+
+
+def test_jet_ebops_magnitude():
+    """Full-precision-ish jet model ~EBOPs lands in the plausible range of
+    the paper's Table I EBOPs scale (10^2-10^5)."""
+    import jax
+    from repro.models import JetTagger
+    from repro.nn import HGQConfig
+    cfg = HGQConfig(weight_gran="per_parameter", act_gran="per_parameter",
+                    init_weight_f=2, init_act_f=2)
+    p, q = JetTagger.init(jax.random.PRNGKey(0), cfg)
+    out, _, aux = JetTagger.forward(p, q,
+                                    {"x": jax.random.normal(
+                                        jax.random.PRNGKey(1), (32, 16))})
+    assert 1e2 < float(aux.ebops) < 1e6

@@ -1,0 +1,143 @@
+"""Property tests for the HGQ quantizer (paper Eq. 1-15, Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantizer import (LN2, f_shape_for, grad_scale, group_size,
+                                  int_bits_from_range, occupied_bits,
+                                  group_occupied_bits, quantize,
+                                  quantize_inference, ste_round, train_bits)
+
+settings.register_profile("ci", max_examples=60, deadline=None)
+settings.load_profile("ci")
+
+floats = st.floats(min_value=-100.0, max_value=100.0, allow_nan=False,
+                   width=32)
+fbits = st.integers(min_value=-4, max_value=12)
+
+
+@given(floats, fbits)
+def test_error_bound(x, f):
+    """|x - q(x)| <= 2^-f-1 (Eq. 8: quantization error is bounded by half a
+    step)."""
+    xq = quantize_inference(jnp.float32(x), jnp.float32(f))
+    step = 2.0 ** (-f)
+    assert abs(float(xq) - x) <= step / 2 + 1e-6 * max(abs(x), 1)
+
+
+@given(floats, fbits)
+def test_idempotent(x, f):
+    """q(q(x)) == q(x): quantized values are fixed points."""
+    q1 = quantize_inference(jnp.float32(x), jnp.float32(f))
+    q2 = quantize_inference(q1, jnp.float32(f))
+    assert float(q1) == float(q2)
+
+
+@given(floats, fbits)
+def test_on_grid(x, f):
+    """q(x) * 2^f is an integer (fixed-point grid membership)."""
+    xq = float(quantize_inference(jnp.float32(x), jnp.float32(f)))
+    scaled = xq * (2.0 ** f)
+    assert abs(scaled - round(scaled)) < 1e-3
+
+
+@given(st.lists(floats, min_size=2, max_size=16), fbits)
+def test_monotone(xs, f):
+    xs = sorted(xs)
+    qs = [float(quantize_inference(jnp.float32(x), jnp.float32(f)))
+          for x in xs]
+    assert all(a <= b + 1e-9 for a, b in zip(qs, qs[1:]))
+
+
+@given(floats, fbits)
+def test_ste_gradient_x(x, f):
+    """Straight-through: d q(x)/dx == 1 exactly."""
+    g = jax.grad(lambda v: quantize(v, jnp.float32(f)))(jnp.float32(x))
+    assert float(g) == pytest.approx(1.0)
+
+
+@given(floats, fbits)
+def test_surrogate_gradient_f(x, f):
+    """Eq. 15: d q(x)/df == ln2 * delta with delta = x - q(x)."""
+    xf = jnp.float32(x)
+    g = jax.grad(lambda ff: quantize(xf, ff))(jnp.float32(f))
+    delta = float(xf - quantize_inference(xf, jnp.float32(f)))
+    assert float(g) == pytest.approx(LN2 * delta, rel=1e-4, abs=1e-6)
+
+
+def test_ste_round_matches_paper_convention():
+    # [x] = floor(x + 1/2): midpoint rounds UP
+    assert float(ste_round(jnp.float32(0.5))) == 1.0
+    assert float(ste_round(jnp.float32(-0.5))) == 0.0
+    assert float(jax.grad(lambda x: ste_round(x))(jnp.float32(1.3))) == 1.0
+
+
+def test_grad_scale():
+    x = jnp.float32(3.0)
+    assert float(grad_scale(x, 0.25)) == pytest.approx(3.0)
+    g = jax.grad(lambda v: grad_scale(v, 0.25))(x)
+    assert float(g) == pytest.approx(0.25)
+
+
+# ------------------------- bit accounting ---------------------------------
+
+def test_occupied_bits_known_values():
+    # paper SSIII.C: 001xx1000-style counting
+    f = jnp.float32(8.0)
+    assert float(occupied_bits(jnp.float32(0.5), f)) == 1       # 0.1
+    assert float(occupied_bits(jnp.float32(0.140625), jnp.float32(6))) == 4
+    assert float(occupied_bits(jnp.float32(0.0), f)) == 0       # pruned
+    assert float(occupied_bits(jnp.float32(-0.75), f)) == 2     # 0.11
+
+
+@given(st.integers(min_value=1, max_value=2**20), st.integers(0, 10))
+def test_occupied_bits_vs_python(m, f):
+    """Cross-check against python bit twiddling on the integer mantissa."""
+    w = m * (2.0 ** -f)
+    got = float(occupied_bits(jnp.float32(w), jnp.float32(f)))
+    want = m.bit_length() - ((m & -m).bit_length() - 1)
+    assert got == want
+
+
+def test_group_occupied_bits():
+    w = jnp.array([0.5, 0.25, 0.0])
+    # msb of 0.5 = -1, lsb of 0.25 = -2 -> 2 bits for the group
+    assert float(group_occupied_bits(w, jnp.float32(8.0), ())) == 2.0
+
+
+@given(st.lists(st.floats(-8, 8, allow_nan=False, width=32), min_size=1,
+                max_size=32), st.integers(0, 8))
+def test_train_bits_upper_bounds_occupied(ws, f):
+    """~EBOPs bits (relu(i'+f)) upper-bound the exact occupied bits up to
+    the sign-bit convention (paper SSIII.D.2: f bounds the *fractional* bits
+    enclosed by non-zero bits; Eq. 3 counts integer bits in two's
+    complement, occupied bits count the magnitude — they differ by at most
+    1 at exact negative powers of two, e.g. w = -1, f = 0)."""
+    w = jnp.asarray(ws, jnp.float32)
+    wq = quantize_inference(w, jnp.float32(f))
+    vmin, vmax = jnp.min(wq), jnp.max(wq)
+    bt = float(train_bits(jnp.float32(f), vmin, vmax, signed_bit=False))
+    occ = float(jnp.max(occupied_bits(wq, jnp.float32(f))))
+    assert bt + 1.0 >= occ - 1e-4
+    # the paper's exact claim: fractional occupied bits never exceed f
+    from repro.core.quantizer import _trailing_zeros
+    m = jnp.abs(jnp.round(wq * jnp.exp2(jnp.float32(f)))).astype(jnp.int32)
+    frac_occ = jnp.where(m > 0, f - _trailing_zeros(m), 0.0)
+    assert float(jnp.max(frac_occ)) <= f + 1e-6
+
+
+def test_int_bits_from_range():
+    assert float(int_bits_from_range(0.0, 3.0)) == 2     # need 2 bits for 3
+    assert float(int_bits_from_range(0.0, 4.0)) == 3
+    assert float(int_bits_from_range(-1.0, 0.5)) == 0    # ceil(log2 1) = 0
+    assert float(int_bits_from_range(0.0, 0.0)) < -100   # dead value
+
+
+def test_f_shapes_and_group_size():
+    assert f_shape_for((4, 8), "per_tensor") == ()
+    assert f_shape_for((4, 8), "per_channel") == (1, 8)
+    assert f_shape_for((4, 8), "per_parameter") == (4, 8)
+    assert group_size((4, 8), (1, 8)) == 4.0
+    assert group_size((4, 8), ()) == 32.0
