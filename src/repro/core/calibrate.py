@@ -20,7 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .hgq import ActState
-from .quantizer import quantize_inference
+from .quantizer import (_exp2i, ceil_log2, floor_log2,
+                        quantize_inference)
 
 
 class FixedSpec(NamedTuple):
@@ -40,13 +41,16 @@ def int_bits_exact(vmin: jax.Array, vmax: jax.Array,
     if margin_bits:
         vmin_q = vmin_q * (2.0 ** margin_bits)
         vmax_q = vmax_q * (2.0 ** margin_bits)
-    hi = jnp.where(vmax_q > 0, jnp.floor(_log2(jnp.abs(vmax_q))) + 1.0, -127.0)
-    lo = jnp.where(vmin_q < 0, jnp.ceil(_log2(jnp.abs(vmin_q))), -127.0)
+    # frexp-exact log2: jnp.log2 is an ulp low at e.g. 2^13 on some
+    # backends, which would allocate one integer bit too few and saturate
+    # the largest calibration value at deployment
+    hi = jnp.where(vmax_q > 0,
+                   floor_log2(jnp.maximum(jnp.abs(vmax_q), 2.0 ** -126))
+                   + 1.0, -127.0)
+    lo = jnp.where(vmin_q < 0,
+                   ceil_log2(jnp.maximum(jnp.abs(vmin_q), 2.0 ** -126)),
+                   -127.0)
     return jnp.maximum(hi, lo)
-
-
-def _log2(x):
-    return jnp.log2(jnp.maximum(x, 2.0 ** -126))
 
 
 def fixed_spec_from_range(state: ActState, f: jax.Array,
@@ -81,10 +85,10 @@ def assert_no_overflow(x: jax.Array, spec: FixedSpec, f: jax.Array) -> jax.Array
     fi = jnp.floor(jnp.asarray(f, jnp.float32) + 0.5)
     xq = quantize_inference(jnp.asarray(x, jnp.float32), fi)
     frac = fi
-    top = (jnp.exp2(spec.int_bits - spec.signed.astype(jnp.float32))
-           - jnp.exp2(-frac))
+    top = (_exp2i(spec.int_bits - spec.signed.astype(jnp.float32))
+           - _exp2i(-frac))
     bot = jnp.where(spec.signed,
-                    -jnp.exp2(spec.int_bits - 1.0), 0.0)
+                    -_exp2i(spec.int_bits - 1.0), 0.0)
     top = jnp.where(spec.bits > 0, top, 0.0)
     bot = jnp.where(spec.bits > 0, bot, 0.0)
     return jnp.all((xq <= top + 1e-9) & (xq >= bot - 1e-9))

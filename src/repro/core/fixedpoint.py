@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from .calibrate import FixedSpec
+from .quantizer import _exp2i
 
 
 def to_fixed(x: jax.Array, spec: FixedSpec, f: jax.Array,
@@ -26,18 +27,20 @@ def to_fixed(x: jax.Array, spec: FixedSpec, f: jax.Array,
     fi = jnp.floor(jnp.asarray(f, jnp.float32) + 0.5).astype(x64.dtype)
     b = jnp.asarray(spec.bits, x64.dtype)
     signed = jnp.asarray(spec.signed)
-    m = jnp.floor(x64 * jnp.exp2(fi) + epsilon)  # [x * 2^f]
-    two_b = jnp.exp2(b)
-    half = jnp.exp2(b - 1.0)
+    # exact powers of two: an ulp-off exp2(b) makes the wrap modulus
+    # wrong exactly at the +-2^(b-1) boundary (and at b=13, 15, 26, ...)
+    m = jnp.floor(x64 * _exp2i(fi) + epsilon)  # [x * 2^f]
+    two_b = _exp2i(b)
+    half = _exp2i(b - 1.0)
     m_signed = jnp.mod(m + half, two_b) - half          # Eq. (1)
     m_unsigned = jnp.mod(m, two_b)                      # Eq. (2)
     m_wrapped = jnp.where(signed, m_signed, m_unsigned)
     m_wrapped = jnp.where(b > 0, m_wrapped, 0.0)
-    return (m_wrapped * jnp.exp2(-fi)).astype(jnp.float32)
+    return (m_wrapped * _exp2i(-fi)).astype(jnp.float32)
 
 
 def representable(x: jax.Array, spec: FixedSpec, f: jax.Array) -> jax.Array:
     """Elementwise: is x exactly representable (no wrap) in fixed<b, i>?"""
     y = to_fixed(x, spec, f)
-    return jnp.abs(y - jnp.asarray(x, jnp.float32)) < jnp.exp2(
+    return jnp.abs(y - jnp.asarray(x, jnp.float32)) < _exp2i(
         -jnp.floor(jnp.asarray(f, jnp.float32) + 0.5) - 1.0)

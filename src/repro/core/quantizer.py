@@ -52,7 +52,10 @@ def quantize(x: jax.Array, f: jax.Array, epsilon: float = 0.5) -> jax.Array:
     dtype = x.dtype
     x32 = x.astype(jnp.float32)
     fi = ste_round(f.astype(jnp.float32))
-    scale = jnp.exp2(fi)  # exact for integer fi
+    # _exp2i, not jnp.exp2: XLA's exp2 is an ulp off at e.g. fi=13, which
+    # would put "quantized" values slightly off the fixed-point grid.  The
+    # grid scale sits inside sg(), so the int cast never blocks gradients.
+    scale = _exp2i(sg(fi))
     xq = sg(jnp.floor(x32 * scale + epsilon) / scale)
     delta = sg(x32 - xq)
     delta = sg(delta + LN2 * fi * delta) - LN2 * fi * delta
@@ -63,7 +66,7 @@ def quantize_inference(x: jax.Array, f: jax.Array, epsilon: float = 0.5) -> jax.
     """Pure (non-differentiable) Eq.-(4) quantization: round(x*2^f)*2^-f."""
     x32 = x.astype(jnp.float32)
     fi = jnp.floor(f.astype(jnp.float32) + 0.5)
-    scale = jnp.exp2(fi)
+    scale = _exp2i(fi)
     return (jnp.floor(x32 * scale + epsilon) / scale).astype(x.dtype)
 
 
@@ -137,14 +140,11 @@ def int_bits_from_range(vmin: jax.Array, vmax: jax.Array) -> jax.Array:
     """
     vmin = sg(jnp.asarray(vmin, jnp.float32))
     vmax = sg(jnp.asarray(vmax, jnp.float32))
-    hi = jnp.where(vmax > 0, jnp.floor(_safe_log2(vmax)) + 1.0, _NEG_LARGE)
-    lo = jnp.where(vmin < 0, jnp.ceil(_safe_log2(-vmin)), _NEG_LARGE)
+    hi = jnp.where(vmax > 0, floor_log2(jnp.maximum(vmax, 1e-30)) + 1.0,
+                   _NEG_LARGE)
+    lo = jnp.where(vmin < 0, ceil_log2(jnp.maximum(-vmin, 1e-30)),
+                   _NEG_LARGE)
     return jnp.maximum(hi, lo)
-
-
-def _safe_log2(x: jax.Array) -> jax.Array:
-    x = jnp.asarray(x, jnp.float32)
-    return jnp.log2(jnp.maximum(x, jnp.float32(2.0 ** _NEG_LARGE)))
 
 
 def train_bits(f: jax.Array, vmin: jax.Array, vmax: jax.Array,
@@ -167,27 +167,81 @@ def train_bits(f: jax.Array, vmin: jax.Array, vmax: jax.Array,
 # non-zero bits": e.g. 001xx1000 counts 4 bits.
 # ---------------------------------------------------------------------------
 
+def _exp2i(f: jax.Array) -> jax.Array:
+    """Exact 2^f for integer-valued float f, clamped to float32's normal
+    exponent range [-126, 127] (XLA's exp2 approximation is an ulp off at
+    e.g. f=13, 15, 26..., which corrupts grids, moduli, and mantissa
+    counting; ldexp overflows to inf past 127, so we saturate instead —
+    bit counts are shift-invariant, so the clamp never changes them for
+    representable inputs)."""
+    # clip the float BEFORE the int cast: float->int32 conversion of an
+    # out-of-range value (diverged f, inf) is implementation-defined and
+    # can wrap negative, inverting the grid direction
+    fi = jnp.clip(jnp.asarray(f, jnp.float32), -126.0, 127.0)
+    return jnp.ldexp(jnp.float32(1.0), fi.astype(jnp.int32))
+
+
+def floor_log2(x: jax.Array) -> jax.Array:
+    """Exact floor(log2 x) for x > 0 via frexp (jnp.log2(2^13) is one ulp
+    low on some backends, e.g. floor(log2(8192)) == 12)."""
+    _, ex = jnp.frexp(jnp.asarray(x, jnp.float32))
+    return ex.astype(jnp.float32) - 1.0
+
+
+def ceil_log2(x: jax.Array) -> jax.Array:
+    """Exact ceil(log2 x) for x > 0 via frexp."""
+    man, ex = jnp.frexp(jnp.asarray(x, jnp.float32))
+    ex = ex.astype(jnp.float32)
+    return jnp.where(man == 0.5, ex - 1.0, ex)
+
+
+def _mantissa24(m_float: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Exact 24-bit integer mantissa of a non-negative float32.
+
+    Returns ``(m24, ex)`` with ``m_float == m24 * 2^(ex - 24)`` exactly and
+    ``m24`` an int32 in ``[2^23, 2^24)`` (0 when the input is 0).  Uses
+    ``frexp`` — unlike ``floor(log2(x))``, exact for every representable
+    magnitude, so ``round(w * 2^f)`` never overflows int32 no matter how
+    large ``f`` is (the old direct int32 cast wrapped negative at f >~ 22
+    on unit-scale weights).
+    """
+    mf = jnp.asarray(m_float, jnp.float32)
+    man, ex = jnp.frexp(mf)  # mf = man * 2^ex, man in [0.5, 1)
+    m24 = jnp.round(man * jnp.float32(2.0 ** 24)).astype(jnp.int32)
+    return m24, ex.astype(jnp.float32)
+
+
 def occupied_bits(w: jax.Array, f: jax.Array) -> jax.Array:
     """Exact per-element occupied bits of quantized constants ``w``.
 
     Represent |w_q| = m * 2^-f with integer m; occupied bits =
-    floor(log2 m) - trailing_zeros(m) + 1, and 0 when m == 0.
+    floor(log2 m) - trailing_zeros(m) + 1, and 0 when m == 0.  Computed on
+    the normalized 24-bit mantissa: the count is shift-invariant, so it
+    reduces to ``24 - trailing_zeros(m24)``.
     """
     f = jnp.floor(jnp.asarray(f, jnp.float32) + 0.5)
-    m = jnp.abs(jnp.round(jnp.asarray(w, jnp.float32) * jnp.exp2(f)))
-    m = m.astype(jnp.int32)
-    msb = jnp.where(m > 0, jnp.floor(_safe_log2(m.astype(jnp.float32))), -1.0)
-    tz = _trailing_zeros(m)
-    return jnp.where(m > 0, msb - tz + 1.0, 0.0)
+    mf = jnp.abs(jnp.round(jnp.asarray(w, jnp.float32)
+                           * _exp2i(_f_effective(f, w))))
+    m24, _ = _mantissa24(mf)
+    return jnp.where(m24 > 0, 24.0 - _trailing_zeros(m24), 0.0)
+
+
+def _f_effective(fi: jax.Array, w: jax.Array) -> jax.Array:
+    """Cap fi so |w| * 2^fi stays < 2^25: once the scaled value clears
+    float32's 24 mantissa bits, rounding is the identity and the occupied
+    span is shift-invariant — so the cap never changes a count, while an
+    uncapped fi can push w * 2^fi to inf (frexp(inf) -> garbage)."""
+    w32 = jnp.asarray(w, jnp.float32)
+    _, ex_w = jnp.frexp(jnp.abs(w32))  # |w| = man * 2^ex_w, man in [0.5, 1)
+    return jnp.minimum(fi, 25.0 - ex_w.astype(jnp.float32))
 
 
 def _trailing_zeros(m: jax.Array) -> jax.Array:
-    """Trailing zero count of non-negative int32 (0 -> 0)."""
+    """Trailing zero count of non-negative int32 (0 -> 0); frexp-exact."""
     m = m.astype(jnp.uint32)
     lowbit = jnp.bitwise_and(m, (~m + jnp.uint32(1)))  # isolate lowest set bit
-    return jnp.where(m > 0,
-                     jnp.floor(_safe_log2(lowbit.astype(jnp.float32))),
-                     0.0)
+    _, ex = jnp.frexp(lowbit.astype(jnp.float32))      # lowbit = 2^(ex-1)
+    return jnp.where(m > 0, ex.astype(jnp.float32) - 1.0, 0.0)
 
 
 def group_occupied_bits(w: jax.Array, f: jax.Array,
@@ -199,12 +253,14 @@ def group_occupied_bits(w: jax.Array, f: jax.Array,
     Reduction axes are those where f is broadcast (size 1 or missing).
     """
     f = jnp.broadcast_to(jnp.asarray(f, jnp.float32), w.shape)
-    fi = jnp.floor(f + 0.5)
-    m = jnp.abs(jnp.round(jnp.asarray(w, jnp.float32) * jnp.exp2(fi)))
-    m = m.astype(jnp.int32)
-    msb = jnp.where(m > 0, jnp.floor(_safe_log2(m.astype(jnp.float32))) - fi,
-                    jnp.float32(_NEG_LARGE))
-    lsb = jnp.where(m > 0, _trailing_zeros(m) - fi, jnp.float32(-_NEG_LARGE))
+    fi = _f_effective(jnp.floor(f + 0.5), w)
+    mf = jnp.abs(jnp.round(jnp.asarray(w, jnp.float32) * _exp2i(fi)))
+    m24, ex = _mantissa24(mf)
+    # msb index of mf is ex-1; its trailing zeros are tz(m24) - (24 - ex);
+    # rebasing by the same (effective) fi keeps positions absolute
+    msb = jnp.where(m24 > 0, (ex - 1.0) - fi, jnp.float32(_NEG_LARGE))
+    lsb = jnp.where(m24 > 0, (_trailing_zeros(m24) + ex - 24.0) - fi,
+                    jnp.float32(-_NEG_LARGE))
     axes = _reduce_axes(w.shape, f_sh)
     if axes:
         msb = jnp.max(msb, axis=axes, keepdims=True)

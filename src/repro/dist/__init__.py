@@ -1,0 +1,69 @@
+"""``repro.dist`` — distribution & deployment utilities.
+
+Four small modules, one convention:
+
+* :mod:`repro.dist.axes` — logical-axis registry + pattern-string
+  activation sharding (``constrain(x, "b.m.")``); identity on 1 device.
+* :mod:`repro.dist.sharding` — parameter/batch/cache placement rules
+  (FSDP x TP heuristics) used by the launchers and the dry-run.
+* :mod:`repro.dist.perf` — compute-dtype casting and HGQ int8
+  serving-weight packing.
+* this module — int8 error-feedback gradient compression for the
+  inter-pod gradient all-reduce.
+
+Error feedback (1-bit-Adam lineage): each step compresses
+``grad + residual`` and carries the quantization error forward, so the
+*time-averaged* delivered gradient is unbiased and the residual stays
+bounded by one quantization step.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .axes import constrain, get_model_size, set_axes  # noqa: F401
+from .perf import (cast_for_matmul, get_compute_dtype,  # noqa: F401
+                   pack_params_for_serving, set_compute_dtype, unpack_weight)
+from .sharding import (batch_sharding, batch_spec, cache_sharding,  # noqa: F401
+                       replicated, shard_tree, spec_for_param)
+
+EF_KINDS = ("none", "bf16", "int8")
+
+
+class EFState(NamedTuple):
+    """Per-leaf quantization residual carried across steps."""
+    residual: Any
+
+
+def ef_init(grads: Any) -> EFState:
+    return EFState(residual=jax.tree.map(jnp.zeros_like, grads))
+
+
+def _compress_leaf(e: jax.Array, kind: str) -> jax.Array:
+    if kind == "bf16":
+        return e.astype(jnp.bfloat16).astype(e.dtype)
+    # int8: symmetric per-tensor grid, max|e| -> 127
+    scale = jnp.maximum(jnp.max(jnp.abs(e)), 1e-30) / 127.0
+    return jnp.round(e / scale) * scale
+
+
+def ef_compress(grads: Any, state: EFState, *, kind: str = "int8"
+                ) -> Tuple[Any, EFState]:
+    """Compress ``grads`` with error feedback.
+
+    Returns ``(sent, new_state)`` where ``sent`` is what goes over the
+    wire (same dtype/shape as ``grads``; apply it to the optimizer) and
+    ``new_state`` carries ``(grad + residual) - sent`` to the next step.
+    """
+    if kind not in EF_KINDS:
+        raise ValueError(
+            f"unsupported gradient compression kind {kind!r}; "
+            f"supported: {EF_KINDS}")
+    if kind == "none":
+        return grads, state
+    err = jax.tree.map(jnp.add, grads, state.residual)
+    sent = jax.tree.map(lambda e: _compress_leaf(e, kind), err)
+    residual = jax.tree.map(jnp.subtract, err, sent)
+    return sent, EFState(residual=residual)

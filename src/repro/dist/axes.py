@@ -1,0 +1,101 @@
+"""Logical-axis registry and pattern-string activation sharding.
+
+The ``nn``/``models`` layers annotate activations with one character per
+array axis:
+
+    'b'  — the batch-like axis: sharded over the data-parallel mesh axes
+           (``("data",)`` or ``("pod", "data")`` on the multi-pod mesh)
+    'm'  — a model-parallel axis (heads, hidden features): sharded over
+           the tensor-parallel ``model`` mesh axis
+    '.'  — replicated / unconstrained
+
+e.g. ``constrain(x, "b.m.")`` on a ``[B, S, H, hd]`` tensor shards batch
+over data and heads over model.  The launchers register the concrete mesh
+axes via :func:`set_axes`; until then (and always on a single device) every
+``constrain`` is an identity, so library code is importable and testable
+with no mesh at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRegistry:
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    data_size: int = 1
+    model_size: int = 1
+
+
+_REGISTRY = AxisRegistry()
+
+
+def set_axes(data_axes: Tuple[str, ...], model_axis: str, *,
+             data_size: int, model_size: int) -> None:
+    """Register the logical mesh axes used by ``constrain`` patterns.
+
+    Called by the launchers after building the mesh; axis *sizes* are
+    needed so non-divisible dimensions degrade to replication instead of
+    failing GSPMD propagation.
+    """
+    global _REGISTRY
+    _REGISTRY = AxisRegistry(tuple(data_axes), model_axis,
+                             int(data_size), int(model_size))
+
+
+def reset_axes() -> None:
+    """Back to the single-device identity state (tests)."""
+    global _REGISTRY
+    _REGISTRY = AxisRegistry()
+
+
+def get_axes() -> AxisRegistry:
+    return _REGISTRY
+
+
+def get_model_size() -> int:
+    """Tensor-parallel degree currently registered (1 = no TP)."""
+    return _REGISTRY.model_size
+
+
+def get_data_size() -> int:
+    return _REGISTRY.data_size
+
+
+def _spec_for(pattern: str, shape: Tuple[int, ...]) -> P:
+    reg = _REGISTRY
+    entries = []
+    for ch, dim in zip(pattern, shape):
+        if ch == "b":
+            ok = reg.data_size > 1 and dim % reg.data_size == 0
+            entries.append(tuple(reg.data_axes) if ok else None)
+        elif ch == "m":
+            ok = reg.model_size > 1 and dim % reg.model_size == 0
+            entries.append(reg.model_axis if ok else None)
+        elif ch == ".":
+            entries.append(None)
+        else:
+            raise ValueError(f"bad axis char {ch!r} in pattern {pattern!r}")
+    return P(*entries)
+
+
+def constrain(x: jax.Array, pattern: str) -> jax.Array:
+    """Apply a pattern-string sharding constraint; identity on 1 device.
+
+    ``pattern`` has one character per axis of ``x`` (see module docstring).
+    """
+    if len(pattern) != x.ndim:
+        raise ValueError(f"pattern {pattern!r} has {len(pattern)} axes, "
+                         f"array has {x.ndim} ({x.shape})")
+    bad = set(pattern) - set("bm.")
+    if bad:
+        raise ValueError(f"bad axis chars {sorted(bad)!r} in {pattern!r}")
+    reg = _REGISTRY
+    if reg.data_size * reg.model_size <= 1:
+        return x
+    return jax.lax.with_sharding_constraint(x, _spec_for(pattern, x.shape))

@@ -1,0 +1,121 @@
+"""Serving/throughput knobs: compute-dtype casting and HGQ int8 packing.
+
+Compute dtype: the launchers opt a run into bf16 compute with
+:func:`set_compute_dtype`; layers call :func:`cast_for_matmul` on matmul
+operands so fp32-master FSDP gathers and TP partial-sum all-reduces move
+bf16 bytes (half the collective volume).  Default (``None``) is a no-op.
+
+Packing: :func:`pack_params_for_serving` rewrites every matmul weight dict
+``{'w', 'f'}`` into ``{'w_int8', 'scale', 'f'}`` — int8 mantissas plus a
+per-output-channel ``2^-f`` scale, the deployable representation the HGQ
+paper's heterogeneous-bitwidth training produces.  ``nn.common.get_qw``
+dequantizes at use (``unpack_weight``) and XLA fuses the dequant into the
+consuming matmul, mirroring ``kernels/qmatmul``.  Halves decode HBM
+traffic vs bf16.  The transform is shape-preserving and traceable, so the
+dry-run can ``jax.eval_shape`` it over abstract params.
+
+Both knobs are read at *trace* time: set the compute dtype (and the axis
+registry in :mod:`repro.dist.axes`) before jitting — a jitted executable
+keeps whatever was set when it traced, and later ``set_compute_dtype``
+calls do not retrace it.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quantizer import _exp2i, floor_log2
+
+_COMPUTE_DTYPE: Optional[Any] = None
+
+
+def set_compute_dtype(dtype) -> None:
+    """Set (or clear, with ``None``) the matmul compute dtype."""
+    global _COMPUTE_DTYPE
+    _COMPUTE_DTYPE = dtype
+
+
+def get_compute_dtype():
+    return _COMPUTE_DTYPE
+
+
+def cast_for_matmul(x: jax.Array) -> jax.Array:
+    """Cast a floating matmul operand to the compute dtype, if one is set."""
+    if _COMPUTE_DTYPE is None:
+        return x
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        return x
+    return x.astype(_COMPUTE_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# HGQ int8 serving-weight packing
+# ---------------------------------------------------------------------------
+
+def _packable(name: str, w) -> bool:
+    if not hasattr(w, "ndim") or w.ndim < 2:
+        return False          # biases, norm gains, scalars
+    if not jnp.issubdtype(w.dtype, jnp.floating):
+        return False
+    if name == "bias":
+        return False          # stacked biases are [L, d] but not matmuls
+    if name == "kernel" and w.ndim >= 4:
+        return False          # conv kernels: HConv2D reads 'w' directly
+    return True
+
+
+def _pack_one(p: Dict[str, Any]) -> Dict[str, Any]:
+    w = jnp.asarray(p["w"])
+    f = p.get("f")
+    w32 = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(w32), axis=-2, keepdims=True)
+    if f is not None:
+        # per-output-channel grid from the trained fractional bits: reduce
+        # over the contraction axis (-2) only, so stacked-layer / expert
+        # leading axes keep their own scales.  With per-parameter f the
+        # column max can exceed what 8 bits hold (int_bits + frac_bits > 8),
+        # so cap fi at the largest exponent whose mantissa fits in +-127:
+        # saturating the big weights corrupts the matmul far worse than
+        # flooring the small ones.
+        fi = jnp.floor(jnp.broadcast_to(
+            jnp.asarray(f, jnp.float32), w.shape) + 0.5)
+        fi = jnp.max(fi, axis=-2, keepdims=True)
+        fi_cap = floor_log2(127.0 / jnp.maximum(amax, 1e-12))
+        fi = jnp.minimum(fi, fi_cap)
+        # the cap divides two floats, so it can still be one too high at
+        # the boundary; back off where the mantissa would saturate
+        fi = jnp.where(jnp.floor(amax * _exp2i(fi) + 0.5) > 127.0,
+                       fi - 1.0, fi)
+        scale = _exp2i(-fi)
+    else:
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+    m = jnp.clip(jnp.floor(w32 / scale + 0.5), -128, 127)
+    out = {"w_int8": m.astype(jnp.int8), "scale": scale.astype(jnp.float32)}
+    if f is not None:
+        out["f"] = f
+    return out
+
+
+def pack_params_for_serving(params: Any) -> Any:
+    """Rewrite matmul weights to int8 + per-channel scale (see module doc).
+
+    Structure-preserving everywhere else; safe to call on abstract
+    (``ShapeDtypeStruct``) trees under ``jax.eval_shape``.
+    """
+    def walk(obj, name=""):
+        if isinstance(obj, dict):
+            if "w" in obj and _packable(name, obj["w"]):
+                return _pack_one(obj)
+            return {k: walk(v, k) for k, v in obj.items()}
+        return obj
+    return walk(params)
+
+
+def unpack_weight(p: Dict[str, Any]) -> jax.Array:
+    """Dequantize a packed weight dict; fuses into the consuming matmul."""
+    w = p["w_int8"].astype(jnp.float32) * p["scale"].astype(jnp.float32)
+    if _COMPUTE_DTYPE is not None:
+        w = w.astype(_COMPUTE_DTYPE)
+    return w

@@ -1,0 +1,133 @@
+"""Parameter/batch/cache placement rules (FSDP x TP).
+
+One heuristic, applied uniformly to every parameter leaf by
+:func:`spec_for_param`:
+
+* only the trailing two axes of a weight are sharding candidates — any
+  leading axes (the ``lax.scan`` stacked-layer axis, MoE expert axes, conv
+  spatial dims) are iterated per step or routed per token, so sharding them
+  would put a collective inside the scan body;
+* the *larger* trailing axis goes to the tensor-parallel ``model`` axis
+  (bigger shards amortize the TP all-reduce), the other to the
+  data-parallel axes (FSDP);  in ``mode="serve"`` there is no gradient
+  all-reduce to overlap, so only the TP shard is kept;
+* an axis that does not divide the mesh axis size replicates instead.
+
+Data-parallel axes are ``("data",)`` on the single-pod mesh and
+``("pod", "data")`` on the multi-pod mesh — ``pod`` is outer data
+parallelism, so batch and FSDP shards span both.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_DATA_AXIS_NAMES = ("pod", "data")
+
+
+def _mesh_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _data_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in _DATA_AXIS_NAMES)
+
+
+def _data_size(mesh) -> int:
+    sizes = _mesh_sizes(mesh)
+    n = 1
+    for a in _data_axes(mesh):
+        n *= sizes[a]
+    return n
+
+
+def _key_name(k: Any) -> str:
+    for attr in ("key", "name"):
+        v = getattr(k, attr, None)
+        if v is not None:
+            return str(v)
+    return str(k)
+
+
+def spec_for_param(path: Sequence[Any], shape: Sequence[int], mesh,
+                   mode: str = "train") -> P:
+    """Placement spec for one parameter leaf.
+
+    ``path`` is a ``tree_flatten_with_path``-style key path (anything with a
+    ``.key``/``.name`` attribute, or stringifiable); ``shape`` the leaf
+    shape; ``mode`` is ``"train"`` (FSDP x TP) or ``"serve"`` (TP only).
+    """
+    if mode not in ("train", "serve"):
+        raise ValueError(f"mode must be 'train' or 'serve', got {mode!r}")
+    shape = tuple(shape)
+    if len(shape) < 2:
+        return P(*([None] * len(shape)))
+    sizes = _mesh_sizes(mesh)
+    model_size = sizes.get("model", 1)
+    daxes = _data_axes(mesh)
+    dsize = _data_size(mesh)
+    entries: list = [None] * len(shape)
+    d0, d1 = shape[-2], shape[-1]
+    # larger trailing axis -> model; axis -1 wins ties; the other -> data
+    model_pos = len(shape) - 1 if d1 >= d0 else len(shape) - 2
+    data_pos = len(shape) - 2 if model_pos == len(shape) - 1 \
+        else len(shape) - 1
+    if model_size > 1 and shape[model_pos] % model_size == 0:
+        entries[model_pos] = "model"
+    if mode == "train" and dsize > 1 and shape[data_pos] % dsize == 0:
+        entries[data_pos] = daxes if len(daxes) > 1 else daxes[0]
+    return P(*entries)
+
+
+def batch_spec(mesh, batch: int, ndim: int) -> P:
+    """Leading-axis data sharding for a batch of ``ndim`` dims; replicate
+    when the global batch does not fill every data shard."""
+    daxes = _data_axes(mesh)
+    dsize = _data_size(mesh)
+    entries: list = [None] * ndim
+    if dsize > 1 and batch > 1 and batch % dsize == 0:
+        entries[0] = daxes
+    return P(*entries)
+
+
+def batch_sharding(mesh, batch: int, ndim: int) -> NamedSharding:
+    return NamedSharding(mesh, batch_spec(mesh, batch, ndim))
+
+
+def cache_sharding(mesh, shape: Sequence[int], *, batch_axis: int = 1,
+                   seq_axis: Optional[int] = None,
+                   head_axis: Optional[int] = None) -> NamedSharding:
+    """Decode-cache placement: batch over data, heads (or, failing that,
+    the sequence/window axis) over model.  Axis 0 is the stacked-layer
+    axis and always replicates."""
+    shape = tuple(shape)
+    sizes = _mesh_sizes(mesh)
+    model_size = sizes.get("model", 1)
+    daxes = _data_axes(mesh)
+    dsize = _data_size(mesh)
+    entries: list = [None] * len(shape)
+    if dsize > 1 and shape[batch_axis] % dsize == 0:
+        entries[batch_axis] = daxes if len(daxes) > 1 else daxes[0]
+    if model_size > 1:
+        for ax in (head_axis, seq_axis):
+            if ax is not None and shape[ax] % model_size == 0:
+                entries[ax] = "model"
+                break
+    return NamedSharding(mesh, P(*entries))
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def shard_tree(tree: Any, mesh, mode: str = "train") -> Any:
+    """Map :func:`spec_for_param` over every leaf of a parameter pytree.
+
+    Leaves only need a ``.shape`` — concrete arrays and
+    ``ShapeDtypeStruct``s both work (the dry-run shards abstract trees).
+    """
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, spec_for_param(path, leaf.shape, mesh, mode)), tree)

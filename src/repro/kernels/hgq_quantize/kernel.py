@@ -25,8 +25,17 @@ DEFAULT_BLOCK_ROWS = 256
 LANE = 128  # TPU VPU lane width; last-dim tiles must be multiples
 
 
+def _exact_exp2(fi):
+    """2^fi by exponent-field construction — exact where XLA's exp2 can be
+    an ulp off (fi=13, 15, 26, ...), and integer-shift only, so it lowers
+    inside the kernel body.  fi must be integer-valued; clamped to the
+    float32 normal range."""
+    biased = jnp.clip(fi, -126.0, 127.0).astype(jnp.int32) + 127
+    return jax.lax.bitcast_convert_type(biased << 23, jnp.float32)
+
+
 def _quantize_math(x, fi, epsilon):
-    scale = jnp.exp2(fi)
+    scale = _exact_exp2(fi)
     return jnp.floor(x.astype(jnp.float32) * scale + epsilon) / scale
 
 

@@ -3,12 +3,16 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from ...core.quantizer import _exp2i
+
 
 def hgq_quantize_ref(x: jnp.ndarray, f: jnp.ndarray,
                      epsilon: float = 0.5) -> jnp.ndarray:
     """round(x * 2^f) * 2^-f with f rounded via floor(f + 0.5), f broadcast
-    against x.  Math in fp32, result cast back to x.dtype."""
+    against x.  Math in fp32, result cast back to x.dtype.  _exp2i, not
+    jnp.exp2: the grid scale must be the exact power of two the core
+    quantizer/calibration uses."""
     x32 = x.astype(jnp.float32)
     fi = jnp.floor(f.astype(jnp.float32) + 0.5)
-    scale = jnp.exp2(fi)
+    scale = _exp2i(fi)
     return (jnp.floor(x32 * scale + epsilon) / scale).astype(x.dtype)

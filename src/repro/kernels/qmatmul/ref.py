@@ -3,6 +3,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from ...core.quantizer import _exp2i
+
 
 def qmatmul_ref(x: jnp.ndarray, w_int: jnp.ndarray,
                 scale: jnp.ndarray) -> jnp.ndarray:
@@ -17,7 +19,7 @@ def pack_ref(w: jnp.ndarray, f: jnp.ndarray):
     """Quantize fp weights [K, N] to int8 + per-channel scale from the HGQ
     fractional bits f [N] (scale = 2^-f)."""
     fi = jnp.floor(f.astype(jnp.float32) + 0.5)
-    scale = jnp.exp2(-fi)
+    scale = _exp2i(-fi)
     m = jnp.clip(jnp.floor(w.astype(jnp.float32) / scale[None, :] + 0.5),
                  -128, 127).astype(jnp.int8)
     return m, scale

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from ..configs import get
 from ..data import DataSpec, make_pipeline
+from ..dist import EFState, ef_compress, ef_init
 from ..dist.axes import set_axes
 from ..dist.sharding import batch_sharding, replicated, shard_tree
 from ..models import model_for
@@ -61,40 +62,68 @@ def main() -> None:
     tcfg = TrainConfig(steps=args.steps, lr=1e-3, beta0=1e-9, beta1=1e-7,
                        ckpt_dir=args.ckpt_dir)
     fwd = lambda p, q, b, mode: M.forward(p, q, b, cfg, mode)
+    # int8/bf16 error-feedback quantization of the synchronized gradient
+    # (residual carries the quantization error so the time-averaged update
+    # stays unbiased).  NOTE: this runs after the data-parallel all-reduce —
+    # it bounds update noise but does not yet shrink collective bytes;
+    # compressing the reduce itself needs a shard_map/custom-psum backward.
+    grad_tx = None
+    ef_state = None
+    if args.grad_compression != "none":
+        grad_tx = lambda g, s: ef_compress(g, s, kind=args.grad_compression)
+        ef_state = ef_init(params)
     step_fn = make_train_step(fwd, lambda out, b: lm_loss(out, b["tokens"]),
-                              tcfg)
+                              tcfg, grad_tx=grad_tx)
     with mesh:
-        jitted = jax.jit(
-            step_fn,
-            in_shardings=(shard_tree(params, mesh, "train"),
-                          shard_tree(qstate, mesh, "train"),
-                          type(opt)(step=replicated(mesh),
-                                    mu=shard_tree(opt.mu, mesh, "train"),
-                                    nu=shard_tree(opt.nu, mesh, "train")),
-                          {"tokens": batch_sharding(mesh, args.batch, 2)},
-                          replicated(mesh)),
-            donate_argnums=(0, 2))
+        in_shardings = (shard_tree(params, mesh, "train"),
+                        shard_tree(qstate, mesh, "train"),
+                        type(opt)(step=replicated(mesh),
+                                  mu=shard_tree(opt.mu, mesh, "train"),
+                                  nu=shard_tree(opt.nu, mesh, "train")),
+                        {"tokens": batch_sharding(mesh, args.batch, 2)},
+                        replicated(mesh))
+        donate = (0, 2)
+        if grad_tx is not None:
+            in_shardings += (EFState(
+                residual=shard_tree(ef_state.residual, mesh, "train")),)
+            donate += (5,)  # the residual threads step-to-step like opt
+        jitted = jax.jit(step_fn, in_shardings=in_shardings,
+                         donate_argnums=donate)
         start = 0
         if args.ckpt_dir:
             last = ckpt_lib.latest_step(args.ckpt_dir)
             if last is not None:
-                start, trees = ckpt_lib.restore(
-                    args.ckpt_dir, last, {"params": params, "qstate": qstate,
-                                          "opt": opt})
+                tmpl = {"params": params, "qstate": qstate, "opt": opt}
+                # EF residual resumes rather than resetting — but only when
+                # the checkpoint has one (a run may turn compression on
+                # mid-stream; restore loads every template key)
+                if ef_state is not None and ckpt_lib.has_tree(
+                        args.ckpt_dir, last, "ef"):
+                    tmpl["ef"] = ef_state
+                start, trees = ckpt_lib.restore(args.ckpt_dir, last, tmpl)
                 params, qstate, opt = (trees["params"], trees["qstate"],
                                        trees["opt"])
+                ef_state = trees.get("ef", ef_state)
                 print(f"resumed from step {start}")
         t0 = time.time()
         for step in range(start, args.steps):
-            params, qstate, opt, m = jitted(params, qstate, opt, pipe(step),
-                                            jnp.int32(step))
+            if grad_tx is not None:
+                params, qstate, opt, m, ef_state = jitted(
+                    params, qstate, opt, pipe(step), jnp.int32(step),
+                    ef_state)
+            else:
+                params, qstate, opt, m = jitted(params, qstate, opt,
+                                                pipe(step), jnp.int32(step))
             if step % max(args.steps // 10, 1) == 0:
                 print(f"step {step}: loss={float(m['loss']):.4f} "
                       f"ebops={float(m['ebops']):.3g}")
             if args.ckpt_dir and step and step % tcfg.ckpt_every == 0:
-                ckpt_lib.save(args.ckpt_dir, step,
-                              {"params": params, "qstate": qstate,
-                               "opt": opt})
+                trees = {"params": params, "qstate": qstate, "opt": opt}
+                if ef_state is not None:
+                    trees["ef"] = ef_state
+                # label = steps applied = next step to run; labelling with
+                # `step` would replay an already-applied batch on resume
+                ckpt_lib.save(args.ckpt_dir, step + 1, trees)
         print(f"done: {args.steps - start} steps in {time.time()-t0:.1f}s")
 
 

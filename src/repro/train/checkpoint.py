@@ -75,6 +75,14 @@ def mark_pareto(path: str) -> None:
     open(os.path.join(path, "PARETO"), "w").close()
 
 
+def has_tree(ckpt_dir: str, step: int, name: str) -> bool:
+    """Whether checkpoint ``step`` stored a tree under ``name`` — callers
+    with optional trees (e.g. the EF residual) probe before templating so
+    layout knowledge stays in this module."""
+    return os.path.exists(os.path.join(ckpt_dir, f"step_{step:08d}",
+                                       f"{name}.npz"))
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
     if not os.path.isdir(ckpt_dir):
         return None

@@ -42,12 +42,20 @@ class TrainConfig:
 
 
 def make_train_step(forward: Forward, loss_fn: LossFn, tcfg: TrainConfig,
-                    lr_sched: Optional[Schedule] = None):
+                    lr_sched: Optional[Schedule] = None,
+                    grad_tx: Optional[Callable] = None):
+    """Build the pure train step.
+
+    With ``grad_tx`` (e.g. ``dist.ef_compress`` partial application: a
+    ``(grads, state) -> (grads, state)`` transform applied after clipping),
+    the step takes and returns one extra ``tx_state`` argument so the
+    error-feedback residual threads through pjit.
+    """
     beta_sched = (constant(tcfg.beta_const) if tcfg.beta_const is not None
                   else log_ramp(tcfg.beta0, tcfg.beta1, tcfg.steps))
     lr_sched = lr_sched or constant(tcfg.lr)
 
-    def step_fn(params, qstate, opt: AdamWState, batch, step):
+    def _step(params, qstate, opt: AdamWState, batch, step, tx_state):
         beta = beta_sched(step)
         lr = lr_sched(step)
 
@@ -60,13 +68,22 @@ def make_train_step(forward: Forward, loss_fn: LossFn, tcfg: TrainConfig,
         (total, (newq, ebops, base)), grads = jax.value_and_grad(
             loss, has_aux=True)(params)
         grads, gnorm = clip_by_global_norm(grads, tcfg.clip_norm)
+        if grad_tx is not None:
+            grads, tx_state = grad_tx(grads, tx_state)
         params, opt = adamw_update(grads, opt, params, lr=lr,
                                    weight_decay=tcfg.weight_decay)
         metrics = {"loss": base, "total": total, "ebops": ebops,
                    "gnorm": gnorm, "beta": beta}
-        return params, newq, opt, metrics
+        return params, newq, opt, metrics, tx_state
 
-    return step_fn
+    if grad_tx is None:
+        def step_fn(params, qstate, opt: AdamWState, batch, step):
+            return _step(params, qstate, opt, batch, step, None)[:4]
+        return step_fn
+
+    def step_fn_tx(params, qstate, opt: AdamWState, batch, step, tx_state):
+        return _step(params, qstate, opt, batch, step, tx_state)
+    return step_fn_tx
 
 
 class Trainer:
@@ -133,12 +150,20 @@ class Trainer:
                 log(f"step {step}: loss={mm['loss']:.4f} "
                     f"ebops={mm['ebops']:.3g} beta={mm['beta']:.2g}")
                 self.history.append({"step": step, **mm})
+            # checkpoint labels are "steps applied" (= next step to run):
+            # after the step_fn above, that is step + 1 — labelling with
+            # `step` would double-apply one batch on resume.  The Pareto
+            # front records the same label so front entries map to their
+            # pinned checkpoint directories.
+            saved_pareto = False
             if self.eval_fn and step and step % tcfg.eval_every == 0:
                 metric, ebops = self.eval_fn(self.params, self.qstate)
-                if self.pareto.offer(metric, ebops, step):
-                    path = self.checkpoint(step, pareto=True)
-            if tcfg.ckpt_dir and step and step % tcfg.ckpt_every == 0:
-                self.checkpoint(step)
+                if self.pareto.offer(metric, ebops, step + 1):
+                    path = self.checkpoint(step + 1, pareto=True)
+                    saved_pareto = True
+            if (tcfg.ckpt_dir and step and step % tcfg.ckpt_every == 0
+                    and not saved_pareto):  # don't clobber the PARETO pin
+                self.checkpoint(step + 1)
         return {"metrics": {k: float(v) for k, v in m.items()},
                 "wall_s": time.time() - t0,
                 "pareto": self.pareto.front()}

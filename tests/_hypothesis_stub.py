@@ -1,0 +1,160 @@
+"""Minimal, dependency-free stand-in for the `hypothesis` API this test
+suite uses, loaded by conftest.py ONLY when the real package is absent
+(this container cannot pip-install).  Deterministic: examples are drawn
+from a per-test seeded PRNG, boundary values first.
+
+Covers: @given, settings.register_profile/load_profile, and the
+strategies floats/integers/lists/data.  Anything else raises loudly.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class settings:  # noqa: N801 - mirrors hypothesis' class name
+    _profiles = {"default": {"max_examples": _DEFAULT_MAX_EXAMPLES}}
+    _current = dict(_profiles["default"])
+
+    def __init__(self, **kwargs):
+        self._kwargs = kwargs
+
+    def __call__(self, fn):          # @settings(...) decorator form
+        fn._stub_settings = self._kwargs
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, **kwargs):
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._current = dict(cls._profiles["default"])
+        cls._current.update(cls._profiles.get(name, {}))
+
+
+class _Strategy:
+    def example(self, rng: random.Random):
+        raise NotImplementedError
+
+    def edges(self):
+        return []
+
+
+class _Floats(_Strategy):
+    def __init__(self, min_value=-1e6, max_value=1e6, allow_nan=False,
+                 allow_infinity=False, width=64):
+        del allow_nan, allow_infinity  # never generated
+        self.lo, self.hi, self.width = float(min_value), float(max_value), width
+
+    def _cast(self, v):
+        return float(np.float32(v)) if self.width == 32 else float(v)
+
+    def example(self, rng):
+        if rng.random() < 0.1:
+            return self._cast(rng.choice(self.edges()))
+        return self._cast(rng.uniform(self.lo, self.hi))
+
+    def edges(self):
+        es = [self.lo, self.hi]
+        if self.lo <= 0.0 <= self.hi:
+            es.append(0.0)
+        if self.lo <= 1.0 <= self.hi:
+            es.append(1.0)
+        return [self._cast(e) for e in es]
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value=0, max_value=100):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def example(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+    def edges(self):
+        return sorted({self.lo, self.hi, min(max(0, self.lo), self.hi)})
+
+
+class _Lists(_Strategy):
+    def __init__(self, elements, min_size=0, max_size=10):
+        self.el, self.lo, self.hi = elements, int(min_size), int(max_size)
+
+    def example(self, rng):
+        n = rng.randint(self.lo, self.hi)
+        return [self.el.example(rng) for _ in range(n)]
+
+    def edges(self):
+        rng = random.Random(0)
+        return [[self.el.example(rng) for _ in range(max(self.lo, 1))]]
+
+
+class _DataObject:
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.example(self._rng)
+
+
+class _Data(_Strategy):
+    def example(self, rng):
+        return _DataObject(rng)
+
+
+class strategies:  # noqa: N801 - accessed as `strategies as st`
+    @staticmethod
+    def floats(*a, **k):
+        return _Floats(*a, **k)
+
+    @staticmethod
+    def integers(*a, **k):
+        return _Integers(*a, **k)
+
+    @staticmethod
+    def lists(*a, **k):
+        return _Lists(*a, **k)
+
+    @staticmethod
+    def data():
+        return _Data()
+
+
+def given(*strats, **kw_strats):
+    if kw_strats:
+        raise NotImplementedError("stub @given supports positional "
+                                  "strategies only")
+
+    def deco(fn):
+        n = settings._current.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+        n = getattr(fn, "_stub_settings", {}).get("max_examples", n)
+
+        @functools.wraps(fn)
+        def wrapper():
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            # boundary combinations first, then random draws
+            edge_lists = [s.edges() or [s.example(rng)] for s in strats]
+            n_edge = min(max(len(e) for e in edge_lists), 4)
+            for i in range(n):
+                if i < n_edge:
+                    args = [e[i % len(e)] for e in edge_lists]
+                    # data() edges are DataObject-free; redraw those live
+                    args = [s.example(rng) if isinstance(s, _Data) else a
+                            for s, a in zip(strats, args)]
+                else:
+                    args = [s.example(rng) for s in strats]
+                try:
+                    fn(*args)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__} falsified with args={args!r}: "
+                        f"{e}") from e
+        # hide the original signature from pytest's fixture resolution
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -1,9 +1,21 @@
+import importlib.util
+import os
+import sys
+
 import jax
 import pytest
 
 # smoke tests and benches see exactly 1 device — the 512-device flag is set
 # ONLY inside repro.launch.dryrun (per the brief).
 jax.config.update("jax_platform_name", "cpu")
+
+# `pip install -e .[test]` brings the real hypothesis; containers without
+# network fall back to the vendored stub (same API subset, deterministic).
+if importlib.util.find_spec("hypothesis") is None:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
 
 
 @pytest.fixture(scope="session")

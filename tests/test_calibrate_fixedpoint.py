@@ -51,6 +51,17 @@ def test_wraparound_overflow_eq1():
     assert float(to_fixed(jnp.float32(-5.0), spec, f)) == 3.0
 
 
+def test_wraparound_exact_at_ulp_off_widths():
+    """b=13 is a width where jnp.exp2 is an ulp off, which corrupted the
+    wrap modulus exactly at the +-2^(b-1) boundary (regression)."""
+    spec = FixedSpec(bits=jnp.float32(13), int_bits=jnp.float32(13),
+                     signed=jnp.bool_(True))
+    f = jnp.float32(0.0)
+    assert float(to_fixed(jnp.float32(4095.0), spec, f)) == 4095.0
+    assert float(to_fixed(jnp.float32(4096.0), spec, f)) == -4096.0
+    assert float(to_fixed(jnp.float32(-4097.0), spec, f)) == 4095.0
+
+
 def test_unsigned_wraparound_eq2():
     spec = FixedSpec(bits=jnp.float32(2), int_bits=jnp.float32(2),
                      signed=jnp.bool_(False))

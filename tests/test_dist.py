@@ -1,0 +1,236 @@
+"""Unit tests for the repro.dist subsystem itself (axes / sharding / perf /
+error-feedback compression) — the sharding *rule* tests against fake meshes
+live in test_recurrent_sharding.py; this file covers the rest of the
+contract."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import EFState, ef_compress, ef_init
+from repro.dist.axes import (constrain, get_model_size, reset_axes,
+                             set_axes)
+from repro.dist.perf import (cast_for_matmul, get_compute_dtype,
+                             pack_params_for_serving, set_compute_dtype,
+                             unpack_weight)
+from repro.dist.sharding import spec_for_param, shard_tree
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+    devices = types.SimpleNamespace(shape=(16, 16))
+
+
+# ------------------------------- axes --------------------------------------
+
+def test_constrain_identity_on_single_device():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 2, 16))
+    for pat in ("b.m.", "b...", "....", ".bm."[:4]):
+        y = constrain(x, pat)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+    # and it is jit-traceable as an identity
+    y = jax.jit(lambda v: constrain(v, "b.m."))(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+def test_constrain_pattern_validation():
+    x = jnp.zeros((2, 3))
+    with pytest.raises(ValueError):
+        constrain(x, "b.m")        # rank mismatch
+    with pytest.raises(ValueError):
+        constrain(x, "bx")         # unknown axis char
+
+
+def test_axes_registry_roundtrip():
+    assert get_model_size() == 1
+    set_axes(("pod", "data"), "model", data_size=32, model_size=16)
+    try:
+        assert get_model_size() == 16
+    finally:
+        reset_axes()
+    assert get_model_size() == 1
+
+
+# ----------------------------- sharding ------------------------------------
+
+class K:
+    def __init__(self, key):
+        self.key = key
+
+
+def _spec(path, shape, mode="train"):
+    return spec_for_param([K(k) for k in path], shape, _FakeMesh(), mode)
+
+
+def test_spec_low_rank_replicates():
+    assert _spec(("bias", "w"), (4864,)) == P(None)
+    assert _spec(("out_f",), ()) == P()
+
+
+def test_spec_square_tie_prefers_last_axis():
+    assert _spec(("kernel", "w"), (1024, 1024)) == P("data", "model")
+
+
+def test_spec_per_channel_f_leaf():
+    # (1, N) fractional-bit tensors: broadcast axis replicates, N -> model
+    assert _spec(("kernel", "f"), (1, 4864)) == P(None, "model")
+
+
+def test_spec_serve_mode_non_divisible():
+    assert _spec(("kernel", "w"), (7, 13), mode="serve") == P(None, None)
+
+
+def test_spec_bad_mode_raises():
+    with pytest.raises(ValueError):
+        _spec(("kernel", "w"), (8, 8), mode="decode")
+
+
+def test_spec_from_real_tree_paths():
+    """spec_for_param must understand tree_flatten_with_path key types
+    (DictKey etc.), not just the fake .key records."""
+    tree = {"kernel": {"w": jax.ShapeDtypeStruct((896, 4864), jnp.float32),
+                       "f": jax.ShapeDtypeStruct((1, 4864), jnp.float32)},
+            "bias": {"w": jax.ShapeDtypeStruct((4864,), jnp.float32)},
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    flat = dict(jax.tree_util.tree_flatten_with_path(tree)[0])
+    specs = {tuple(str(getattr(k, "key", k)) for k in path):
+             spec_for_param(path, leaf.shape, _FakeMesh(), "train")
+             for path, leaf in flat.items()}
+    assert specs[("kernel", "w")] == P("data", "model")
+    assert specs[("kernel", "f")] == P(None, "model")
+    assert specs[("bias", "w")] == P(None)
+    assert specs[("step",)] == P()
+
+
+def test_shard_tree_on_real_mesh():
+    """On the 1x1 host mesh everything replicates (axis size 1 never
+    shards) but the NamedSharding tree must build and jit-apply."""
+    from jax.sharding import NamedSharding
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tree = {"kernel": {"w": jnp.zeros((8, 16)), "f": jnp.zeros((1, 16))}}
+    sh = shard_tree(tree, mesh, "train")
+    assert all(isinstance(s, NamedSharding)
+               for s in jax.tree.leaves(sh))
+    assert sh["kernel"]["w"].spec == P(None, None)
+    with mesh:
+        out = jax.jit(lambda t: t, in_shardings=(sh,))(tree)
+    assert out["kernel"]["w"].shape == (8, 16)
+
+
+# ------------------------------- perf --------------------------------------
+
+def test_compute_dtype_cast():
+    assert get_compute_dtype() is None
+    x = jnp.ones((3, 3), jnp.float32)
+    ids = jnp.ones((3,), jnp.int32)
+    assert cast_for_matmul(x).dtype == jnp.float32
+    set_compute_dtype(jnp.bfloat16)
+    try:
+        assert cast_for_matmul(x).dtype == jnp.bfloat16
+        assert cast_for_matmul(ids).dtype == jnp.int32  # ints untouched
+    finally:
+        set_compute_dtype(None)
+
+
+def test_pack_unpack_roundtrip_on_grid():
+    """Weights already on the 2^-f grid survive packing exactly."""
+    key = jax.random.PRNGKey(1)
+    f = 6.0
+    # keep |w| < 127 * 2^-f so the int8 mantissa never saturates
+    w = jnp.round(jnp.clip(jax.random.normal(key, (32, 16)) * 0.5,
+                           -1.9, 1.9) * 2.0 ** f) / 2.0 ** f
+    p = {"kernel": {"w": w, "f": jnp.full((32, 16), f)},
+         "bias": {"w": jnp.zeros((16,))}}
+    packed = pack_params_for_serving(p)
+    assert packed["kernel"]["w_int8"].dtype == jnp.int8
+    assert "w" in packed["bias"], "biases must not be packed"
+    got = unpack_weight(packed["kernel"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(w), atol=1e-7)
+
+
+def test_pack_never_saturates_large_weights():
+    """Per-parameter f can put >8 bits in one column (regression: the
+    column-max grid clipped w=2.0 at f=[2,9] to 127 * 2^-9 = 0.248 — an
+    8x silent error on the *large* weight).  The exponent must cap so big
+    weights stay exact and only sub-grid small ones floor."""
+    w = jnp.array([[2.0], [0.001953125]])          # 2^1 and 2^-9
+    f = jnp.array([[2.0], [9.0]])
+    packed = pack_params_for_serving({"k": {"w": w, "f": f}})["k"]
+    got = unpack_weight(packed)
+    step = float(packed["scale"].max())
+    assert abs(float(got[0, 0]) - 2.0) <= step / 2, float(got[0, 0])
+    assert abs(float(got[1, 0])) <= step            # floored, not exploded
+    # homogeneous f with int bits beyond 8 total: w=3.0 at f=6 needs 192
+    w2 = jnp.array([[3.0], [-3.0]])
+    p2 = pack_params_for_serving({"k": {"w": w2, "f": jnp.full((2, 1), 6.0)}})
+    got2 = unpack_weight(p2["k"])
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(w2),
+                               atol=float(p2["k"]["scale"].max()) / 2)
+
+
+def test_pack_skips_conv_kernels():
+    p = {"kernel": {"w": jnp.zeros((3, 3, 4, 8)), "f": jnp.zeros(())}}
+    packed = pack_params_for_serving(p)
+    assert "w" in packed["kernel"] and "w_int8" not in packed["kernel"]
+
+
+def test_pack_is_eval_shape_traceable():
+    abs_p = {"kernel": {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32),
+                        "f": jax.ShapeDtypeStruct((1, 4), jnp.float32)}}
+    out = jax.eval_shape(pack_params_for_serving, abs_p)
+    assert out["kernel"]["w_int8"].shape == (8, 4)
+    assert out["kernel"]["w_int8"].dtype == jnp.int8
+
+
+def test_packed_weights_flow_through_get_qw():
+    from repro.nn.common import get_qw
+    from repro.core import hgq
+    w = jnp.round(jax.random.normal(jax.random.PRNGKey(2), (16, 8)) * 4) / 4
+    p = {"kernel": {"w": w, "f": jnp.full((16, 8), 2.0)}}
+    qt_ref = get_qw(p["kernel"], hgq.EVAL)
+    qt_packed = get_qw(pack_params_for_serving(p)["kernel"], hgq.EVAL)
+    np.testing.assert_allclose(np.asarray(qt_packed.q), np.asarray(qt_ref.q),
+                               atol=1e-6)
+
+
+# --------------------------- error feedback --------------------------------
+
+def test_ef_unsupported_kind_raises():
+    grads = {"w": jnp.ones((4,))}
+    st = ef_init(grads)
+    with pytest.raises(ValueError, match="topk"):
+        ef_compress(grads, st, kind="topk")
+    with pytest.raises(ValueError):
+        ef_compress(grads, st, kind="fp4")
+
+
+def test_ef_none_is_passthrough():
+    grads = {"w": jnp.linspace(-1.0, 1.0, 7)}
+    st = ef_init(grads)
+    sent, st2 = ef_compress(grads, st, kind="none")
+    np.testing.assert_array_equal(np.asarray(sent["w"]),
+                                  np.asarray(grads["w"]))
+    assert float(jnp.max(jnp.abs(st2.residual["w"]))) == 0.0
+
+
+def test_ef_bf16_residual_bounded():
+    grads = {"w": jnp.linspace(-1e-3, 1e-3, 101)}
+    st = ef_init(grads)
+    for _ in range(20):
+        sent, st = ef_compress(grads, st, kind="bf16")
+        # bf16 has ~8 mantissa bits: residual < 2^-8 * max|e|
+        assert float(jnp.max(jnp.abs(st.residual["w"]))) < 1e-5
+
+
+def test_ef_state_is_jit_compatible():
+    grads = {"w": jnp.linspace(-1.0, 1.0, 33)}
+    step = jax.jit(lambda g, s: ef_compress(g, s, kind="int8"))
+    sent, st = step(grads, ef_init(grads))
+    assert isinstance(st, EFState)
+    # sent values lie on the int8 grid of max|e|
+    scale = float(jnp.max(jnp.abs(grads["w"]))) / 127.0
+    m = np.asarray(sent["w"]) / scale
+    np.testing.assert_allclose(m, np.round(m), atol=1e-4)

@@ -101,6 +101,39 @@ def test_occupied_bits_vs_python(m, f):
     assert got == want
 
 
+def test_occupied_bits_no_int32_overflow():
+    """round(w * 2^f) exceeds int32 for large f; the mantissa-normalized
+    path must keep exact counts (regression: the old int32 cast wrapped
+    negative and returned garbage)."""
+    # 1.0 at f=40: mantissa 2^40 -> exactly 1 occupied bit
+    assert float(occupied_bits(jnp.float32(1.0), jnp.float32(40.0))) == 1
+    # 1.5 = 0b11 * 2^-1 -> 2 occupied bits at any f
+    assert float(occupied_bits(jnp.float32(1.5), jnp.float32(30.0))) == 2
+    # 0.140625 = 0b1001 * 2^-6 -> 4 bits, stable across huge f
+    for f in (6.0, 25.0, 31.0, 60.0):
+        assert float(occupied_bits(jnp.float32(0.140625),
+                                   jnp.float32(f))) == 4
+    # group variant: same normalization path
+    w = jnp.array([1.0, 1.5, 0.0])
+    assert float(group_occupied_bits(w, jnp.float32(40.0), ())) == 2.0
+    # beyond float32's exponent range the clamp keeps counts finite/right
+    assert float(occupied_bits(jnp.float32(1.0), jnp.float32(128.0))) == 1
+    assert float(group_occupied_bits(w, jnp.float32(128.0), ())) == 2.0
+    # |w| * 2^f overflowing float32 must not corrupt the count either
+    assert float(occupied_bits(jnp.float32(2.0), jnp.float32(127.0))) == 1
+    assert float(occupied_bits(jnp.float32(96.0), jnp.float32(125.0))) == 2
+    assert float(group_occupied_bits(jnp.array([2.0, 3.0]),
+                                     jnp.float32(127.0), ())) == 2.0
+
+
+def test_int_bits_exact_at_powers_of_two():
+    """floor(log2(2^13)) is 12 via jnp.log2 on some backends (one ulp
+    low); Eq. 3 must still allocate 14 bits for vmax=8192 (regression)."""
+    for k in (13, 15, 26, 27, 30):
+        assert float(int_bits_from_range(0.0, float(2 ** k))) == k + 1, k
+        assert float(int_bits_from_range(-float(2 ** k), 0.0)) == k, k
+
+
 def test_group_occupied_bits():
     w = jnp.array([0.5, 0.25, 0.0])
     # msb of 0.5 = -1, lsb of 0.25 = -2 -> 2 bits for the group

@@ -122,6 +122,27 @@ def test_pareto_front_invariants():
     assert pf.best(max_ebops=120).metric == 0.9
 
 
+def test_auto_checkpoint_resume_replays_identically(tmp_path):
+    """The *in-loop* auto-checkpoint (ckpt_every) must label with steps
+    APPLIED, not the loop index — the old `step` label re-applied one
+    batch on every resume (regression)."""
+    import dataclasses
+    tr_ref, _ = _make_trainer(None, steps=6)
+    tr_ref.run(steps=6, log=lambda *a: None)
+    ref = jax.tree.leaves(tr_ref.params)
+
+    tr1, _ = _make_trainer(str(tmp_path), steps=6)
+    tr1.tcfg = dataclasses.replace(tr1.tcfg, ckpt_every=2)
+    tr1.run(steps=5, log=lambda *a: None)     # auto-ckpt after applying 4
+    tr2, _ = _make_trainer(str(tmp_path), steps=6)
+    assert tr2.maybe_resume()
+    assert tr2.start_step == 5, tr2.start_step
+    tr2.run(steps=6, log=lambda *a: None)
+    for got, want in zip(jax.tree.leaves(tr2.params), ref):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-6)
+
+
 def test_gradient_compression_error_feedback():
     grads = {"w": jnp.linspace(-1e-3, 1e-3, 101)}
     st = ef_init(grads)
