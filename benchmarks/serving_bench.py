@@ -1,0 +1,125 @@
+"""Continuous-batching serving benchmark: decode tokens/sec, fp vs packed.
+
+Serves an identical ragged workload through ``repro.serving.Engine`` twice
+— bf16/fp weights and the HGQ int8-packed tree (``packed=True``, decode
+projections on ``kernels.qmatmul.qmatmul_any``) — and reports two numbers
+per mode (compile excluded via a warmup run): ``decode_tokens_per_sec``,
+pure jitted decode ticks on a saturated batch (prefill untimed — the
+steady-state hot-path number), and ``mixed_tokens_per_sec``, a full
+continuous-batching run including chunked prefill and slot churn (the
+end-to-end serving number; shifts with the prompt-length mix).  Writes a
+JSON artifact so CI accumulates the perf trajectory.
+
+    PYTHONPATH=src python benchmarks/serving_bench.py --smoke
+    PYTHONPATH=src python benchmarks/serving_bench.py \
+        --arch qwen2-0.5b --requests 16 --max-new 32 --out BENCH_serving.json
+
+On this CPU container the Pallas kernel runs in interpret mode, so the
+packed path's *wall time* is not the TPU story (the structural bytes-moved
+numbers in the JSON are); on TPU the same flag compiles the kernel.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+
+def ragged_requests(vocab: int, n: int, max_new: int, seed: int = 7):
+    from repro.serving import Request
+    key = jax.random.PRNGKey(seed)
+    reqs = []
+    for i in range(n):
+        plen = 2 + (i * 5) % 13          # ragged prompt lengths 2..14
+        toks = jax.random.randint(jax.random.fold_in(key, i), (plen,), 1,
+                                  vocab)
+        reqs.append(Request(prompt=[int(t) for t in toks], max_new=max_new))
+    return reqs
+
+
+def bench_engine(M, params, qstate, cfg, *, packed: bool, n_requests: int,
+                 max_new: int, batch_slots: int, max_len: int) -> dict:
+    from repro.serving import Engine
+    eng = Engine(M, params, qstate, cfg, batch_slots=batch_slots,
+                 max_len=max_len, prefill_chunk=8, packed=packed)
+    # warmup: compile decode/prefill/sample once
+    eng.run(ragged_requests(cfg.vocab, batch_slots, 4))
+    # decode-only: saturate every slot (prefill + first token untimed),
+    # then time nothing but jitted ragged decode ticks
+    dec_reqs = ragged_requests(cfg.vocab, batch_slots, max_new, seed=11)
+    for r in dec_reqs:
+        if not eng.submit(r):
+            raise RuntimeError("engine rejected a warm decode request")
+    t0 = time.perf_counter()
+    while any(s is not None for s in eng.slot_req):
+        eng.step()
+    dt_dec = time.perf_counter() - t0
+    dec_tokens = sum(len(r.out) for r in dec_reqs) - len(dec_reqs)
+    # mixed: full continuous-batching run (chunked prefill + slot churn)
+    reqs = ragged_requests(cfg.vocab, n_requests, max_new)
+    t0 = time.perf_counter()
+    eng.run(reqs)
+    dt = time.perf_counter() - t0
+    new_tokens = sum(len(r.out) for r in reqs)
+    return {"mode": "packed" if packed else "fp",
+            "requests": n_requests,
+            "decode_tokens": dec_tokens, "decode_wall_s": round(dt_dec, 4),
+            "decode_tokens_per_sec": round(dec_tokens / dt_dec, 2),
+            "mixed_tokens": new_tokens, "mixed_wall_s": round(dt, 4),
+            "mixed_tokens_per_sec": round(new_tokens / dt, 2)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (published) config, not smoke")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny workload, smoke config")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--batch-slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests, args.max_new = 6, 6
+
+    from repro.configs import get
+    from repro.models import model_for
+    from repro.serving.packed import pack_tree, packed_nbytes
+
+    cfg = get(args.arch, smoke=not args.full)
+    M = model_for(cfg)
+    params, qstate = M.init(jax.random.PRNGKey(0), cfg)
+
+    rows = []
+    for packed in (False, True):
+        row = bench_engine(M, params, qstate, cfg, packed=packed,
+                           n_requests=args.requests, max_new=args.max_new,
+                           batch_slots=args.batch_slots,
+                           max_len=args.max_len)
+        rows.append(row)
+        print(f"serving.{row['mode']}: decode "
+              f"{row['decode_tokens_per_sec']} tok/s, mixed "
+              f"{row['mixed_tokens_per_sec']} tok/s "
+              f"({row['mixed_tokens']} tokens / {row['mixed_wall_s']}s)")
+
+    fp_b, q_b = packed_nbytes(params), packed_nbytes(pack_tree(params))
+    result = {
+        "bench": "serving", "arch": cfg.name,
+        "backend": jax.default_backend(),
+        "batch_slots": args.batch_slots, "max_len": args.max_len,
+        "weight_bytes_fp": fp_b, "weight_bytes_packed": q_b,
+        "hbm_saving_x": round(fp_b / q_b, 2),
+        "runs": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,19 +1,49 @@
-"""Batched serving example: continuous-batching engine + HGQ-packed weights.
+"""Continuous-batching serving example: ragged per-slot decode + HGQ
+int8-packed weights on the decode hot path.
 
-Runs a reduced llama-family model, serves a batch of requests through the
-KV-cache decode path, and shows the packed-weight (int8 + 2^-f scale)
-matmul agreeing with the float path — the TPU serving win of HGQ
-(DESIGN.md SS2: decode is HBM-bound; packed weights halve the bytes).
+Runs a reduced llama-family model, serves a ragged workload (prompts of
+different lengths joining and leaving mid-run) through the single jitted
+per-slot decode step, then re-serves it with ``packed=True`` — decode
+projections running on the fused int8 dequant-matmul Pallas kernel
+(``kernels/qmatmul``), the TPU serving win of HGQ (DESIGN.md SS2: decode
+is HBM-bound; packed weights halve the streamed bytes).
 
     PYTHONPATH=src python examples/serve_llm.py
 """
+import time
+
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get
-from repro.kernels import pack_weights, qmatmul_any
 from repro.models import model_for
-from repro.serving import Engine, Request
+from repro.serving import Engine, Request, SamplingConfig, generate
+from repro.serving.packed import pack_tree, packed_nbytes
+
+
+def make_requests(vocab):
+    key = jax.random.PRNGKey(7)
+    lens = [3, 9, 2, 7, 12, 5]
+    reqs = []
+    for i, n in enumerate(lens):
+        toks = jax.random.randint(jax.random.fold_in(key, i), (n,), 1, vocab)
+        reqs.append(Request(prompt=[int(t) for t in toks], max_new=8))
+    # one sampled request in the same batch as the greedy ones
+    reqs[-1].sampling = SamplingConfig(temperature=0.8, top_k=16)
+    return reqs
+
+
+def serve(M, params, qstate, cfg, *, packed):
+    eng = Engine(M, params, qstate, cfg, batch_slots=4, max_len=64,
+                 prefill_chunk=8, packed=packed)
+    reqs = make_requests(cfg.vocab)
+    t0 = time.perf_counter()
+    eng.run(reqs)
+    dt = time.perf_counter() - t0
+    new_tokens = sum(len(r.out) for r in reqs)
+    tag = "packed" if packed else "fp"
+    print(f"[{tag}] {len(reqs)} requests, {new_tokens} new tokens "
+          f"in {dt:.2f}s ({new_tokens / dt:.1f} tok/s incl. compile)")
+    return reqs
 
 
 def main():
@@ -21,29 +51,28 @@ def main():
     M = model_for(cfg)
     params, qstate = M.init(jax.random.PRNGKey(0), cfg)
 
-    # ---- continuous-batching engine over the KV-cache decode path ----
-    eng = Engine(M, params, qstate, cfg, batch_slots=4, max_len=64)
-    reqs = [Request(prompt=[1 + i, 7, 42], max_new=8) for i in range(6)]
-    eng.run(reqs)
+    # ---- fp engine: ragged continuous batching -----------------------
+    reqs = serve(M, params, qstate, cfg, packed=False)
     for i, r in enumerate(reqs):
-        print(f"request {i}: prompt={r.prompt} -> {r.out}")
+        print(f"  request {i}: prompt[{len(r.prompt)}] -> {r.out}")
 
-    # ---- packed-weight serving path (per-channel trained bits) ----
-    lm_head = params["embed"]["table"]  # tied embeddings
-    w = lm_head["w"].T                  # [d, vocab]
-    f = lm_head.get("f")
-    f_cols = jnp.broadcast_to(jnp.asarray(f).T, w.shape) if f is not None \
-        else jnp.full(w.shape, 6.0)
-    w_int, scale = pack_weights(w, jnp.max(f_cols, axis=0))
-    x = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.d_model))
-    y_packed = qmatmul_any(x, w_int, scale)
-    y_float = x @ (w_int.astype(jnp.float32) * scale[None, :])
-    err = float(jnp.max(jnp.abs(y_packed - y_float)))
-    bytes_bf16 = w.size * 2
-    bytes_int8 = w_int.size + 4 * scale.size
-    print(f"packed lm_head: max|err|={err:.2e}  "
-          f"bytes {bytes_bf16} -> {bytes_int8} "
-          f"({bytes_bf16 / bytes_int8:.2f}x HBM saving at decode)")
+    # ---- packed engine: int8 weights on the decode path --------------
+    packed_reqs = serve(M, params, qstate, cfg, packed=True)
+    greedy = [i for i, r in enumerate(reqs) if r.sampling is None]
+    agree = sum(reqs[i].out == packed_reqs[i].out for i in greedy)
+    print(f"  greedy packed-vs-fp request agreement: {agree}/{len(greedy)}")
+    fp_b, q_b = packed_nbytes(params), packed_nbytes(pack_tree(params))
+    print(f"  weight bytes {fp_b} -> {q_b} "
+          f"({fp_b / q_b:.2f}x HBM saving at decode)")
+
+    # ---- per-request greedy reference (what the tests assert) --------
+    import jax.numpy as jnp
+    r = reqs[0]
+    ref = generate(M, params, qstate, cfg,
+                   jnp.asarray([r.prompt], jnp.int32), r.max_new,
+                   cache_len=64)
+    print(f"  engine == generate() for request 0: "
+          f"{[int(t) for t in ref[0]] == r.out}")
 
 
 if __name__ == "__main__":

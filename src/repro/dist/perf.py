@@ -26,8 +26,6 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from ..core.quantizer import _exp2i, floor_log2
-
 _COMPUTE_DTYPE: Optional[Any] = None
 
 
@@ -51,6 +49,44 @@ def cast_for_matmul(x: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# packed-matmul routing (serving/packed.py)
+# ---------------------------------------------------------------------------
+
+_PACKED_MATMUL = False
+
+
+def set_packed_matmul(on: bool) -> None:
+    """Route dense projections over int8-packed kernels onto the Pallas
+    ``kernels.qmatmul.qmatmul_any`` path (read at trace time, like the
+    compute dtype).  Off: packed kernels dequantize and use ``jnp.matmul``
+    (XLA fuses the dequant)."""
+    global _PACKED_MATMUL
+    _PACKED_MATMUL = bool(on)
+
+
+def get_packed_matmul() -> bool:
+    return _PACKED_MATMUL
+
+
+class packed_matmul:
+    """Context manager: trace/run the enclosed computation with the packed
+    qmatmul routing set to ``on`` (restores the previous value on exit)."""
+
+    def __init__(self, on: bool = True):
+        self.on = on
+        self.prev = None
+
+    def __enter__(self):
+        self.prev = _PACKED_MATMUL
+        set_packed_matmul(self.on)
+        return self
+
+    def __exit__(self, *exc):
+        set_packed_matmul(self.prev)
+        return False
+
+
+# ---------------------------------------------------------------------------
 # HGQ int8 serving-weight packing
 # ---------------------------------------------------------------------------
 
@@ -67,41 +103,27 @@ def _packable(name: str, w) -> bool:
 
 
 def _pack_one(p: Dict[str, Any]) -> Dict[str, Any]:
-    w = jnp.asarray(p["w"])
-    f = p.get("f")
-    w32 = w.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(w32), axis=-2, keepdims=True)
-    if f is not None:
-        # per-output-channel grid from the trained fractional bits: reduce
-        # over the contraction axis (-2) only, so stacked-layer / expert
-        # leading axes keep their own scales.  With per-parameter f the
-        # column max can exceed what 8 bits hold (int_bits + frac_bits > 8),
-        # so cap fi at the largest exponent whose mantissa fits in +-127:
-        # saturating the big weights corrupts the matmul far worse than
-        # flooring the small ones.
-        fi = jnp.floor(jnp.broadcast_to(
-            jnp.asarray(f, jnp.float32), w.shape) + 0.5)
-        fi = jnp.max(fi, axis=-2, keepdims=True)
-        fi_cap = floor_log2(127.0 / jnp.maximum(amax, 1e-12))
-        fi = jnp.minimum(fi, fi_cap)
-        # the cap divides two floats, so it can still be one too high at
-        # the boundary; back off where the mantissa would saturate
-        fi = jnp.where(jnp.floor(amax * _exp2i(fi) + 0.5) > 127.0,
-                       fi - 1.0, fi)
-        scale = _exp2i(-fi)
-    else:
-        scale = jnp.maximum(amax, 1e-12) / 127.0
-    m = jnp.clip(jnp.floor(w32 / scale + 0.5), -128, 127)
-    out = {"w_int8": m.astype(jnp.int8), "scale": scale.astype(jnp.float32)}
-    if f is not None:
-        out["f"] = f
+    """One matmul-weight dict {'w', 'f'?} -> {'w_int8', 'scale', 'f'?}.
+
+    The per-output-channel power-of-two grid (2^-f at the trained bits,
+    capped so the channel amax fits +-127; with no 'f' the cap alone) and
+    the int8 mantissas come from the single shared leaf packer
+    ``kernels.qmatmul.pack_linear`` — the same representation the fused
+    dequant-matmul kernel consumes.  Scale keeps a broadcastable
+    ``[..., 1, N]`` shape for ``unpack_weight``."""
+    from ..kernels.qmatmul.ops import pack_linear
+    m, scale = pack_linear(p["w"], p.get("f"))
+    out = {"w_int8": m, "scale": scale[..., None, :].astype(jnp.float32)}
+    if p.get("f") is not None:
+        out["f"] = p["f"]
     return out
 
 
 def pack_params_for_serving(params: Any) -> Any:
     """Rewrite matmul weights to int8 + per-channel scale (see module doc).
 
-    Structure-preserving everywhere else; safe to call on abstract
+    Structure-preserving everywhere else (including list-of-layer nodes,
+    e.g. Griffin remainder blocks); safe to call on abstract
     (``ShapeDtypeStruct``) trees under ``jax.eval_shape``.
     """
     def walk(obj, name=""):
@@ -109,6 +131,8 @@ def pack_params_for_serving(params: Any) -> Any:
             if "w" in obj and _packable(name, obj["w"]):
                 return _pack_one(obj)
             return {k: walk(v, k) for k, v in obj.items()}
+        if isinstance(obj, list):
+            return [walk(v, name) for v in obj]
         return obj
     return walk(params)
 

@@ -11,13 +11,42 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .kernel import qmatmul
 from .ref import pack_ref, qmatmul_ref
+
+
+def default_interpret() -> bool:
+    """Pallas execution mode for the current backend: compiled on TPU,
+    interpreted elsewhere (the kernel uses TPU VMEM scratch semantics)."""
+    return jax.default_backend() != "tpu"
+
+
+def channel_bits(w: jax.Array, f: Optional[jax.Array]) -> jax.Array:
+    """Per-output-channel fractional bits for int8 packing of ``w [..., K,
+    N]``: the channel max of the trained ``f`` (every weight in the channel
+    stays exactly representable), capped so the channel amax fits +-127 —
+    saturating the big weights corrupts the matmul far worse than flooring
+    the small ones.  With ``f=None`` the cap itself is the (power-of-two)
+    scale.  Shared by serving/packed.py and dist.perf packing."""
+    from ...core.quantizer import _exp2i, floor_log2
+    w32 = jnp.asarray(w, jnp.float32)
+    amax = jnp.max(jnp.abs(w32), axis=-2)
+    fcap = floor_log2(127.0 / jnp.maximum(amax, 1e-12))
+    if f is None:
+        fi = fcap
+    else:
+        fi = jnp.max(jnp.floor(jnp.broadcast_to(
+            jnp.asarray(f, jnp.float32), w32.shape) + 0.5), axis=-2)
+        fi = jnp.minimum(fi, fcap)
+    # the cap divides two floats, so it can be one too high at the
+    # boundary; back off where the mantissa would still saturate
+    return jnp.where(jnp.floor(amax * _exp2i(fi) + 0.5) > 127.0,
+                     fi - 1.0, fi)
 
 
 def pack_weights(w: jax.Array, f: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -34,11 +63,31 @@ def pack_weights(w: jax.Array, f: jax.Array) -> Tuple[jax.Array, jax.Array]:
     return pack_ref(w, fcol)
 
 
+def pack_linear(w: jax.Array, f: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """``w [..., K, N]`` (leading stacked-layer/expert axes allowed) ->
+    ``(w_int8 [..., K, N], scale [..., N])``: :func:`pack_weights` at the
+    capped per-channel bits of :func:`channel_bits`.  The single leaf
+    packer behind serving/packed.py and dist.perf packing."""
+    w32 = jnp.asarray(w, jnp.float32)
+    fi = channel_bits(w32, f)
+    if w32.ndim == 2:
+        return pack_weights(w32, fi)
+    lead = w32.shape[:-2]
+    m, scale = jax.vmap(pack_weights)(
+        w32.reshape((-1,) + w32.shape[-2:]),
+        fi.reshape((-1, fi.shape[-1])))
+    return m.reshape(w32.shape), scale.reshape(lead + (w32.shape[-1],))
+
+
 def qmatmul_any(x: jax.Array, w_int: jax.Array, scale: jax.Array, *,
-                interpret: bool = True, bm: int = 128, bn: int = 128,
-                bk: int = 512) -> jax.Array:
+                interpret: Optional[bool] = None, bm: int = 128,
+                bn: int = 128, bk: int = 512) -> jax.Array:
     """x [..., K] @ packed w [K, N]: flattens leading dims and pads to the
-    (8, 128) tile grid."""
+    (8, 128) tile grid.  ``interpret=None`` selects per backend
+    (:func:`default_interpret`); pass a bool to override."""
+    if interpret is None:
+        interpret = default_interpret()
     K, N = w_int.shape
     lead = x.shape[:-1]
     M = math.prod(lead) if lead else 1

@@ -182,13 +182,16 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool = False,
             return M.decode_step(p, q, c, tokens, pos, cfg)
 
         with mesh:
+            # per-slot position vector [B]: the continuous-batching ragged
+            # decode step (serving/engine.py) — every slot at its own offset
             jitted = jax.jit(serve_step,
                              in_shardings=(params_sh, qstate_sh, caches_sh,
                                            batch_sh["tokens"],
                                            replicated(mesh)))
             lowered = jitted.lower(params_abs, qstate_abs, caches_abs,
                                    batch_abs["tokens"],
-                                   jax.ShapeDtypeStruct((), jnp.int32))
+                                   jax.ShapeDtypeStruct(
+                                       (shape.global_batch,), jnp.int32))
             compiled = lowered.compile()
 
     set_compute_dtype(None)

@@ -38,6 +38,9 @@ def main() -> None:
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=200,
+                    help="checkpoint every N steps (makes the EF-residual "
+                         "resume path drivable in short runs)")
     ap.add_argument("--grad-compression", choices=["none", "bf16", "int8"],
                     default="none")
     args = ap.parse_args()
@@ -60,7 +63,7 @@ def main() -> None:
     pipe = make_pipeline(DataSpec(kind="lm", batch=args.batch, seq=args.seq,
                                   vocab=cfg.vocab))
     tcfg = TrainConfig(steps=args.steps, lr=1e-3, beta0=1e-9, beta1=1e-7,
-                       ckpt_dir=args.ckpt_dir)
+                       ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
     fwd = lambda p, q, b, mode: M.forward(p, q, b, cfg, mode)
     # int8/bf16 error-feedback quantization of the synchronized gradient
     # (residual carries the quantization error so the time-averaged update

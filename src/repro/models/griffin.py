@@ -15,7 +15,8 @@ import jax.numpy as jnp
 from ..core import hgq
 from ..core.hgq import Aux, QTensor
 from ..dist.axes import constrain
-from ..nn.attention import AttnConfig, GQAAttention, KVCache
+from ..nn.attention import (AttnConfig, GQAAttention, KVCache,
+                            decode_positions)
 from ..nn.basic import HDense, HEmbedding, RMSNorm
 from ..nn.mlp import GLUMLP
 from ..nn.recurrent import GriffinState, RecurrentBlock, RGLRUConfig
@@ -227,10 +228,13 @@ class GriffinLM:
 
     @staticmethod
     def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-                   dtype=jnp.bfloat16) -> GriffinCaches:
+                   dtype=jnp.bfloat16, ring_slack: int = 0) -> GriffinCaches:
         units, rem, natt = _layer_counts(cfg)
         nrec = 2 * units + rem
-        W = min(max_len, cfg.window or max_len)
+        # ring_slack: see TransformerLM.init_cache — keeps multi-token
+        # chunks exact on the local-attention ring buffers
+        W = min(max_len, (cfg.window + ring_slack) if cfg.window
+                else max_len)
         rg = _rg_cfg(cfg)
         return GriffinCaches(
             conv=jnp.zeros((nrec, batch, rg.conv_width - 1, rg.d_rnn),
@@ -247,7 +251,7 @@ class GriffinLM:
         newq: Dict[str, Any] = {}
         e, newq["embed"] = HEmbedding.apply(p["embed"], q["embed"], tokens,
                                             mode=mode, aux=aux)
-        positions = cache_pos + jnp.arange(S)
+        positions = decode_positions(cache_pos, S)
         x, nq, new_caches, _ = GriffinLM._stack(p, q, e.q, positions, cfg,
                                                 mode, caches, cache_pos)
         h, _ = RMSNorm.apply(p["final_norm"], q["final_norm"], x, mode=mode,

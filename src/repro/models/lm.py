@@ -19,7 +19,8 @@ import jax.numpy as jnp
 from ..core import hgq
 from ..core.hgq import Aux, QTensor
 from ..dist.axes import constrain
-from ..nn.attention import AttnConfig, GQAAttention, KVCache
+from ..nn.attention import (AttnConfig, GQAAttention, KVCache,
+                            decode_positions)
 from ..nn.basic import HDense, HEmbedding, LayerNorm, RMSNorm
 from ..nn.common import HGQConfig
 from ..nn.mlp import GLUMLP, MLP
@@ -168,8 +169,21 @@ class TransformerLM:
     @staticmethod
     def _logits(p, q, newq, h: QTensor, cfg: ModelConfig, mode, aux):
         if cfg.tie_embeddings:
+            from ..dist.perf import get_packed_matmul
+            tbl = p["embed"]["table"]
+            if "w_int8" in tbl and get_packed_matmul():
+                # tied head with a packed table: scales are per-embedding-
+                # column (axis d), so they fold into the activation —
+                # h @ (m * s[None]).T == (h * s) @ m.T — leaving a unit
+                # per-output scale for the kernel
+                from ..kernels.qmatmul.ops import qmatmul_any
+                s_d = tbl["scale"].reshape(cfg.d_model)
+                logits = qmatmul_any(h.q.astype(jnp.float32) * s_d,
+                                     tbl["w_int8"].T,
+                                     jnp.ones((cfg.vocab,), jnp.float32))
+                return constrain(logits, "b.m")
             from ..nn.common import get_qw
-            wq = get_qw(p["embed"]["table"], mode)
+            wq = get_qw(tbl, mode)
             logits = jnp.matmul(h.q.astype(wq.q.dtype), wq.q.T)
             hgq.matmul_ebops(aux, h.bits,
                              None if wq.bits is None else wq.bits.T,
@@ -182,8 +196,13 @@ class TransformerLM:
     # ---------------------------- decode --------------------------------
     @staticmethod
     def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-                   dtype=jnp.bfloat16) -> KVCache:
-        kv_len = min(max_len, cfg.window) if cfg.window else max_len
+                   dtype=jnp.bfloat16, ring_slack: int = 0) -> KVCache:
+        """``ring_slack``: extra ring-buffer slots beyond the attention
+        window — writing a decode/prefill chunk of S <= ring_slack + 1
+        tokens then never evicts history still inside the oldest chunk
+        query's window, keeping multi-token decode_step calls exact."""
+        kv_len = min(max_len, cfg.window + ring_slack) if cfg.window \
+            else max_len
         shape = (cfg.n_layers, batch, kv_len, cfg.n_kv, cfg.hd)
         return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
 
@@ -191,13 +210,14 @@ class TransformerLM:
     def decode_step(p, q, caches: KVCache, tokens: jax.Array,
                     cache_pos: jax.Array, cfg: ModelConfig,
                     mode: str = hgq.EVAL):
-        """One decode step. tokens [B, S_new]; returns (logits, new_caches)."""
+        """One decode step. tokens [B, S_new]; cache_pos scalar or per-slot
+        [B] (ragged continuous batching). Returns (logits, new_caches)."""
         B, S = tokens.shape
         aux = Aux.zero()
         newq: Dict[str, Any] = {}
         e, newq["embed"] = HEmbedding.apply(p["embed"], q["embed"], tokens,
                                             mode=mode, aux=aux)
-        positions = cache_pos + jnp.arange(S)
+        positions = decode_positions(cache_pos, S)
         x, newq["layers"], new_caches, (ebops, l1) = \
             TransformerLM._stack_forward(p, q, e.q, positions, cfg, mode,
                                          caches=caches, cache_pos=cache_pos)

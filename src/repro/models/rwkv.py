@@ -122,7 +122,8 @@ class RWKVLM:
 
     @staticmethod
     def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-                   dtype=jnp.float32) -> RWKVCaches:
+                   dtype=jnp.float32, ring_slack: int = 0) -> RWKVCaches:
+        del ring_slack  # recurrent state, no attention ring buffer
         d = cfg.d_model
         H = d // 64
         L = cfg.n_layers

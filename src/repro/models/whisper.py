@@ -14,7 +14,8 @@ import jax.numpy as jnp
 from ..core import hgq
 from ..core.hgq import Aux, QTensor
 from ..dist.axes import constrain
-from ..nn.attention import AttnConfig, GQAAttention, KVCache
+from ..nn.attention import (AttnConfig, GQAAttention, KVCache,
+                            decode_positions)
 from ..nn.basic import HDense, HEmbedding, LayerNorm
 from ..nn.common import act_q_init, apply_act_q
 from ..nn.mlp import MLP
@@ -279,7 +280,8 @@ class WhisperModel:
 
     @staticmethod
     def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-                   dtype=jnp.bfloat16) -> WhisperCaches:
+                   dtype=jnp.bfloat16, ring_slack: int = 0) -> WhisperCaches:
+        del ring_slack  # decoder self-attn cache is not windowed
         L, H, hd = cfg.n_layers, cfg.n_heads, cfg.hd
         return WhisperCaches(
             self_k=jnp.zeros((L, batch, max_len, H, hd), dtype),
@@ -314,9 +316,9 @@ class WhisperModel:
         e, newq["embed"] = HEmbedding.apply(p["embed"], q["embed"], tokens,
                                             mode=mode, aux=aux)
         pos_table = p["dec_pos"]
-        positions = cache_pos + jnp.arange(S)
-        x = e.q + jnp.take(pos_table, positions % pos_table.shape[0],
-                           axis=0)[None]
+        positions = decode_positions(cache_pos, S)
+        pe = jnp.take(pos_table, positions % pos_table.shape[0], axis=0)
+        x = e.q + (pe if positions.ndim == 2 else pe[None])
         x, _, new_kv = WhisperModel._decode_stack(
             p, q, x, None, positions, cfg, mode, aux, caches=caches,
             cache_pos=cache_pos)

@@ -66,6 +66,18 @@ def _cache_load(x: jax.Array) -> jax.Array:
     return x
 
 
+def decode_positions(cache_pos: jax.Array, S: int) -> jax.Array:
+    """Token positions for a decode chunk of S new tokens.
+
+    ``cache_pos`` is either a scalar (all batch rows aligned) or a per-slot
+    vector ``[B]`` (continuous batching: every row at its own offset).
+    Returns ``[S]`` or ``[B, S]`` accordingly.
+    """
+    cp = jnp.asarray(cache_pos, jnp.int32)
+    ar = jnp.arange(S, dtype=jnp.int32)
+    return cp[:, None] + ar[None, :] if cp.ndim == 1 else cp + ar
+
+
 def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     """x: [B, S, H, hd]; positions: [B, S] or [S]."""
     hd = x.shape[-1]
@@ -131,21 +143,36 @@ class GQAAttention:
         if cache is not None:
             # decode: append new k/v, attend over the cache.  Windowed caches
             # are ring buffers of size W: global position g lives in slot g%W.
+            # cache_pos is scalar (aligned batch) or [B] (ragged continuous
+            # batching — every row writes/reads at its own offset).
             W = cache.k.shape[1]
-            slot = cache_pos % W if cfg.window is not None else cache_pos
-            k_all = jax.lax.dynamic_update_slice(
-                cache.k, _cache_store(kh, cache.k.dtype), (0, slot, 0, 0))
-            v_all = jax.lax.dynamic_update_slice(
-                cache.v, _cache_store(vh, cache.v.dtype), (0, slot, 0, 0))
+            cpb = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (B,))
+            qpos = cpb[:, None] + jnp.arange(S)        # [B, S] global q pos
+            if cfg.window is not None:
+                # ring write: if a chunk longer than the ring ever aliases
+                # two positions onto one slot, keep only the newest (scatter
+                # order with duplicate indices is otherwise unspecified) —
+                # stale writes get an out-of-bounds slot and are dropped
+                last = cpb + (S - 1)
+                slot = jnp.where(qpos > last[:, None] - W, qpos % W, W)
+            else:
+                slot = qpos
+            bidx = jnp.arange(B)[:, None]
+            k_all = cache.k.at[bidx, slot].set(
+                _cache_store(kh, cache.k.dtype), mode="drop")
+            v_all = cache.v.at[bidx, slot].set(
+                _cache_store(vh, cache.v.dtype), mode="drop")
             new_cache = KVCache(k_all, v_all)
             if cfg.window is not None:
-                # slot s holds global position cache_pos - ((cache_pos - s) % W)
+                # slot s holds global position last - ((last - s) % W) where
+                # last is the row's newest written position; never-written
+                # slots resolve to negative tpos and are masked below
                 spos = jnp.arange(W)
-                tpos = cache_pos - jnp.mod(cache_pos - spos, W)
+                tpos = last[:, None] - jnp.mod(last[:, None] - spos[None], W)
             else:
-                tpos = jnp.arange(W)
+                tpos = jnp.broadcast_to(jnp.arange(W), (B, W))
             out = _decode_attention(qh, _cache_load(k_all),
-                                    _cache_load(v_all), cache_pos + S, cfg,
+                                    _cache_load(v_all), qpos, cfg,
                                     probs_f, mode, tpos=tpos)
             kv_len = W
         else:
@@ -290,9 +317,13 @@ def _chunked_attention(qh, kh, vh, positions, cfg: AttnConfig, probs_f,
     return out.astype(qh.dtype)
 
 
-def _decode_attention(qh, k_all, v_all, kv_len, cfg: AttnConfig, probs_f,
+def _decode_attention(qh, k_all, v_all, qpos, cfg: AttnConfig, probs_f,
                       mode, tpos=None) -> jax.Array:
-    """Single-step (S small) attention over the full cache."""
+    """Chunk (S small) attention over the full cache, per-row positions.
+
+    ``qpos`` [B, S]: global position of each new query row; ``tpos`` [B, T]:
+    global position currently held by each cache slot (negative = empty).
+    """
     B, S, H, hd = qh.shape
     KV = cfg.n_kv
     G = H // KV
@@ -302,11 +333,12 @@ def _decode_attention(qh, k_all, v_all, kv_len, cfg: AttnConfig, probs_f,
                              preferred_element_type=jnp.float32),
                   "b...m") * scale
     if tpos is None:
-        tpos = jnp.arange(k_all.shape[1])
-    qpos = kv_len - S + jnp.arange(S)
-    mask = (tpos[None, :] <= qpos[:, None]) & (tpos[None, :] >= 0)
+        tpos = jnp.broadcast_to(jnp.arange(k_all.shape[1]),
+                                (B, k_all.shape[1]))
+    mask = (tpos[:, None, :] <= qpos[:, :, None]) & (tpos[:, None, :] >= 0)
     if cfg.window is not None:
-        mask &= (qpos[:, None] - tpos[None, :]) < cfg.window
+        mask &= (qpos[:, :, None] - tpos[:, None, :]) < cfg.window
+    mask = mask[:, None, None]                    # [B, 1, 1, S, T]
     s = jnp.where(mask, s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     pt = jnp.exp(s - m)

@@ -55,17 +55,29 @@ class HDense:
     @staticmethod
     def apply(p, q, x: QTensor, *, mode: str, aux: Aux, act: str = ""
               ) -> Tuple[QTensor, Dict[str, Any]]:
-        wq = get_qw(p["kernel"], mode)
-        kern = p["kernel"].get("w", p["kernel"].get("w_int8"))
-        d_in, d_out = kern.shape
-        from ..dist.perf import cast_for_matmul, get_compute_dtype
-        xq = cast_for_matmul(x.q).astype(wq.q.dtype)
-        # under bf16-compute the cross-shard partial-sum all-reduce runs on
-        # the bf16 output (Megatron convention) — halves the TP collective;
-        # otherwise accumulate/reduce in f32
-        pet = jnp.float32 if get_compute_dtype() is None else None
-        y = jnp.matmul(xq, wq.q, preferred_element_type=pet).astype(x.q.dtype)
-        hgq.matmul_ebops(aux, x.bits, wq.bits, d_in, d_out)
+        from ..dist.perf import (cast_for_matmul, get_compute_dtype,
+                                 get_packed_matmul)
+        if "w_int8" in p["kernel"] and get_packed_matmul():
+            # serving hot path (serving/packed.py): the int8 mantissas stream
+            # straight into the fused dequant-matmul Pallas kernel — the
+            # weight bytes moved from HBM are the packed ones
+            from ..kernels.qmatmul.ops import qmatmul_any
+            ki = p["kernel"]["w_int8"]
+            y = qmatmul_any(x.q.astype(jnp.float32), ki,
+                            p["kernel"]["scale"].reshape(ki.shape[-1])
+                            ).astype(x.q.dtype)
+        else:
+            wq = get_qw(p["kernel"], mode)
+            kern = p["kernel"].get("w", p["kernel"].get("w_int8"))
+            d_in, d_out = kern.shape
+            xq = cast_for_matmul(x.q).astype(wq.q.dtype)
+            # under bf16-compute the cross-shard partial-sum all-reduce runs
+            # on the bf16 output (Megatron convention) — halves the TP
+            # collective; otherwise accumulate/reduce in f32
+            pet = jnp.float32 if get_compute_dtype() is None else None
+            y = jnp.matmul(xq, wq.q,
+                           preferred_element_type=pet).astype(x.q.dtype)
+            hgq.matmul_ebops(aux, x.bits, wq.bits, d_in, d_out)
         if "bias" in p:
             y = y + get_qw(p["bias"], mode).q
         y = activation(act, y)

@@ -1,1 +1,2 @@
-from .engine import Engine, Request, generate
+from .engine import Engine, Request, SamplingConfig, generate
+from .packed import pack_for_serving, pack_tree

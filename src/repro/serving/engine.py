@@ -1,97 +1,251 @@
-"""Batched serving engine: prefill + KV-cache greedy/temperature decode.
+"""Continuous-batching serving engine: ragged per-slot decode over one
+jitted step, chunked prefill, HGQ int8-packed decode weights.
 
-The decode step is a single jitted function (the same one the dry-run lowers
-for the ``decode_*`` / ``long_*`` cells); the engine adds continuous
-batching at the host level: requests join at slot granularity, finished
-slots are recycled.  Weights can be served from the HGQ-packed int
-representation via ``repro.kernels.qmatmul`` (see serving/packed.py).
+Architecture (one ``Engine`` = one model replica):
+
+* **Slots.** The KV/state cache holds ``batch_slots`` independent rows.  A
+  request occupies one slot from admission to completion; finished slots
+  are recycled immediately (continuous batching — requests join and leave
+  mid-run, no barrier).
+* **Per-slot positions.** Every decode tick runs ONE jitted
+  ``model.decode_step`` over the whole batch with a position *vector*
+  ``cache_pos [B]`` — RoPE phases, ring-buffer writes, and causal/window
+  masks are all per-batch-row (``nn.attention``), so slots with different
+  prompt lengths decode correctly together.
+* **Chunked prefill.** ``submit`` runs the prompt through the same stack
+  forward in fixed-size chunks against a fresh single-slot cache slice,
+  then splices the slice into the batch cache at the slot's offset —
+  no token-by-token prefill, and one compile per chunk shape.
+* **Sampling.** Greedy / temperature / top-k, per request, fused into the
+  jitted step (Gumbel-max over rank-filtered logits).
+* **Packed weights.** ``packed=True`` converts params to the HGQ int8 +
+  per-channel 2^-f serving tree (``serving/packed.py``) and routes decode
+  projections onto the fused dequant-matmul ``kernels.qmatmul.qmatmul_any``.
+
+``generate`` remains the single-batch greedy reference the engine is
+tested token-for-token against.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+import functools
+import warnings
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ..core import hgq
+from ..dist.perf import packed_matmul
 from ..models.config import ModelConfig
+from ..nn.attention import NEG_INF
+
+# cache donation below is a TPU/GPU aliasing win; CPU ignores it (noisily)
+warnings.filterwarnings("ignore",
+                        message="Some donated buffers were not usable")
+
+
+@dataclasses.dataclass
+class SamplingConfig:
+    temperature: float = 0.0      # <= 0: greedy
+    top_k: int = 0                # 0: no top-k filter
+
+
+GREEDY = SamplingConfig()
 
 
 @dataclasses.dataclass
 class Request:
     prompt: List[int]
     max_new: int
+    sampling: Optional[SamplingConfig] = None
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
 
+def _sample(logits: jax.Array, key: jax.Array, temp: jax.Array,
+            topk: jax.Array, enable: bool = True) -> jax.Array:
+    """Per-row sampling: logits [B, V]; temp [B] (<=0 greedy); topk [B]
+    (0 = off).  ``enable`` is static: an all-greedy tick compiles to a bare
+    argmax — no vocab sort, no gumbel draw on the decode hot path."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if not enable:
+        return greedy
+    V = logits.shape[-1]
+    # top-k via the per-row k-th value threshold (one sort; threshold ties
+    # all pass, the standard top-k-filter convention)
+    k = jnp.clip(jnp.where(topk > 0, topk, V), 1, V)
+    srt = jnp.sort(logits, axis=-1)[:, ::-1]
+    thresh = jnp.take_along_axis(srt, (k - 1)[:, None], axis=-1)
+    filt = jnp.where(logits >= thresh, logits, NEG_INF)
+    t = jnp.maximum(temp, 1e-6)[:, None]
+    g = jax.random.gumbel(key, logits.shape)
+    sampled = jnp.argmax(filt / t + g, axis=-1).astype(jnp.int32)
+    return jnp.where(temp > 0, sampled, greedy)
+
+
 class Engine:
+    """Continuous-batching engine over a model's KV-cache decode path."""
+
     def __init__(self, model, params, qstate, cfg: ModelConfig, *,
                  batch_slots: int = 8, max_len: int = 512,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, packed: bool = False,
+                 prefill_chunk: int = 16, seed: int = 0):
         self.model = model
+        self.cfg = cfg
+        self.packed = packed
+        if packed:
+            from .packed import pack_for_serving
+            params, qstate = pack_for_serving(params, qstate)
         self.p = params
         self.q = qstate
-        self.cfg = cfg
         self.slots = batch_slots
         self.max_len = max_len
         self.eos = eos_id
-        self.caches = model.init_cache(cfg, batch_slots, max_len)
-        self._decode = jax.jit(
-            lambda p, q, c, t, pos: model.decode_step(p, q, c, t, pos, cfg))
+        W = min(max_len, cfg.window) if cfg.window else max_len
+        self.prefill_chunk = max(1, min(prefill_chunk, W))
+        # ring_slack: a windowed ring buffer gets prefill_chunk extra slots
+        # so writing a whole chunk never evicts history still inside the
+        # chunk's oldest query window — chunked prefill stays exact
+        self.caches = model.init_cache(cfg, batch_slots, max_len,
+                                       ring_slack=self.prefill_chunk)
+        # a zeroed single-slot cache slice: prefill always starts from a
+        # clean slot (also resets recurrent state left by the previous
+        # occupant — KV junk is masked by positions, recurrent state isn't)
+        self._fresh_slot = jax.tree_util.tree_map(
+            lambda a: jnp.zeros(a.shape[:1] + (1,) + a.shape[2:], a.dtype),
+            self.caches)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
-        self.slot_pos = [0] * batch_slots
+        self.slot_pos = np.zeros(batch_slots, np.int32)   # cache fill level
+        self._next_tok = np.zeros(batch_slots, np.int32)  # next decode input
+        self._key = jax.random.PRNGKey(seed)
+        self._build()
 
+    # ------------------------------------------------------------------
+    def _build(self) -> None:
+        model, cfg = self.model, self.cfg
+
+        def decode(p, q, c, tok, pos, key, temp, topk, enable):
+            logits, c = model.decode_step(p, q, c, tok, pos, cfg)
+            return _sample(logits[:, -1], key, temp, topk, enable), c
+
+        def prefill(p, q, cs, tok, pos):
+            return model.decode_step(p, q, cs, tok, pos, cfg)
+
+        # donate the cache through the per-token tick and the slot splice so
+        # XLA aliases it in place instead of copying the full KV/state tree
+        # every decoded token (self.caches is reassigned from the result).
+        # _prefill must NOT donate: its first cs is the reused _fresh_slot.
+        self._decode = jax.jit(decode, static_argnums=(8,),
+                               donate_argnums=(2,))
+        self._prefill = jax.jit(prefill)
+        self._write_slot = jax.jit(
+            lambda c, cs, s: jax.tree_util.tree_map(
+                lambda a, u: jax.lax.dynamic_update_slice_in_dim(
+                    a, u, s, axis=1), c, cs),
+            donate_argnums=(0,))
+        self._sample1 = jax.jit(_sample, static_argnums=(4,))
+
+    def _run(self, fn, *args):
+        """Call a jitted function under this engine's packed-matmul routing
+        (the flag is read at trace time; jit caches per engine tree)."""
+        with packed_matmul(self.packed):
+            return fn(*args)
+
+    # ------------------------------------------------------------------
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.slot_req):
             if r is None:
                 return i
         return None
 
+    def _sampling(self, req: Request) -> SamplingConfig:
+        return req.sampling or GREEDY
+
+    def _split_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
     def submit(self, req: Request) -> bool:
+        """Admit one request: chunked prefill into a fresh slot slice at
+        offset 0, splice it into the batch cache, sample the first token.
+        Returns False when no slot is free."""
         slot = self._free_slot()
         if slot is None:
             return False
+        plen = len(req.prompt)
+        if plen < 1 or req.max_new < 1 or \
+                plen + req.max_new > self.max_len:
+            raise ValueError(
+                f"need prompt >= 1 ({plen}), max_new >= 1 ({req.max_new}), "
+                f"and prompt + max_new <= max_len ({self.max_len})")
+        C = self.prefill_chunk
+        cs = self._fresh_slot
+        last_logits = None
+        start = 0
+        # pad-free chunking: full chunks, then power-of-two tail chunks.
+        # Padding would be masked fine by the per-position attention masks,
+        # but it would advance recurrent (RG-LRU/RWKV) state — so chunks are
+        # exact and compile count stays O(log C), not O(prompt lengths).
+        while start < plen:
+            n = C if plen - start >= C else \
+                1 << ((plen - start).bit_length() - 1)
+            tok = jnp.asarray([req.prompt[start:start + n]], jnp.int32)
+            logits, cs = self._run(self._prefill, self.p, self.q, cs, tok,
+                                   jnp.int32(start))
+            start += n
+            if start >= plen:
+                last_logits = logits[:, -1]
+        self.caches = self._write_slot(self.caches, cs, jnp.int32(slot))
+        sc = self._sampling(req)
+        first = self._run(
+            self._sample1, last_logits, self._split_key(),
+            jnp.asarray([sc.temperature], jnp.float32),
+            jnp.asarray([sc.top_k], jnp.int32), sc.temperature > 0)
         self.slot_req[slot] = req
-        self.slot_pos[slot] = 0
-        # prefill token-by-token through the decode path (slot-local; a
-        # production deployment uses the chunked-prefill forward instead)
+        self.slot_pos[slot] = plen
+        self._next_tok[slot] = int(first[0])
+        self._record(slot, int(first[0]))
         return True
 
+    def _record(self, slot: int, token: int) -> None:
+        """Append a sampled token; finish + recycle the slot on EOS/len."""
+        req = self.slot_req[slot]
+        req.out.append(token)
+        if (self.eos is not None and token == self.eos) or \
+                len(req.out) >= req.max_new:
+            req.done = True
+            self.slot_req[slot] = None
+
     def step(self) -> None:
-        """One engine tick: advance every active slot by one token."""
-        tokens = []
-        for i, r in enumerate(self.slot_req):
-            if r is None:
-                tokens.append(0)
-            elif self.slot_pos[i] < len(r.prompt):
-                tokens.append(r.prompt[self.slot_pos[i]])
-            else:
-                tokens.append(r.out[-1] if r.out else r.prompt[-1])
-        tok = jnp.asarray(tokens, jnp.int32)[:, None]
-        # all slots share cache_pos per slot — engine uses the max; slots are
-        # aligned because recycling resets to 0 only when all drain (simple
-        # variant; production uses per-slot position tensors)
-        pos = jnp.int32(max(self.slot_pos))
-        logits, self.caches = self._decode(self.p, self.q, self.caches, tok,
-                                           pos)
-        nxt = jnp.argmax(logits[:, -1], axis=-1)
-        for i, r in enumerate(self.slot_req):
-            if r is None:
-                continue
+        """One engine tick: a single jitted ragged decode step advancing
+        every active slot by one token (inactive slots ride along masked
+        by their own positions)."""
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return
+        tok = jnp.asarray(self._next_tok, jnp.int32)[:, None]
+        pos = jnp.asarray(self.slot_pos, jnp.int32)
+        temp = jnp.asarray(
+            [self._sampling(r).temperature if r else 0.0
+             for r in self.slot_req], jnp.float32)
+        topk = jnp.asarray(
+            [self._sampling(r).top_k if r else 0 for r in self.slot_req],
+            jnp.int32)
+        enable = any(self._sampling(self.slot_req[i]).temperature > 0
+                     for i in active)
+        nxt, self.caches = self._run(self._decode, self.p, self.q,
+                                     self.caches, tok, pos,
+                                     self._split_key(), temp, topk, enable)
+        nxt = np.asarray(nxt)
+        for i in active:
             self.slot_pos[i] += 1
-            if self.slot_pos[i] >= len(r.prompt):
-                t = int(nxt[i])
-                r.out.append(t)
-                if (self.eos is not None and t == self.eos) or \
-                        len(r.out) >= r.max_new:
-                    r.done = True
-                    self.slot_req[i] = None
+            self._next_tok[i] = nxt[i]
+            self._record(i, int(nxt[i]))
 
     def run(self, requests: List[Request]) -> List[Request]:
+        """Serve a workload to completion with continuous batching."""
         pending = list(requests)
-        active = True
         while pending or any(r is not None for r in self.slot_req):
             while pending and self._free_slot() is not None:
                 self.submit(pending.pop(0))
@@ -99,22 +253,47 @@ class Engine:
         return requests
 
 
+@functools.lru_cache(maxsize=None)
+def _generate_decode_fn(model, cfg: ModelConfig):
+    """One jitted decode_step per (model, cfg): repeated generate() calls
+    (the per-request test reference) reuse the compiled [B, 1] decode
+    instead of re-tracing a fresh lambda each call."""
+    return jax.jit(lambda p, q, c, t, pos:
+                   model.decode_step(p, q, c, t, pos, cfg))
+
+
 def generate(model, params, qstate, cfg: ModelConfig, prompt: jax.Array,
-             max_new: int) -> jax.Array:
-    """Single-batch greedy generation (examples / tests)."""
+             max_new: int, *, cache_len: Optional[int] = None,
+             packed: bool = False) -> jax.Array:
+    """Single-batch greedy generation — the per-request reference the
+    engine is tested against.  ``cache_len`` pins the cache width (so
+    engine/reference runs share identical masked-attention shapes);
+    ``packed=True`` serves from the int8-packed tree like the engine."""
     B, S = prompt.shape
-    caches = model.init_cache(cfg, B, S + max_new)
-    decode = jax.jit(lambda p, q, c, t, pos:
-                     model.decode_step(p, q, c, t, pos, cfg))
-    toks = prompt
-    pos = 0
-    # prefill through decode path, chunk of the whole prompt at once
-    logits, caches = decode(params, qstate, caches, prompt, jnp.int32(0))
+    if packed:
+        from .packed import pack_for_serving
+        params, qstate = pack_for_serving(params, qstate)
+    if cache_len is not None and cfg.window is None \
+            and cache_len < S + max_new:
+        # a windowed ring wraps; a full cache does not — writes past
+        # cache_len would be silently dropped and outputs quietly wrong
+        raise ValueError(f"cache_len ({cache_len}) < prompt + max_new "
+                         f"({S + max_new}) on an unwindowed model")
+    # ring_slack=S: the whole-prompt prefill writes S tokens in one chunk
+    caches = model.init_cache(cfg, B, cache_len or (S + max_new),
+                              ring_slack=S)
+    decode = _generate_decode_fn(model, cfg)
+
+    def call(*args):
+        with packed_matmul(packed):
+            return decode(*args)
+
+    logits, caches = call(params, qstate, caches, prompt, jnp.int32(0))
     pos = S
     last = jnp.argmax(logits[:, -1:], axis=-1)
     outs = [last]
     for _ in range(max_new - 1):
-        logits, caches = decode(params, qstate, caches, last, jnp.int32(pos))
+        logits, caches = call(params, qstate, caches, last, jnp.int32(pos))
         last = jnp.argmax(logits[:, -1:], axis=-1)
         outs.append(last)
         pos += 1
