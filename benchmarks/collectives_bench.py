@@ -1,0 +1,139 @@
+"""Gradient-collective benchmark: bytes on the wire and step time for the
+data-parallel mean-reduce, fp32 (ring all-reduce) vs bf16-wire vs
+int8-wire (``repro.dist.collectives`` two-phase exchange).
+
+Builds the real gradient-shaped tree of an architecture (every parameter
+leaf), stacks it per data shard, and runs each reduction jitted on an
+``n``-device host mesh.  Bytes are *measured from the traced collectives*
+(``collectives.record_wire_bytes`` records every all_to_all / all_gather /
+scale-pmax payload the compressed path actually emits, at its true dtype
+and padded shape; the fp32/bf16-on-fp32-ring baselines use the ring
+all-reduce model on the same leaves).  Wall time on this CPU container
+reflects host collectives plus quantize arithmetic — the bytes column is
+the interconnect story; on real inter-pod links the bytes ARE the time.
+
+    PYTHONPATH=src python benchmarks/collectives_bench.py --smoke
+    PYTHONPATH=src python benchmarks/collectives_bench.py \
+        --arch qwen2-0.5b --devices 8 --out BENCH_collectives.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (published) config, not smoke")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: smoke config, few timing reps")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="host data-parallel device count (forced via "
+                         "XLA_FLAGS before jax init)")
+    ap.add_argument("--reps", type=int, default=10)
+    ap.add_argument("--out", default="BENCH_collectives.json")
+    args = ap.parse_args()
+    if args.smoke:
+        args.reps = 3
+
+    flag = f"--xla_force_host_platform_device_count={args.devices}"
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " "
+                               + flag).strip()
+    import jax                      # noqa: E402 — after the device flag
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get
+    from repro.dist import collectives
+    from repro.dist.sharding import ef_residual_sharding
+    from repro.models import model_for
+
+    cfg = get(args.arch, smoke=not args.full)
+    M = model_for(cfg)
+    params, _ = M.init(jax.random.PRNGKey(0), cfg)
+    n = args.devices
+    mesh = jax.make_mesh((n, 1), ("data", "model"))
+
+    leaves = jax.tree.leaves(params)
+    elements = int(sum(x.size for x in leaves))
+    scale_rows = int(sum(x.shape[0] if x.ndim >= 3 else 1 for x in leaves))
+    stacked = jax.tree.map(
+        lambda x: jax.random.normal(
+            jax.random.PRNGKey(x.size % 9973),
+            (n,) + tuple(x.shape), jnp.float32) * 1e-3, params)
+
+    def time_reduce(fn, tree):
+        out = jax.block_until_ready(fn(tree))       # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(args.reps):
+            out = jax.block_until_ready(fn(tree))
+        del out
+        return (time.perf_counter() - t0) / args.reps * 1e3
+
+    def fp32_pmean(tree):
+        spec = jax.tree.map(
+            lambda leaf: P(("data",), *([None] * (leaf.ndim - 1))), tree)
+        return shard_map(
+            lambda t: jax.tree.map(
+                lambda x: jax.lax.pmean(x[0], ("data",)), t),
+            mesh=mesh, in_specs=(spec,),
+            out_specs=jax.tree.map(
+                lambda leaf: P(*([None] * (leaf.ndim - 1))), tree),
+            check_rep=False)(tree)
+
+    rows = []
+    with mesh:
+        placed = jax.device_put(stacked,
+                                ef_residual_sharding(stacked, mesh))
+        # fp32 baseline: the ring all-reduce the wire path replaces
+        ms = time_reduce(jax.jit(fp32_pmean), placed)
+        fp32_bytes = sum(collectives.fp32_allreduce_bytes(x.size, n)
+                         for x in leaves)
+        rows.append({"mode": "fp32", "bytes_on_wire_per_device": fp32_bytes,
+                     "bytes_per_element": round(fp32_bytes / elements, 3),
+                     "step_ms": round(ms, 2), "reduction_vs_fp32": 1.0})
+        for kind in ("bf16", "int8"):
+            fn = jax.jit(lambda t, k=kind:
+                         collectives.ef_wire_pmean(t, mesh, k))
+            with collectives.record_wire_bytes() as rec:
+                fn.lower(placed)                    # trace -> record bytes
+            ms = time_reduce(fn, placed)
+            b = rec.total()
+            rows.append({
+                "mode": f"{kind}-wire",
+                "bytes_on_wire_per_device": b,
+                "bytes_per_element": round(b / elements, 3),
+                "step_ms": round(ms, 2),
+                "reduction_vs_fp32": round(fp32_bytes / b, 2)})
+
+    result = {
+        "bench": "collectives", "arch": cfg.name,
+        "backend": jax.default_backend(), "devices": n,
+        "grad_elements": elements, "scale_rows": scale_rows,
+        "bytes_model": {
+            k: collectives.wire_bytes_model(elements, n, k, scale_rows)
+            for k in collectives.WIRE_KINDS},
+        "runs": rows,
+    }
+    for r in rows:
+        print(f"collectives.{r['mode']}: "
+              f"{r['bytes_per_element']} B/elt on the wire, "
+              f"{r['step_ms']} ms/reduce "
+              f"({r['reduction_vs_fp32']}x vs fp32)")
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"wrote {args.out}")
+    int8 = next(r for r in rows if r["mode"] == "int8-wire")
+    if int8["reduction_vs_fp32"] < 3.0:
+        print("FAIL: int8-wire byte reduction below 3x", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

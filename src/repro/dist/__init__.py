@@ -1,6 +1,6 @@
 """``repro.dist`` — distribution & deployment utilities.
 
-Four small modules, one convention:
+Five small modules, one convention:
 
 * :mod:`repro.dist.axes` — logical-axis registry + pattern-string
   activation sharding (``constrain(x, "b.m.")``); identity on 1 device.
@@ -8,8 +8,11 @@ Four small modules, one convention:
   (FSDP x TP heuristics) used by the launchers and the dry-run.
 * :mod:`repro.dist.perf` — compute-dtype casting and HGQ int8
   serving-weight packing.
-* this module — int8 error-feedback gradient compression for the
-  inter-pod gradient all-reduce.
+* :mod:`repro.dist.collectives` — the int8-on-the-wire compressed mean
+  all-reduce (shard_map two-phase exchange, error feedback on both
+  phases) that replaces the fp32 gradient collective.
+* this module — post-reduce int8 error-feedback gradient compression
+  (bounds update noise; the wire bytes story lives in ``collectives``).
 
 Error feedback (1-bit-Adam lineage): each step compresses
 ``grad + residual`` and carries the quantization error forward, so the
@@ -24,10 +27,13 @@ import jax
 import jax.numpy as jnp
 
 from .axes import constrain, get_model_size, set_axes  # noqa: F401
+from .collectives import (WIRE_KINDS, ef_wire_init,  # noqa: F401
+                          ef_wire_pmean, simulate_wire_pmean)
 from .perf import (cast_for_matmul, get_compute_dtype,  # noqa: F401
                    pack_params_for_serving, set_compute_dtype, unpack_weight)
 from .sharding import (batch_sharding, batch_spec, cache_sharding,  # noqa: F401
-                       replicated, shard_tree, spec_for_param)
+                       ef_residual_sharding, replicated, shard_tree,
+                       spec_for_param)
 
 EF_KINDS = ("none", "bf16", "int8")
 
@@ -44,8 +50,16 @@ def ef_init(grads: Any) -> EFState:
 def _compress_leaf(e: jax.Array, kind: str) -> jax.Array:
     if kind == "bf16":
         return e.astype(jnp.bfloat16).astype(e.dtype)
-    # int8: symmetric per-tensor grid, max|e| -> 127
-    scale = jnp.maximum(jnp.max(jnp.abs(e)), 1e-30) / 127.0
+    # int8: symmetric grid, max|e| -> 127.  Stacked [L, ...] leaves (the
+    # lax.scan layer axis, rank >= 3) get one grid per layer — a single
+    # outlier layer must not crush quantization resolution for all L
+    # (a per-tensor grid made every other layer's step L-outlier-sized).
+    if e.ndim >= 3:
+        axes = tuple(range(1, e.ndim))
+        amax = jnp.max(jnp.abs(e), axis=axes, keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(e))
+    scale = jnp.maximum(amax, 1e-30) / 127.0
     return jnp.round(e / scale) * scale
 
 

@@ -1,0 +1,381 @@
+"""Compressed data-parallel gradient collectives: the reduction itself
+moves int8 (or bf16) bytes, not fp32.
+
+``dist.ef_compress`` quantizes the *synchronized* gradient — it bounds
+update noise but every fp32 byte still crosses the wire first.  This
+module compresses **inside** the reduction, DeepSpeed/1-bit-Adam style,
+with error feedback on both phases:
+
+phase 1 (reduce-scatter as ``all_to_all``)
+    Each data shard quantizes its local ``grad + residual`` to int8
+    mantissas on a per-layer power-of-two grid ``2^-f`` (the exponent comes
+    from :func:`repro.kernels.qmatmul.ops.grid_exponent`, the same grid
+    logic the serving weight packer uses; the leaf amax is ``pmax``-shared
+    so every shard quantizes on the same grid).  The int8 chunks are
+    exchanged with ``lax.all_to_all`` and summed as int32 — exact, since
+    ``n * 127`` fits comfortably.
+
+phase 2 (``all_gather``)
+    The chunk owner re-quantizes the int32 chunk sum back to int8 by a
+    static right-shift of ``ceil(log2 n)`` bits and gathers the int8 sums;
+    the shift remainder (phase-2 error) is scattered into the owner's
+    residual, so the time-averaged delivered mean gradient telescopes to
+    the true mean exactly like single-phase error feedback (see
+    ``tests/test_collectives.py``).
+
+Per-device bytes on the wire per gradient element: ``2 * (n-1)/n`` at 1
+byte (int8) vs ``2 * (n-1)/n`` at 4 bytes for a ring fp32 all-reduce — a
+4x reduction, independent of ``n`` (bf16-wire: 2x).  The per-leaf scale
+exponents add one ``pmax`` float per layer, which the byte accounting
+includes.
+
+The public entry :func:`ef_wire_pmean` runs under ``shard_map`` over the
+mesh's data axes (``model`` stays unmapped: every tensor-parallel shard
+carries the replicated gradient, exactly as in the uncompressed step) and
+is wrapped in ``jax.custom_vjp`` — the forward is the compressed mean
+all-reduce, the backward passes cotangents through like the transpose of
+``pmean`` — so it composes under ``jax.value_and_grad`` even though the
+quantization ops themselves have no useful derivative.
+
+``simulate_wire_pmean`` is the collective-free reference: identical
+per-shard math on a stacked ``[n, ...]`` tree, used by single-device
+tests and by the property tests; the 8-device CI job checks the
+``shard_map`` path agrees with it bit-for-bit.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+WIRE_KINDS = ("int8", "bf16")
+
+# trace-time recorder for bytes-on-wire accounting (collectives_bench):
+# shapes are static, so appending (op, per-device bytes) while tracing
+# measures exactly what the compiled collectives move.
+_BYTES_TRACE: Optional[List[Tuple[str, float]]] = None
+
+
+class record_wire_bytes:
+    """Context manager: collect (op, per-device payload bytes) tuples for
+    every collective issued while tracing inside the block."""
+
+    def __init__(self):
+        self.records: List[Tuple[str, float]] = []
+
+    def __enter__(self):
+        global _BYTES_TRACE
+        self._prev = _BYTES_TRACE
+        _BYTES_TRACE = self.records
+        return self
+
+    def __exit__(self, *exc):
+        global _BYTES_TRACE
+        _BYTES_TRACE = self._prev
+        return False
+
+    def total(self) -> float:
+        return sum(b for _, b in self.records)
+
+
+def _record(op: str, nbytes: float) -> None:
+    if _BYTES_TRACE is not None:
+        _BYTES_TRACE.append((op, float(nbytes)))
+
+
+def _ring_allreduce_bytes(nbytes: float, n: int) -> float:
+    return 2.0 * (n - 1) / n * nbytes
+
+
+def data_axis_names(mesh) -> Tuple[str, ...]:
+    """The data-parallel axis names of ``mesh`` (pod is outer DP; the axis
+    whitelist lives once, in ``sharding``)."""
+    from .sharding import _data_axes
+    return _data_axes(mesh)
+
+
+def data_axis_size(mesh) -> int:
+    from .sharding import _data_size
+    return _data_size(mesh)
+
+
+# ---------------------------------------------------------------------------
+# per-shard quantization (pure; shared by the shard_map body, the simulator,
+# and the tests)
+# ---------------------------------------------------------------------------
+
+def _layer_rows(e: jax.Array) -> jax.Array:
+    """Flatten a leaf to [L, P] rows — one quantization grid per leading
+    (stacked-layer) axis entry for rank >= 3 leaves, one per tensor
+    otherwise (same stacked-leaf rule as ``dist._compress_leaf``)."""
+    L = e.shape[0] if e.ndim >= 3 else 1
+    return jnp.asarray(e, jnp.float32).reshape(L, -1)
+
+
+def _phase1_quantize(e: jax.Array, amax_rows: jax.Array, kind: str
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Quantize one leaf for the wire.
+
+    Returns ``(payload_rows, scale_rows, residual)``: the wire payload as
+    [L, P] (int8 mantissas, or bf16 values with a dummy unit scale), the
+    per-row grid step, and the local quantization error ``e - dequant``.
+    ``amax_rows`` is the *global* per-row amax (``pmax`` over shards), so
+    every shard lands on the same grid and int32 chunk sums are exact.
+    """
+    rows = _layer_rows(e)
+    if kind == "bf16":
+        payload = rows.astype(jnp.bfloat16)
+        deq = payload.astype(jnp.float32)
+        scale = jnp.ones((rows.shape[0],), jnp.float32)
+    else:
+        from ..kernels.qmatmul.ops import grid_exponent
+        from ..core.quantizer import _exp2i
+        f = grid_exponent(amax_rows)
+        scale = _exp2i(-f)
+        payload = jnp.clip(jnp.round(rows / scale[:, None]),
+                           -127, 127).astype(jnp.int8)
+        deq = payload.astype(jnp.float32) * scale[:, None]
+    residual = (jnp.asarray(e, jnp.float32)
+                - deq.astype(jnp.float32).reshape(e.shape))
+    return payload, scale, residual
+
+
+def _phase2_requantize(chunk_sum: jax.Array, n: int, kind: str
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Requantize a chunk of summed phase-1 payloads for the all_gather.
+
+    int8: the int32 mantissa sum (|sum| <= n*127) shifts right by
+    ``k = ceil(log2 n)`` so it fits int8 again; the remainder (in mantissa
+    units) is the phase-2 error the chunk owner keeps.  bf16: round the
+    fp32 sum to bf16, keep the rounding error.
+    """
+    if kind == "bf16":
+        payload = chunk_sum.astype(jnp.bfloat16)
+        return payload, chunk_sum - payload.astype(jnp.float32)
+    k = _phase2_shift(n)
+    m2 = jnp.round(chunk_sum.astype(jnp.float32) / (2 ** k)).astype(jnp.int32)
+    err = (chunk_sum - m2 * (2 ** k)).astype(jnp.float32)
+    return m2.astype(jnp.int8), err
+
+
+def _phase2_shift(n: int) -> int:
+    """The decode side multiplies by exactly this power of two — keep the
+    encode/decode shift one definition."""
+    return max((n - 1).bit_length(), 0)
+
+
+# ---------------------------------------------------------------------------
+# the shard_map body (one leaf at a time)
+# ---------------------------------------------------------------------------
+
+def _wire_leaf(e: jax.Array, axes: Tuple[str, ...], n: int, kind: str
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Compressed mean-reduce of one per-shard leaf inside shard_map.
+
+    ``e`` is this shard's ``grad + residual`` (leading shard axis of size 1
+    already squeezed).  Returns ``(delivered_mean, new_residual)``.
+    """
+    dtype = e.dtype
+    rows = _layer_rows(e)
+    L, Pn = rows.shape
+    amax = None
+    if kind != "bf16":     # bf16 payloads carry their own exponents
+        amax = jax.lax.pmax(jnp.max(jnp.abs(rows), axis=1), axes)
+        _record("pmax.scale", _ring_allreduce_bytes(L * 4, n))
+    payload, scale, residual = _phase1_quantize(e, amax, kind)
+
+    flat = payload.reshape(-1)
+    T = flat.shape[0]
+    C = -(-T // n)
+    flat = jnp.pad(flat, (0, n * C - T))
+    # per-position grid steps, padded the same way (bf16 rows share scale 1)
+    s_flat = jnp.pad(jnp.broadcast_to(scale[:, None], (L, Pn)).reshape(-1),
+                     (0, n * C - T), constant_values=1.0)
+
+    # phase 1: reduce-scatter as all_to_all of the compressed chunks
+    _record(f"all_to_all.{kind}",
+            (n - 1) / n * (n * C) * flat.dtype.itemsize)
+    ex = jax.lax.all_to_all(flat.reshape(n, C), axes, 0, 0, tiled=False)
+    chunk_sum = jnp.sum(ex.astype(jnp.float32 if kind == "bf16"
+                                  else jnp.int32), axis=0)
+
+    # phase 2: requantize the sum, gather, decode once
+    q2, err2 = _phase2_requantize(chunk_sum, n, kind)
+    _record(f"all_gather.{kind}", (n - 1) * C * q2.dtype.itemsize)
+    full = jax.lax.all_gather(q2, axes, axis=0, tiled=False).reshape(-1)
+    if kind == "bf16":
+        delivered_flat = full.astype(jnp.float32) / n
+        err2_val = err2  # value domain; carried in full so delivery /n
+        #                  next step recovers exactly what was withheld
+    else:
+        delivered_flat = (full.astype(jnp.float32) * (2 ** _phase2_shift(n))
+                          * s_flat / n)
+        err2_val = err2  # mantissa units; scaled to values below
+    delivered = delivered_flat[:T].reshape(e.shape).astype(dtype)
+
+    # error feedback for phase 2: the owner of chunk i carries the shift
+    # remainder forward — next step it is re-quantized and delivered,
+    # so the time-averaged delivered mean telescopes exactly
+    idx = jnp.int32(0)
+    for ax in axes:
+        idx = idx * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
+    if kind != "bf16":
+        own_scale = jax.lax.dynamic_slice(s_flat, (idx * C,), (C,))
+        err2_val = err2_val * own_scale
+    scatter = jax.lax.dynamic_update_slice(
+        jnp.zeros((n * C,), jnp.float32), err2_val, (idx * C,))[:T]
+    new_residual = (residual + scatter.reshape(e.shape)).astype(dtype)
+    return delivered, new_residual
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def ef_wire_init(grads: Any, n_data: int) -> Any:
+    """Zero per-shard residual tree: each leaf gains a leading ``[n_data]``
+    shard axis (sharded over the data axes by
+    ``sharding.ef_residual_sharding``)."""
+    return jax.tree.map(
+        lambda g: jnp.zeros((n_data,) + tuple(g.shape), g.dtype), grads)
+
+
+def _check_kind(kind: str) -> None:
+    if kind not in WIRE_KINDS:
+        raise ValueError(f"unsupported wire compression kind {kind!r}; "
+                         f"supported: {WIRE_KINDS}")
+
+
+def _wire_pmean_impl(e_stacked: Any, mesh, kind: str) -> Tuple[Any, Any]:
+    axes = data_axis_names(mesh)
+    n = data_axis_size(mesh)
+
+    def body(tree):
+        flat, treedef = jax.tree.flatten(tree)
+        pairs = [_wire_leaf(leaf[0], axes, n, kind) for leaf in flat]
+        delivered = jax.tree.unflatten(treedef, [d for d, _ in pairs])
+        residual = jax.tree.unflatten(treedef, [r[None] for _, r in pairs])
+        return delivered, residual
+
+    stack_spec = jax.tree.map(
+        lambda leaf: P(axes, *([None] * (leaf.ndim - 1))), e_stacked)
+    plain_spec = jax.tree.map(
+        lambda leaf: P(*([None] * (leaf.ndim - 1))), e_stacked)
+    return shard_map(body, mesh=mesh, in_specs=(stack_spec,),
+                     out_specs=(plain_spec, stack_spec),
+                     check_rep=False)(e_stacked)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def ef_wire_pmean(e_stacked: Any, mesh, kind: str = "int8"
+                  ) -> Tuple[Any, Any]:
+    """Compressed mean all-reduce with error feedback, inside the wire.
+
+    ``e_stacked`` is a pytree whose leaves carry a leading ``[n_data]``
+    shard axis holding each data shard's ``local_grad + residual``
+    (sharded over the data axes).  Returns ``(delivered, new_residual)``:
+    the int8/bf16-wire mean gradient, replicated, plus the per-shard
+    residual to thread into the next step.
+
+    The custom VJP passes the ``delivered`` cotangent through as the
+    transpose of an uncompressed shard mean, so the backward of a loss
+    containing this collective is unchanged and ``jax.value_and_grad``
+    composes; residual cotangents are dropped (state, not value).
+    """
+    _check_kind(kind)
+    return _wire_pmean_impl(e_stacked, mesh, kind)
+
+
+def _ef_wire_fwd(e_stacked, mesh, kind):
+    return ef_wire_pmean(e_stacked, mesh, kind), None
+
+
+def _ef_wire_bwd(mesh, kind, _res, cts):
+    ct_delivered, _ct_residual = cts
+    n = data_axis_size(mesh)
+    ct_e = jax.tree.map(
+        lambda ct: jnp.broadcast_to(ct[None] / n, (n,) + tuple(ct.shape)),
+        ct_delivered)
+    return (ct_e,)
+
+
+ef_wire_pmean.defvjp(_ef_wire_fwd, _ef_wire_bwd)
+
+
+def simulate_wire_pmean(e_stacked: Any, kind: str = "int8"
+                        ) -> Tuple[Any, Any]:
+    """Collective-free reference of :func:`ef_wire_pmean` on a stacked
+    ``[n, ...]`` tree: same grids, same chunking, same two-phase errors —
+    usable on one device (tests, notebooks).  The 8-device CI job asserts
+    the shard_map path matches this bit-for-bit."""
+    _check_kind(kind)
+
+    def leaf(es):
+        n = es.shape[0]
+        dtype = es.dtype
+        shape = es.shape[1:]
+        rows0 = _layer_rows(es[0])
+        L, Pn = rows0.shape
+        amax = jnp.max(jnp.abs(jnp.asarray(es, jnp.float32)
+                               .reshape(n, L, -1)), axis=(0, 2))
+        payloads, residuals, scale = [], [], None
+        for i in range(n):
+            p, scale, r = _phase1_quantize(es[i], amax, kind)
+            payloads.append(p.reshape(-1))
+            residuals.append(r)
+        T = payloads[0].shape[0]
+        C = -(-T // n)
+        pad = n * C - T
+        stacked = jnp.stack([jnp.pad(p, (0, pad)) for p in payloads])
+        s_flat = jnp.pad(jnp.broadcast_to(scale[:, None], (L, Pn))
+                         .reshape(-1), (0, pad), constant_values=1.0)
+        sums = jnp.sum(stacked.astype(jnp.float32 if kind == "bf16"
+                                      else jnp.int32), axis=0)
+        q2, err2 = _phase2_requantize(sums.reshape(n, C), n, kind)
+        q2 = q2.reshape(-1)
+        if kind == "bf16":
+            delivered_flat = q2.astype(jnp.float32) / n
+            err2_val = err2
+        else:
+            delivered_flat = (q2.astype(jnp.float32)
+                              * (2 ** _phase2_shift(n)) * s_flat / n)
+            err2_val = err2 * s_flat.reshape(n, C)
+        delivered = delivered_flat[:T].reshape(shape).astype(dtype)
+        scatter = jnp.zeros((n, n * C), jnp.float32)
+        for i in range(n):
+            scatter = scatter.at[i, i * C:(i + 1) * C].set(err2_val[i])
+        new_res = jnp.stack([
+            (residuals[i] + scatter[i, :T].reshape(shape)).astype(dtype)
+            for i in range(n)])
+        return delivered, new_res
+
+    flat, treedef = jax.tree.flatten(e_stacked)
+    pairs = [leaf(x) for x in flat]
+    return (jax.tree.unflatten(treedef, [d for d, _ in pairs]),
+            jax.tree.unflatten(treedef, [r for _, r in pairs]))
+
+
+def wire_bytes_model(n_elements: int, n: int, kind: str,
+                     n_scale_rows: int = 1) -> float:
+    """Analytic per-device bytes-on-wire of one compressed mean-reduce
+    (matches what :class:`record_wire_bytes` measures on the traced ops):
+    all_to_all + all_gather of 1-byte (int8) / 2-byte (bf16) payloads plus
+    the per-row fp32 scale pmax."""
+    _check_kind(kind)
+    item = 1 if kind == "int8" else 2
+    C = -(-n_elements // n)
+    a2a = (n - 1) / n * (n * C) * item
+    ag = (n - 1) * C * item
+    # bf16 payloads carry their own exponents — no scale pmax on that path
+    scales = (_ring_allreduce_bytes(n_scale_rows * 4, n)
+              if kind == "int8" else 0.0)
+    return a2a + ag + scales
+
+
+def fp32_allreduce_bytes(n_elements: int, n: int) -> float:
+    """Per-device bytes of the ring fp32 all-reduce the wire path replaces."""
+    return _ring_allreduce_bytes(n_elements * 4, n)

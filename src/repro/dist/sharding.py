@@ -118,6 +118,21 @@ def cache_sharding(mesh, shape: Sequence[int], *, batch_axis: int = 1,
     return NamedSharding(mesh, P(*entries))
 
 
+def ef_residual_sharding(tree: Any, mesh) -> Any:
+    """Placement for the int8-wire error-feedback residual: every leaf
+    carries a leading ``[n_data]`` shard axis (one residual per data
+    shard, see ``collectives.ef_wire_init``), sharded over the data axes
+    exactly like the per-shard gradients it corrects — each device keeps
+    only its own residual slice.  Trailing axes replicate (the collective
+    body is manual over data only)."""
+    daxes = _data_axes(mesh)
+    entries = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+
+    def spec(leaf):
+        return NamedSharding(mesh, P(entries, *([None] * (leaf.ndim - 1))))
+    return jax.tree.map(spec, tree)
+
+
 def replicated(mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 

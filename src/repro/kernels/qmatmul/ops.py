@@ -26,6 +26,20 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def grid_exponent(amax: jax.Array) -> jax.Array:
+    """Largest fractional-bit exponent ``f`` whose power-of-two int8 grid
+    ``2^-f`` fits magnitudes up to ``amax`` into +-127 mantissas.  The raw
+    cap divides two floats, so it can be one too high at the boundary; back
+    off where the mantissa would still saturate.  Shared by
+    :func:`channel_bits` (weight packing) and the int8-wire gradient
+    collective (``dist.collectives``)."""
+    from ...core.quantizer import _exp2i, floor_log2
+    amax = jnp.asarray(amax, jnp.float32)
+    fcap = floor_log2(127.0 / jnp.maximum(amax, 1e-12))
+    return jnp.where(jnp.floor(amax * _exp2i(fcap) + 0.5) > 127.0,
+                     fcap - 1.0, fcap)
+
+
 def channel_bits(w: jax.Array, f: Optional[jax.Array]) -> jax.Array:
     """Per-output-channel fractional bits for int8 packing of ``w [..., K,
     N]``: the channel max of the trained ``f`` (every weight in the channel
@@ -33,20 +47,16 @@ def channel_bits(w: jax.Array, f: Optional[jax.Array]) -> jax.Array:
     saturating the big weights corrupts the matmul far worse than flooring
     the small ones.  With ``f=None`` the cap itself is the (power-of-two)
     scale.  Shared by serving/packed.py and dist.perf packing."""
-    from ...core.quantizer import _exp2i, floor_log2
     w32 = jnp.asarray(w, jnp.float32)
     amax = jnp.max(jnp.abs(w32), axis=-2)
-    fcap = floor_log2(127.0 / jnp.maximum(amax, 1e-12))
+    fgrid = grid_exponent(amax)
     if f is None:
-        fi = fcap
-    else:
-        fi = jnp.max(jnp.floor(jnp.broadcast_to(
-            jnp.asarray(f, jnp.float32), w32.shape) + 0.5), axis=-2)
-        fi = jnp.minimum(fi, fcap)
-    # the cap divides two floats, so it can be one too high at the
-    # boundary; back off where the mantissa would still saturate
-    return jnp.where(jnp.floor(amax * _exp2i(fi) + 0.5) > 127.0,
-                     fi - 1.0, fi)
+        return fgrid
+    fi = jnp.max(jnp.floor(jnp.broadcast_to(
+        jnp.asarray(f, jnp.float32), w32.shape) + 0.5), axis=-2)
+    # trained bits below the cap never saturate (amax * 2^fi <= 127/2), so
+    # min(trained, capped-grid) preserves the old cap-then-back-off result
+    return jnp.minimum(fi, fgrid)
 
 
 def pack_weights(w: jax.Array, f: jax.Array) -> Tuple[jax.Array, jax.Array]:

@@ -19,8 +19,10 @@ import jax.numpy as jnp
 from ..configs import get
 from ..data import DataSpec, make_pipeline
 from ..dist import EFState, ef_compress, ef_init
+from ..dist import collectives
 from ..dist.axes import set_axes
-from ..dist.sharding import batch_sharding, replicated, shard_tree
+from ..dist.sharding import (batch_sharding, ef_residual_sharding,
+                             replicated, shard_tree)
 from ..models import model_for
 from ..optim import adamw_init
 from ..train import TrainConfig, lm_loss, make_train_step
@@ -37,12 +39,22 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh", default="",
+                    help="host mesh DATAxMODEL (e.g. 4x2) for multi-device "
+                         "smoke runs; needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count>=D*M")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=200,
                     help="checkpoint every N steps (makes the EF-residual "
                          "resume path drivable in short runs)")
-    ap.add_argument("--grad-compression", choices=["none", "bf16", "int8"],
-                    default="none")
+    ap.add_argument("--grad-compression",
+                    choices=["none", "bf16", "int8", "int8-wire"],
+                    default="none",
+                    help="bf16/int8 quantize the synchronized gradient "
+                         "(post-reduce); int8-wire compresses inside the "
+                         "reduction — int8 bytes on the wire via "
+                         "dist.collectives (single-device runs fall back "
+                         "to the post-reduce int8 path)")
     args = ap.parse_args()
 
     cfg = get(args.arch, smoke=not args.full)
@@ -55,6 +67,10 @@ def main() -> None:
         for a in daxes:
             dsize *= sizes[a]
         set_axes(daxes, "model", data_size=dsize, model_size=sizes["model"])
+    elif args.mesh:
+        d, m = (int(v) for v in args.mesh.lower().split("x"))
+        mesh = jax.make_mesh((d, m), ("data", "model"))
+        set_axes(("data",), "model", data_size=d, model_size=m)
     else:
         mesh = make_host_mesh()
 
@@ -65,18 +81,33 @@ def main() -> None:
     tcfg = TrainConfig(steps=args.steps, lr=1e-3, beta0=1e-9, beta1=1e-7,
                        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
     fwd = lambda p, q, b, mode: M.forward(p, q, b, cfg, mode)
-    # int8/bf16 error-feedback quantization of the synchronized gradient
-    # (residual carries the quantization error so the time-averaged update
-    # stays unbiased).  NOTE: this runs after the data-parallel all-reduce —
-    # it bounds update noise but does not yet shrink collective bytes;
-    # compressing the reduce itself needs a shard_map/custom-psum backward.
+    # int8/bf16 error-feedback quantization of the gradient (the residual
+    # carries the quantization error so the time-averaged update stays
+    # unbiased).  bf16/int8 quantize the *synchronized* gradient — they
+    # bound update noise but fp32 still crosses the wire; int8-wire moves
+    # the compression inside the reduction (dist.collectives: shard_map
+    # two-phase int8 exchange, custom-vjp psum), so the gradient collective
+    # itself is ~4x smaller.
+    dsize = collectives.data_axis_size(mesh)
+    wire = args.grad_compression == "int8-wire" and dsize > 1
     grad_tx = None
     ef_state = None
-    if args.grad_compression != "none":
+    if args.grad_compression == "int8-wire":
+        if wire:
+            ef_state = EFState(
+                residual=collectives.ef_wire_init(params, dsize))
+        else:
+            # single device: the wire is a no-op — post-reduce int8 EF IS
+            # the compressed path here, token-for-token
+            grad_tx = lambda g, s: ef_compress(g, s, kind="int8")
+            ef_state = ef_init(params)
+    elif args.grad_compression != "none":
         grad_tx = lambda g, s: ef_compress(g, s, kind=args.grad_compression)
         ef_state = ef_init(params)
     step_fn = make_train_step(fwd, lambda out, b: lm_loss(out, b["tokens"]),
-                              tcfg, grad_tx=grad_tx)
+                              tcfg, grad_tx=grad_tx,
+                              reduce="compressed" if wire else "full",
+                              mesh=mesh if wire else None)
     with mesh:
         in_shardings = (shard_tree(params, mesh, "train"),
                         shard_tree(qstate, mesh, "train"),
@@ -86,9 +117,10 @@ def main() -> None:
                         {"tokens": batch_sharding(mesh, args.batch, 2)},
                         replicated(mesh))
         donate = (0, 2)
-        if grad_tx is not None:
-            in_shardings += (EFState(
-                residual=shard_tree(ef_state.residual, mesh, "train")),)
+        if ef_state is not None:
+            res_sh = (ef_residual_sharding(ef_state.residual, mesh) if wire
+                      else shard_tree(ef_state.residual, mesh, "train"))
+            in_shardings += (EFState(residual=res_sh),)
             donate += (5,)  # the residual threads step-to-step like opt
         jitted = jax.jit(step_fn, in_shardings=in_shardings,
                          donate_argnums=donate)
@@ -97,20 +129,29 @@ def main() -> None:
             last = ckpt_lib.latest_step(args.ckpt_dir)
             if last is not None:
                 tmpl = {"params": params, "qstate": qstate, "opt": opt}
-                # EF residual resumes rather than resetting — but only when
-                # the checkpoint has one (a run may turn compression on
-                # mid-stream; restore loads every template key)
-                if ef_state is not None and ckpt_lib.has_tree(
-                        args.ckpt_dir, last, "ef"):
-                    tmpl["ef"] = ef_state
                 start, trees = ckpt_lib.restore(args.ckpt_dir, last, tmpl)
                 params, qstate, opt = (trees["params"], trees["qstate"],
                                        trees["opt"])
-                ef_state = trees.get("ef", ef_state)
+                # EF residual resumes rather than resetting — but only when
+                # the checkpoint has a shape-compatible one (a run may turn
+                # compression on mid-stream, change kind, or rescale the
+                # mesh: the per-shard wire residual is [n_data, ...], so a
+                # rescale cannot re-chunk it — restart it at zero and eat
+                # one biased window instead of dying)
+                if ef_state is not None and ckpt_lib.has_tree(
+                        args.ckpt_dir, last, "ef"):
+                    try:
+                        _, eft = ckpt_lib.restore(args.ckpt_dir, last,
+                                                  {"ef": ef_state})
+                        ef_state = eft["ef"]
+                    except (AssertionError, KeyError):
+                        print("warning: checkpointed EF residual does not "
+                              "match the current mesh/compression kind; "
+                              "restarting it at zero")
                 print(f"resumed from step {start}")
         t0 = time.time()
         for step in range(start, args.steps):
-            if grad_tx is not None:
+            if ef_state is not None:
                 params, qstate, opt, m, ef_state = jitted(
                     params, qstate, opt, pipe(step), jnp.int32(step),
                     ef_state)

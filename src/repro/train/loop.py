@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from ..core import hgq
 from ..core.pareto import ParetoFront
 from ..core.schedule import Schedule, constant, log_ramp
+from ..dist import collectives
 from ..optim import AdamWState, adamw_init, adamw_update, clip_by_global_norm
 from . import checkpoint as ckpt_lib
 
@@ -41,19 +42,68 @@ class TrainConfig:
     keep_ckpts: int = 3
 
 
+def _merge_sliced_qstate(newqs):
+    """Reconcile the per-slice activation-range states a vmapped forward
+    returns ([n_slices, ...] leaves) back into one qstate: extremes merge
+    with min/max over the slice axis — identical to what the unsliced
+    forward would have observed on the full batch."""
+    def merge(node):
+        if isinstance(node, hgq.ActState):
+            return hgq.ActState(vmin=jnp.min(node.vmin, axis=0),
+                                vmax=jnp.max(node.vmax, axis=0))
+        return jnp.mean(node, axis=0)
+    return jax.tree.map(merge, newqs,
+                        is_leaf=lambda x: isinstance(x, hgq.ActState))
+
+
 def make_train_step(forward: Forward, loss_fn: LossFn, tcfg: TrainConfig,
                     lr_sched: Optional[Schedule] = None,
-                    grad_tx: Optional[Callable] = None):
+                    grad_tx: Optional[Callable] = None,
+                    reduce: str = "full", mesh=None,
+                    wire_kind: str = "int8"):
     """Build the pure train step.
 
     With ``grad_tx`` (e.g. ``dist.ef_compress`` partial application: a
     ``(grads, state) -> (grads, state)`` transform applied after clipping),
     the step takes and returns one extra ``tx_state`` argument so the
     error-feedback residual threads through pjit.
+
+    ``reduce="compressed"`` moves the compression *into* the data-parallel
+    reduction: per-shard gradients come from a vmap over ``n_data`` batch
+    slices (sharded on the slice axis, so no fp32 gradient collective is
+    ever emitted) and are mean-reduced by the int8-on-the-wire two-phase
+    collective ``dist.collectives.ef_wire_pmean`` under ``mesh``.  The
+    ``tx_state`` residual then carries a leading ``[n_data]`` shard axis
+    (``collectives.ef_wire_init``; shard with
+    ``sharding.ef_residual_sharding``).  Global-norm clipping applies to
+    the *delivered* mean gradient (post-reduce compression clips before —
+    the true pre-reduce global norm is unknowable without the very fp32
+    reduce this path removes).  With ``mesh=None`` or one data shard the
+    compressed path degenerates to the current post-reduce
+    ``ef_compress(kind=wire_kind)`` transform, bit-for-bit.
     """
+    if reduce not in ("full", "compressed"):
+        raise ValueError(f"reduce must be 'full' or 'compressed', "
+                         f"got {reduce!r}")
     beta_sched = (constant(tcfg.beta_const) if tcfg.beta_const is not None
                   else log_ramp(tcfg.beta0, tcfg.beta1, tcfg.steps))
     lr_sched = lr_sched or constant(tcfg.lr)
+
+    if reduce == "compressed":
+        if grad_tx is not None:
+            raise ValueError(
+                "grad_tx and reduce='compressed' are mutually exclusive: "
+                "the compressed reduction IS the gradient transform "
+                "(wire_kind selects its quantization)")
+        n_data = collectives.data_axis_size(mesh) if mesh is not None else 1
+        if n_data <= 1:
+            # single device: the wire is a no-op — the current post-reduce
+            # error-feedback path IS the compressed path, exactly
+            from ..dist import ef_compress
+            grad_tx = lambda g, s: ef_compress(g, s, kind=wire_kind)
+        else:
+            return _make_compressed_step(forward, loss_fn, tcfg, beta_sched,
+                                         lr_sched, mesh, wire_kind, n_data)
 
     def _step(params, qstate, opt: AdamWState, batch, step, tx_state):
         beta = beta_sched(step)
@@ -86,6 +136,52 @@ def make_train_step(forward: Forward, loss_fn: LossFn, tcfg: TrainConfig,
     return step_fn_tx
 
 
+def _make_compressed_step(forward: Forward, loss_fn: LossFn,
+                          tcfg: TrainConfig, beta_sched, lr_sched,
+                          mesh, wire_kind: str, n_data: int):
+    """The int8-on-the-wire train step (see ``make_train_step`` docstring).
+
+    Per-shard gradients are materialized with a leading ``[n_data]`` axis
+    (vmap of ``value_and_grad`` over equal batch slices, sharded over the
+    data axes — the backward never sums across slices, so XLA emits no
+    gradient all-reduce at all); ``collectives.ef_wire_pmean`` is then the
+    only gradient communication in the program.
+    """
+    def step_fn_wire(params, qstate, opt: AdamWState, batch, step, tx_state):
+        beta = beta_sched(step)
+        lr = lr_sched(step)
+
+        def loss_slice(params_, batch_slice):
+            out, newq, aux = forward(params_, qstate, batch_slice,
+                                     mode=hgq.TRAIN)
+            base = loss_fn(out, batch_slice)
+            total = base + beta * aux.ebops + tcfg.gamma * aux.l1
+            return total, (newq, aux.ebops, base)
+
+        def slice_leaf(b):
+            if b.shape[0] % n_data:
+                raise ValueError(
+                    f"compressed reduce needs the batch axis ({b.shape[0]}) "
+                    f"divisible by the {n_data} data shards")
+            return b.reshape((n_data, b.shape[0] // n_data) + b.shape[1:])
+
+        sliced = jax.tree.map(slice_leaf, batch)
+        (totals, (newqs, ebops_s, bases)), grads = jax.vmap(
+            jax.value_and_grad(loss_slice, has_aux=True),
+            in_axes=(None, 0))(params, sliced)
+        newq = _merge_sliced_qstate(newqs)
+        err = jax.tree.map(jnp.add, grads, tx_state.residual)
+        delivered, residual = collectives.ef_wire_pmean(err, mesh, wire_kind)
+        delivered, gnorm = clip_by_global_norm(delivered, tcfg.clip_norm)
+        params, opt = adamw_update(delivered, opt, params, lr=lr,
+                                   weight_decay=tcfg.weight_decay)
+        metrics = {"loss": jnp.mean(bases), "total": jnp.mean(totals),
+                   "ebops": jnp.mean(ebops_s), "gnorm": gnorm, "beta": beta}
+        return params, newq, opt, metrics, type(tx_state)(residual=residual)
+
+    return step_fn_wire
+
+
 class Trainer:
     """Host-side driver: jit, checkpoints, resume, Pareto tracking."""
 
@@ -93,7 +189,9 @@ class Trainer:
                  params, qstate, *,
                  eval_fn: Optional[Callable] = None,
                  pipeline: Optional[Callable[[int], Dict]] = None,
-                 better_metric: str = "max"):
+                 better_metric: str = "max",
+                 grad_tx: Optional[Callable] = None,
+                 tx_state: Optional[Any] = None):
         self.tcfg = tcfg
         self.forward = forward
         self.pipeline = pipeline
@@ -103,8 +201,25 @@ class Trainer:
         self.opt = adamw_init(params)
         self.start_step = 0
         self.pareto = ParetoFront(better_metric)
-        self.step_fn = jax.jit(make_train_step(forward, loss_fn, tcfg),
-                               donate_argnums=(0, 2))
+        # grad_tx must reach the jitted step — building the step without it
+        # silently dropped any configured gradient compression (regression)
+        self.grad_tx = grad_tx
+        if grad_tx is not None:
+            if tx_state is None:
+                from ..dist import ef_init
+                tx_state = ef_init(params)
+            # the residual threads step-to-step like the optimizer state
+            self.step_fn = jax.jit(
+                make_train_step(forward, loss_fn, tcfg, grad_tx=grad_tx),
+                donate_argnums=(0, 2, 5))
+        else:
+            if tx_state is not None:
+                raise ValueError("tx_state given but no grad_tx transform; "
+                                 "gradient compression would be silently "
+                                 "ignored")
+            self.step_fn = jax.jit(make_train_step(forward, loss_fn, tcfg),
+                                   donate_argnums=(0, 2))
+        self.tx_state = tx_state
         self.history = []
 
     # -------------------------- fault tolerance --------------------------
@@ -114,21 +229,29 @@ class Trainer:
         last = ckpt_lib.latest_step(self.tcfg.ckpt_dir)
         if last is None:
             return False
-        _, trees = ckpt_lib.restore(
-            self.tcfg.ckpt_dir, last,
-            {"params": self.params, "qstate": self.qstate, "opt": self.opt})
+        tmpl = {"params": self.params, "qstate": self.qstate, "opt": self.opt}
+        # EF residual resumes rather than resetting — a zero residual would
+        # bias the first post-resume window (only when the checkpoint has
+        # one: a run may turn compression on mid-stream)
+        if self.tx_state is not None and ckpt_lib.has_tree(
+                self.tcfg.ckpt_dir, last, "ef"):
+            tmpl["ef"] = self.tx_state
+        _, trees = ckpt_lib.restore(self.tcfg.ckpt_dir, last, tmpl)
         self.params = trees["params"]
         self.qstate = trees["qstate"]
         self.opt = trees["opt"]
+        self.tx_state = trees.get("ef", self.tx_state)
         self.start_step = last
         return True
 
     def checkpoint(self, step: int, pareto: bool = False) -> Optional[str]:
         if not self.tcfg.ckpt_dir:
             return None
-        path = ckpt_lib.save(self.tcfg.ckpt_dir, step,
-                             {"params": self.params, "qstate": self.qstate,
-                              "opt": self.opt},
+        trees = {"params": self.params, "qstate": self.qstate,
+                 "opt": self.opt}
+        if self.tx_state is not None:
+            trees["ef"] = self.tx_state
+        path = ckpt_lib.save(self.tcfg.ckpt_dir, step, trees,
                              keep=self.tcfg.keep_ckpts)
         if pareto:
             ckpt_lib.mark_pareto(path)
@@ -142,9 +265,15 @@ class Trainer:
         m = {}
         for step in range(self.start_step, steps):
             batch = self.pipeline(step)
-            self.params, self.qstate, self.opt, m = self.step_fn(
-                self.params, self.qstate, self.opt, batch,
-                jnp.int32(step))
+            if self.grad_tx is not None:
+                (self.params, self.qstate, self.opt, m,
+                 self.tx_state) = self.step_fn(
+                    self.params, self.qstate, self.opt, batch,
+                    jnp.int32(step), self.tx_state)
+            else:
+                self.params, self.qstate, self.opt, m = self.step_fn(
+                    self.params, self.qstate, self.opt, batch,
+                    jnp.int32(step))
             if step % tcfg.log_every == 0:
                 mm = {k: float(v) for k, v in m.items()}
                 log(f"step {step}: loss={mm['loss']:.4f} "

@@ -225,6 +225,31 @@ def test_ef_bf16_residual_bounded():
         assert float(jnp.max(jnp.abs(st.residual["w"]))) < 1e-5
 
 
+def test_ef_int8_stacked_leaf_per_layer_grid():
+    """Regression: a stacked [L, ...] leaf used ONE per-tensor int8 grid,
+    so a single outlier layer crushed quantization resolution for all L
+    layers.  The grid must be per leading (layer) axis: each layer's
+    max-abs error stays within one step of its OWN grid."""
+    key = jax.random.PRNGKey(3)
+    g = jax.random.normal(key, (4, 8, 6)) * 1e-3
+    g = g.at[2].mul(1e4)                     # layer 2 is a 10-scale outlier
+    grads = {"w": g}
+    sent, st = ef_compress(grads, ef_init(grads), kind="int8")
+    err = np.abs(np.asarray(sent["w"] - g))
+    for layer in range(4):
+        own_grid = float(jnp.max(jnp.abs(g[layer]))) / 127.0
+        assert err[layer].max() <= own_grid, (
+            f"layer {layer}: err {err[layer].max():.2e} > grid {own_grid:.2e}")
+    # the old per-tensor grid floored every non-outlier layer to zero with
+    # error ~= the full value; per-layer grids keep them finite-resolution
+    assert err[0].max() < float(jnp.max(jnp.abs(g[0]))) / 64
+    # rank <= 2 leaves keep the per-tensor grid
+    flat = {"w": jnp.linspace(-1.0, 1.0, 33).reshape(3, 11)}
+    s2, _ = ef_compress(flat, ef_init(flat), kind="int8")
+    m = np.asarray(s2["w"]) * 127.0
+    np.testing.assert_allclose(m, np.round(m), atol=1e-4)
+
+
 def test_ef_state_is_jit_compatible():
     grads = {"w": jnp.linspace(-1.0, 1.0, 33)}
     step = jax.jit(lambda g, s: ef_compress(g, s, kind="int8"))

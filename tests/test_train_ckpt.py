@@ -21,7 +21,7 @@ CFG = HGQConfig(weight_gran="per_parameter", act_gran="per_parameter",
                 init_weight_f=2, init_act_f=2)
 
 
-def _make_trainer(tmp=None, steps=40, beta0=1e-7, beta1=1e-6):
+def _make_trainer(tmp=None, steps=40, beta0=1e-7, beta1=1e-6, grad_tx=None):
     key = jax.random.PRNGKey(0)
     p, q = JetTagger.init(key, CFG)
     fwd = lambda params, qstate, batch, mode: JetTagger.forward(
@@ -30,7 +30,8 @@ def _make_trainer(tmp=None, steps=40, beta0=1e-7, beta1=1e-6):
     pipe = make_pipeline(DataSpec(kind="jet", batch=256))
     tc = TrainConfig(steps=steps, lr=3e-3, beta0=beta0, beta1=beta1,
                      log_every=1000, ckpt_dir=tmp or "")
-    return Trainer(fwd, loss, tc, p, q, pipeline=pipe), pipe
+    return Trainer(fwd, loss, tc, p, q, pipeline=pipe,
+                   grad_tx=grad_tx), pipe
 
 
 def test_loss_decreases_and_accuracy():
@@ -138,6 +139,72 @@ def test_auto_checkpoint_resume_replays_identically(tmp_path):
     assert tr2.maybe_resume()
     assert tr2.start_step == 5, tr2.start_step
     tr2.run(steps=6, log=lambda *a: None)
+    for got, want in zip(jax.tree.leaves(tr2.params), ref):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_trainer_honors_grad_tx():
+    """Regression: Trainer jitted make_train_step WITHOUT grad_tx, so
+    Trainer-driven runs silently ignored configured gradient compression.
+    A coarse compressor must now change the trajectory (and thread a
+    nonzero residual), while kind='none' stays bit-exact."""
+    tx = lambda g, s: ef_compress(g, s, kind="int8")
+    tr_c, _ = _make_trainer(steps=6, grad_tx=tx)
+    tr_p, _ = _make_trainer(steps=6)
+    tr_c.run(steps=6, log=lambda *a: None)
+    tr_p.run(steps=6, log=lambda *a: None)
+    assert tr_c.tx_state is not None
+    res_max = max(float(jnp.max(jnp.abs(leaf)))
+                  for leaf in jax.tree.leaves(tr_c.tx_state.residual))
+    assert res_max > 0.0, "residual never updated: grad_tx was ignored"
+    diff = max(float(jnp.max(jnp.abs(a - b)))
+               for a, b in zip(jax.tree.leaves(tr_c.params),
+                               jax.tree.leaves(tr_p.params)))
+    assert diff > 0.0, "int8 compression had zero effect: grad_tx ignored"
+    none_tx = lambda g, s: ef_compress(g, s, kind="none")
+    tr_n, _ = _make_trainer(steps=6, grad_tx=none_tx)
+    tr_n.run(steps=6, log=lambda *a: None)
+    for got, want in zip(jax.tree.leaves(tr_n.params),
+                         jax.tree.leaves(tr_p.params)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_trainer_rejects_orphan_tx_state():
+    import pytest
+    key = jax.random.PRNGKey(0)
+    p, q = JetTagger.init(key, CFG)
+    fwd = lambda params, qstate, batch, mode: JetTagger.forward(
+        params, qstate, batch, mode)
+    loss = lambda out, batch: softmax_xent(out, batch["y"])
+    with pytest.raises(ValueError, match="grad_tx"):
+        Trainer(fwd, loss, TrainConfig(steps=1), p, q,
+                tx_state=ef_init(p))
+
+
+def test_trainer_saves_and_resumes_ef_residual(tmp_path):
+    """Regression: Trainer.checkpoint never wrote the EF residual — a
+    resumed compressed run restarted with a zero residual and a biased
+    first window.  Save 'ef' whenever compression is on; resume must
+    round-trip it exactly and replay like the uninterrupted run."""
+    tx = lambda g, s: ef_compress(g, s, kind="int8")
+    tr_ref, _ = _make_trainer(steps=12, grad_tx=tx)
+    tr_ref.run(steps=12, log=lambda *a: None)
+    ref = jax.tree.leaves(tr_ref.params)
+
+    d = str(tmp_path)
+    tr1, _ = _make_trainer(d, steps=12, grad_tx=tx)
+    tr1.run(steps=6, log=lambda *a: None)
+    tr1.checkpoint(6)
+    saved_res = [np.asarray(x) for x in jax.tree.leaves(tr1.tx_state.residual)]
+    assert checkpoint.has_tree(d, 6, "ef"), "EF residual not checkpointed"
+
+    tr2, _ = _make_trainer(d, steps=12, grad_tx=tx)
+    assert tr2.maybe_resume()
+    assert tr2.start_step == 6
+    for got, want in zip(jax.tree.leaves(tr2.tx_state.residual), saved_res):
+        np.testing.assert_array_equal(np.asarray(got), want)
+    tr2.run(steps=12, log=lambda *a: None)
     for got, want in zip(jax.tree.leaves(tr2.params), ref):
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=2e-5, atol=2e-6)
