@@ -1,0 +1,197 @@
+"""Benchmark regression gate: compare fresh BENCH_*.json files against the
+committed baselines in ``benchmarks/baselines/`` and fail the CI job when
+a guarded metric regresses beyond tolerance.
+
+What is guarded (direction-aware — a metric only fails when it moves the
+*bad* way):
+
+* ``collectives``: ``bytes_per_element`` per mode (lower is better), the
+  2D-mesh ``total_bytes_per_element`` per mode, and the
+  ``reduction_vs_1d`` ratio of the 2D sliced exchange (higher is better);
+* ``serving``: ``decode_tokens_per_sec`` / ``mixed_tokens_per_sec`` per
+  mode (higher is better) and the ``hbm_saving_x`` packing ratio.
+
+Usage (CI runs exactly this after the smoke benches):
+
+    python benchmarks/check_regression.py BENCH_collectives.json \
+        BENCH_serving.json
+
+    # throughput on shared runners is noisy — per-metric tolerance:
+    python benchmarks/check_regression.py BENCH_serving.json \
+        --override "serving.*tokens_per_sec=0.5"
+
+Re-baselining (after an intentional change, run the benches and commit):
+
+    python benchmarks/check_regression.py BENCH_collectives.json --update
+
+Exit codes: 0 = pass, 1 = regression, 2 = bad invocation / missing
+baseline.  Metrics present in the baseline but missing from the fresh run
+(or vice versa) warn by default and fail under ``--strict`` — a renamed
+metric should be an explicit re-baseline, not a silent skip.
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import os
+import shutil
+import sys
+from typing import Dict, List, Tuple
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "baselines")
+
+# metric name -> direction ("lower" = regression when it rises,
+# "higher" = regression when it drops)
+Metrics = Dict[str, Tuple[float, str]]
+
+
+def extract_metrics(data: dict) -> Metrics:
+    """Flatten one BENCH_*.json into guarded ``name -> (value, direction)``
+    entries.  Unknown bench kinds contribute nothing (forward-compatible:
+    a new bench gates once a spec is added here)."""
+    kind = data.get("bench", "")
+    out: Metrics = {}
+    if kind == "collectives":
+        for row in data.get("runs", []):
+            out[f"collectives.{row['mode']}.bytes_per_element"] = (
+                float(row["bytes_per_element"]), "lower")
+        for sec in data.get("mesh2d", []):
+            for row in sec.get("runs", []):
+                name = f"collectives[{sec['mesh']}].{row['mode']}"
+                out[f"{name}.total_bytes_per_element"] = (
+                    float(row["total_bytes_per_element"]), "lower")
+                if "reduction_vs_1d" in row:
+                    out[f"{name}.reduction_vs_1d"] = (
+                        float(row["reduction_vs_1d"]), "higher")
+    elif kind == "serving":
+        for row in data.get("runs", []):
+            for key in ("decode_tokens_per_sec", "mixed_tokens_per_sec"):
+                out[f"serving.{row['mode']}.{key}"] = (
+                    float(row[key]), "higher")
+        if "hbm_saving_x" in data:
+            out["serving.hbm_saving_x"] = (float(data["hbm_saving_x"]),
+                                           "higher")
+    return out
+
+
+def tolerance_for(name: str, default: float,
+                  overrides: List[Tuple[str, float]]) -> float:
+    """Last matching ``--override pattern=tol`` wins; else the default."""
+    tol = default
+    for pattern, value in overrides:
+        if fnmatch.fnmatch(name, pattern):
+            tol = value
+    return tol
+
+
+def compare(baseline: Metrics, fresh: Metrics, default_tol: float,
+            overrides: List[Tuple[str, float]], strict: bool
+            ) -> Tuple[List[str], List[str]]:
+    """Returns ``(failures, warnings)`` comparing fresh against baseline."""
+    failures, warnings = [], []
+    for name in sorted(set(baseline) | set(fresh)):
+        if name not in fresh:
+            warnings.append(f"metric {name} in baseline but not in fresh "
+                            f"run (re-baseline with --update?)")
+            continue
+        if name not in baseline:
+            warnings.append(f"metric {name} new (not in baseline); "
+                            f"commit a baseline with --update to gate it")
+            continue
+        base, direction = baseline[name]
+        value, _ = fresh[name]
+        tol = tolerance_for(name, default_tol, overrides)
+        if base == 0:
+            continue
+        if direction == "lower":
+            bad = value > base * (1.0 + tol)
+            arrow = "rose"
+        else:
+            bad = value < base * (1.0 - tol)
+            arrow = "dropped"
+        if bad:
+            failures.append(
+                f"{name} {arrow} beyond tolerance: baseline {base:g} -> "
+                f"{value:g} ({(value / base - 1.0) * 100:+.1f}%, "
+                f"tol ±{tol * 100:.0f}%)")
+    if strict:
+        failures += warnings
+        warnings = []
+    return failures, warnings
+
+
+def baseline_path(fresh_path: str, baseline_dir: str) -> str:
+    return os.path.join(baseline_dir, os.path.basename(fresh_path))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", nargs="+",
+                    help="fresh BENCH_*.json files to check")
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR)
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="default relative tolerance (0.10 = 10%%)")
+    ap.add_argument("--override", action="append", default=[],
+                    metavar="PATTERN=TOL",
+                    help="per-metric tolerance override, fnmatch pattern "
+                         "(repeatable; last match wins)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the fresh files into the baseline dir "
+                         "instead of checking (re-baseline)")
+    ap.add_argument("--strict", action="store_true",
+                    help="treat added/removed metrics as failures")
+    args = ap.parse_args(argv)
+
+    overrides: List[Tuple[str, float]] = []
+    for item in args.override:
+        if "=" not in item:
+            print(f"bad --override {item!r}: expected PATTERN=TOL",
+                  file=sys.stderr)
+            return 2
+        pattern, _, tol = item.rpartition("=")
+        try:
+            overrides.append((pattern, float(tol)))
+        except ValueError:
+            print(f"bad --override tolerance {tol!r}", file=sys.stderr)
+            return 2
+
+    if args.update:
+        os.makedirs(args.baseline_dir, exist_ok=True)
+        for path in args.fresh:
+            dst = baseline_path(path, args.baseline_dir)
+            shutil.copyfile(path, dst)
+            print(f"baselined {path} -> {dst}")
+        return 0
+
+    rc = 0
+    for path in args.fresh:
+        base_file = baseline_path(path, args.baseline_dir)
+        if not os.path.exists(base_file):
+            print(f"no baseline for {os.path.basename(path)} "
+                  f"(expected {base_file}); run with --update and commit "
+                  f"it", file=sys.stderr)
+            rc = max(rc, 2)
+            continue
+        with open(path) as f:
+            fresh = extract_metrics(json.load(f))
+        with open(base_file) as f:
+            baseline = extract_metrics(json.load(f))
+        failures, warnings = compare(baseline, fresh, args.tolerance,
+                                     overrides, args.strict)
+        tag = os.path.basename(path)
+        for w in warnings:
+            print(f"WARN [{tag}] {w}")
+        if failures:
+            for fmsg in failures:
+                print(f"FAIL [{tag}] {fmsg}", file=sys.stderr)
+            rc = max(rc, 1)
+        else:
+            print(f"OK   [{tag}] {len(fresh)} metrics within tolerance "
+                  f"of baseline")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,7 @@
 """Gradient-collective benchmark: bytes on the wire and step time for the
 data-parallel mean-reduce, fp32 (ring all-reduce) vs bf16-wire vs
-int8-wire (``repro.dist.collectives`` two-phase exchange).
+int8-wire (``repro.dist.collectives`` two-phase exchange), plus the 2D
+(data x model) sliced exchange on DxM meshes.
 
 Builds the real gradient-shaped tree of an architecture (every parameter
 leaf), stacks it per data shard, and runs each reduction jitted on an
@@ -11,6 +12,18 @@ and padded shape; the fp32/bf16-on-fp32-ring baselines use the ring
 all-reduce model on the same leaves).  Wall time on this CPU container
 reflects host collectives plus quantize arithmetic — the bytes column is
 the interconnect story; on real inter-pod links the bytes ARE the time.
+
+The 2D section compares, on 2x4 and 4x2 meshes of the same 8 devices:
+
+* ``int8-wire`` (1D): the in-collective bytes PLUS the fp32 model-axis
+  all_gather a TP train step pays to rematerialize model-sharded
+  gradients before the model-replicated shard_map
+  (``collectives.tp_replication_bytes`` per leaf — GSPMD inserts it
+  implicitly, so the recorder cannot see it);
+* ``int8-wire-2d``: in-collective bytes only — its per-leaf in_specs
+  consume model-sharded gradients directly (replication cost 0), the
+  data exchange runs on the 1/M slice, and the model-axis
+  rematerialization moves int8.
 
     PYTHONPATH=src python benchmarks/collectives_bench.py --smoke
     PYTHONPATH=src python benchmarks/collectives_bench.py \
@@ -112,6 +125,52 @@ def main() -> None:
                 "step_ms": round(ms, 2),
                 "reduction_vs_fp32": round(fp32_bytes / b, 2)})
 
+    # ---- 2D (data x model) section: 1D vs 2D on DxM meshes of n devices
+    mesh2d = []
+    shapes_2d = [(n // m, m) for m in (4, 2)
+                 if m < n and n % m == 0 and n // m >= 1]
+    for (D, M) in shapes_2d:
+        mesh_dm = jax.make_mesh((D, M), ("data", "model"))
+        stacked_dm = jax.tree.map(
+            lambda x: jax.random.normal(
+                jax.random.PRNGKey(x.size % 9973),
+                (D,) + tuple(x.shape), jnp.float32) * 1e-3, params)
+        res2d = collectives.ef_wire2d_init(params, D, M)
+        tp_repl = sum(collectives.tp_replication_bytes(x.shape, M)
+                      for x in leaves)
+        dm_rows = []
+        with mesh_dm:
+            placed_dm = jax.device_put(
+                stacked_dm, ef_residual_sharding(stacked_dm, mesh_dm))
+            res_placed = jax.device_put(
+                res2d, ef_residual_sharding(res2d, mesh_dm, layout="2d"))
+            fn1 = jax.jit(lambda t: collectives.ef_wire_pmean(
+                t, mesh_dm, "int8"))
+            with collectives.record_wire_bytes() as rec1:
+                fn1.lower(placed_dm)
+            ms1 = time_reduce(fn1, placed_dm)
+            total1 = rec1.total() + tp_repl
+            dm_rows.append({
+                "mode": "int8-wire",
+                "bytes_on_wire_per_device": rec1.total(),
+                "tp_replication_bytes": tp_repl,
+                "total_bytes_per_element": round(total1 / elements, 3),
+                "step_ms": round(ms1, 2)})
+            fn2 = jax.jit(lambda t, r: collectives.ef_wire_pmean_2d(
+                t, r, mesh_dm, "int8"))
+            with collectives.record_wire_bytes() as rec2:
+                fn2.lower(placed_dm, res_placed)
+            ms2 = time_reduce(lambda _: fn2(placed_dm, res_placed), None)
+            total2 = rec2.total()
+            dm_rows.append({
+                "mode": "int8-wire-2d",
+                "bytes_on_wire_per_device": rec2.total(),
+                "tp_replication_bytes": 0.0,
+                "total_bytes_per_element": round(total2 / elements, 3),
+                "step_ms": round(ms2, 2),
+                "reduction_vs_1d": round(total1 / total2, 2)})
+        mesh2d.append({"mesh": f"{D}x{M}", "runs": dm_rows})
+
     result = {
         "bench": "collectives", "arch": cfg.name,
         "backend": jax.default_backend(), "devices": n,
@@ -120,12 +179,21 @@ def main() -> None:
             k: collectives.wire_bytes_model(elements, n, k, scale_rows)
             for k in collectives.WIRE_KINDS},
         "runs": rows,
+        "mesh2d": mesh2d,
     }
     for r in rows:
         print(f"collectives.{r['mode']}: "
               f"{r['bytes_per_element']} B/elt on the wire, "
               f"{r['step_ms']} ms/reduce "
               f"({r['reduction_vs_fp32']}x vs fp32)")
+    for sec in mesh2d:
+        for r in sec["runs"]:
+            extra = (f" ({r['reduction_vs_1d']}x vs 1d)"
+                     if "reduction_vs_1d" in r else "")
+            print(f"collectives[{sec['mesh']}].{r['mode']}: "
+                  f"{r['total_bytes_per_element']} B/elt total "
+                  f"(incl. {r['tp_replication_bytes']:.0f} B fp32 TP "
+                  f"replication), {r['step_ms']} ms/reduce{extra}")
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)
     print(f"wrote {args.out}")
@@ -133,6 +201,12 @@ def main() -> None:
     if int8["reduction_vs_fp32"] < 3.0:
         print("FAIL: int8-wire byte reduction below 3x", file=sys.stderr)
         sys.exit(1)
+    for sec in mesh2d:
+        r2d = next(r for r in sec["runs"] if r["mode"] == "int8-wire-2d")
+        if r2d["reduction_vs_1d"] < 1.9:
+            print(f"FAIL: int8-wire-2d byte reduction vs 1D below 1.9x "
+                  f"on the {sec['mesh']} mesh", file=sys.stderr)
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -12,15 +12,14 @@ What is validated against the paper's claims (DESIGN.md SS7):
 """
 from __future__ import annotations
 
-import math
-from typing import Callable, Dict, List, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import hgq
 from repro.core.pareto import ParetoFront
-from repro.core.quantizer import group_occupied_bits, quantize_inference
+from repro.core.quantizer import group_occupied_bits
 from repro.data import DataSpec, make_pipeline
 from repro.models import JetTagger, MuonTracker, SVHNNet
 from repro.nn import HGQConfig
@@ -34,7 +33,7 @@ def exact_ebops_dense_chain(params, qstate) -> float:
     """Exact EBOPs for a pure-HDense model (occupied-bit counting on the
     quantized weights x calibrated activation bits), walking the layer
     chain.  Used for the jet tagger / muon tracker reports."""
-    from repro.core.quantizer import int_bits_from_range, train_bits
+    from repro.core.quantizer import train_bits
     total = 0.0
     act_bits = None
     # input quantizer

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hgq
-from repro.core.quantizer import group_occupied_bits, quantize_inference
+from repro.core.quantizer import quantize_inference
 from repro.data import DataSpec, make_pipeline
 from repro.models import JetTagger
 from repro.nn import HGQConfig

@@ -17,7 +17,6 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .hgq import ActState
 from .quantizer import (_exp2i, ceil_log2, floor_log2,

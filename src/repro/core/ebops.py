@@ -25,8 +25,6 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from .quantizer import sg
-
 
 def _bsum(bits: jax.Array, full_shape: Sequence[int], axes) -> jax.Array:
     """Sum ``bits`` (broadcastable to full_shape) over ``axes`` of full_shape,

@@ -27,8 +27,8 @@ import jax
 import jax.numpy as jnp
 
 from . import ebops as ebops_lib
-from .quantizer import (QuantizerSpec, grad_scale, quantize,
-                        quantize_inference, sg, train_bits)
+from .quantizer import (grad_scale, quantize, quantize_inference, sg,
+                        train_bits)
 
 TRAIN, CALIB, EVAL = "train", "calib", "eval"
 

@@ -9,7 +9,7 @@ front of (validation metric, EBOPs).  This module implements that tracker.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 
 @dataclasses.dataclass

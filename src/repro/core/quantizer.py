@@ -15,7 +15,7 @@ fixed post-hoc by calibration (see `repro.core.calibrate`).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

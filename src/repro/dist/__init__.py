@@ -27,8 +27,10 @@ import jax
 import jax.numpy as jnp
 
 from .axes import constrain, get_model_size, set_axes  # noqa: F401
-from .collectives import (WIRE_KINDS, ef_wire_init,  # noqa: F401
-                          ef_wire_pmean, simulate_wire_pmean)
+from .collectives import (WIRE_KINDS, ef_wire2d_init,  # noqa: F401
+                          ef_wire_init, ef_wire_pmean, ef_wire_pmean_2d,
+                          model_axis_size, simulate_wire_pmean,
+                          simulate_wire_pmean_2d)
 from .perf import (cast_for_matmul, get_compute_dtype,  # noqa: F401
                    pack_params_for_serving, set_compute_dtype, unpack_weight)
 from .sharding import (batch_sharding, batch_spec, cache_sharding,  # noqa: F401

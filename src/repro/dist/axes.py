@@ -18,7 +18,7 @@ with no mesh at all.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P

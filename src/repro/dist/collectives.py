@@ -41,6 +41,12 @@ quantization ops themselves have no useful derivative.
 per-shard math on a stacked ``[n, ...]`` tree, used by single-device
 tests and by the property tests; the 8-device CI job checks the
 ``shard_map`` path agrees with it bit-for-bit.
+
+:func:`ef_wire_pmean_2d` (below) is the 2D generalization: the exchange
+is additionally sliced over the tensor-parallel ``model`` axis, so each
+(data, model) device reduces only its 1/(D*M) slice and the model-axis
+replication moves int8 instead of fp32 — see the section comment above
+it for the full layout.
 """
 from __future__ import annotations
 
@@ -304,6 +310,440 @@ def _ef_wire_bwd(mesh, kind, _res, cts):
 
 
 ef_wire_pmean.defvjp(_ef_wire_fwd, _ef_wire_bwd)
+
+
+# ---------------------------------------------------------------------------
+# 2D (data x model) sliced wire collective
+# ---------------------------------------------------------------------------
+#
+# The 1D collective above replicates over the model axis: every TP shard
+# exchanges and reduces the FULL gradient (and, under TP, first pays an
+# fp32 all_gather over `model` to rematerialize it, since gradients of
+# model-sharded parameters arrive model-sharded).  The 2D path slices the
+# exchange over `model` too:
+#
+#   * gradients ENTER model-sharded (per-leaf in_specs reuse the exact
+#     `sharding.model_axis_for` placement rule, so no model-axis gather is
+#     emitted at all); leaves that do not shard over `model` are flat-chunk
+#     sliced by model index instead — either way device (d, m) quantizes
+#     only its 1/M slice;
+#   * the two-phase int8 all_to_all + all_gather reduce runs over the data
+#     axes on that slice only (1/M the bytes), with the same globally
+#     pmax-shared per-row 2^-f grids — the pmax now spans BOTH axes;
+#   * one int8 all_gather over `model` rematerializes each TP shard's full
+#     delivered gradient (int8 sums decode once, after the gather), so the
+#     model-axis replication that used to move fp32 now moves int8;
+#   * error-feedback residuals live in the sliced layout: a stacked
+#     [n_data, n_model, C] flat tree (`ef_wire2d_init`), sharded so device
+#     (d, m) keeps exactly its own slice (`sharding.ef_residual_sharding`
+#     with layout="2d").  Both phase errors stay within the slice, so the
+#     time-averaged delivered mean telescopes exactly as in 1D.
+#
+# Per-device payload bytes per gradient element (D data x M model):
+#   1D:  (M-1)/M * 4 (fp32 model ag)  +  2 (D-1)/D * 1   (int8 data phases)
+#   2D:  2 (D-1)/(D*M) * 1            +  (M-1)/M * 1     (int8 model ag)
+# e.g. on a 2x4 mesh: 4.0 B/elt -> 1.0 B/elt.
+
+
+def _wire2d_model_axes(mesh) -> Tuple[str, ...]:
+    return ("model",) if "model" in mesh.axis_names else ()
+
+
+def model_axis_size(mesh) -> int:
+    """Size of the mesh's tensor-parallel ``model`` axis (1 if absent)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(sizes.get("model", 1))
+
+
+def _prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def wire2d_slice_len(shape, n_data: int, n_model: int) -> int:
+    """Padded flat slice length ``C`` each ``(data, model)`` device owns
+    for a leaf of ``shape``: the model block (when the leaf shards over
+    ``model`` per :func:`repro.dist.sharding.model_axis_for`) or the
+    ceil-div flat slice, padded up to a multiple of ``n_data`` so the data
+    all_to_all chunks evenly."""
+    from .sharding import model_axis_for
+    T = _prod(shape)
+    if model_axis_for(shape, n_model) is not None:
+        Tb = T // n_model
+    else:
+        Tb = -(-T // n_model)
+    return n_data * (-(-Tb // n_data))
+
+
+def ef_wire2d_init(grads: Any, n_data: int, n_model: int) -> Any:
+    """Zero residual tree in the 2D sliced layout: each leaf becomes a
+    flat ``[n_data, n_model, C]`` stack (``C`` from
+    :func:`wire2d_slice_len`) addressable by ``(data, model)`` index —
+    shard with ``sharding.ef_residual_sharding(..., layout='2d')``.  A
+    mesh rescale changes ``C`` (or the leading axes), so a checkpointed
+    residual from another mesh fails template restore loudly — callers
+    warn and restart it at zero."""
+    return jax.tree.map(
+        lambda g: jnp.zeros(
+            (n_data, n_model,
+             wire2d_slice_len(g.shape, n_data, n_model)), g.dtype), grads)
+
+
+def _wire2d_rows(shape) -> Tuple[int, int]:
+    """(L, row_len) of a leaf: one quantization row per leading
+    (stacked-layer) axis entry for rank >= 3, one per tensor otherwise —
+    the same rule as :func:`_layer_rows`."""
+    L = int(shape[0]) if len(shape) >= 3 else 1
+    return L, _prod(shape) // max(L, 1)
+
+
+def _wire2d_leaf(g: jax.Array, r: jax.Array, S: Tuple[int, ...],
+                 k: Optional[int], daxes: Tuple[str, ...], maxes:
+                 Tuple[str, ...], D: int, M: int, kind: str
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Sliced compressed mean-reduce of one leaf inside shard_map.
+
+    ``g`` is this device's gradient block (data axis squeezed; the model
+    block when ``k`` names the model-sharded tensor axis, else the full
+    leaf), ``r`` its ``[C]`` flat residual slice.  Returns
+    ``(delivered_full, new_residual_slice)``.
+    """
+    dtype = g.dtype
+    axes2d = tuple(daxes) + tuple(maxes)
+    g32 = jnp.asarray(g, jnp.float32)
+    L, Prow_full = _wire2d_rows(S)
+    if k is not None:
+        B = g.shape                      # model block; block rows keep L
+        Tb = g32.size
+        C = -(-Tb // D)
+        Cp = D * C
+        Prow = Tb // L
+        sl = jnp.pad(g32.reshape(-1), (0, Cp - Tb))
+        row_of = jnp.minimum(jnp.arange(Cp) // Prow, L - 1)
+    else:
+        T = g32.size                     # full leaf; slice by model index
+        Tb = -(-T // M)
+        C = -(-Tb // D)
+        Cp = D * C
+        flat_full = jnp.pad(g32.reshape(-1), (0, M * Cp - T))
+        midx = (jax.lax.axis_index(maxes[0]) if maxes else jnp.int32(0))
+        sl = jax.lax.dynamic_slice(flat_full, (midx * Cp,), (Cp,))
+        pos = midx * Cp + jnp.arange(Cp)
+        row_of = jnp.minimum(pos // Prow_full, L - 1)
+    e = sl + jnp.asarray(r, jnp.float32)
+
+    if kind == "bf16":
+        s_sl = jnp.ones((Cp,), jnp.float32)
+        payload = e.astype(jnp.bfloat16)
+        deq = payload.astype(jnp.float32)
+    else:
+        # per-row amax of |grad + residual| over every (data, model)
+        # slice: the 2D pmax makes the 2^-f grid global, so int32 chunk
+        # sums stay exact and every device decodes on the same scales
+        local_amax = jnp.zeros((L,), jnp.float32).at[row_of].max(jnp.abs(e))
+        amax = jax.lax.pmax(local_amax, axes2d)
+        _record("pmax.scale", _ring_allreduce_bytes(L * 4, D * M))
+        from ..core.quantizer import _exp2i
+        from ..kernels.qmatmul.ops import grid_exponent
+        scale = _exp2i(-grid_exponent(amax))            # [L]
+        s_sl = scale[row_of]
+        payload = jnp.clip(jnp.round(e / s_sl), -127, 127).astype(jnp.int8)
+        deq = payload.astype(jnp.float32) * s_sl
+    res1 = e - deq
+
+    # phase 1: reduce-scatter the slice over data as all_to_all
+    acc_t = jnp.float32 if kind == "bf16" else jnp.int32
+    if D > 1:
+        _record(f"all_to_all.{kind}",
+                (D - 1) / D * Cp * payload.dtype.itemsize)
+        ex = jax.lax.all_to_all(payload.reshape(D, C), daxes, 0, 0,
+                                tiled=False)
+        chunk_sum = jnp.sum(ex.astype(acc_t), axis=0)
+    else:
+        chunk_sum = payload.astype(acc_t)
+
+    # phase 2: requantize the owned chunk, gather the slice over data
+    q2, err2 = _phase2_requantize(chunk_sum, D, kind)
+    if D > 1:
+        _record(f"all_gather.{kind}", (D - 1) * C * q2.dtype.itemsize)
+        sl_q = jax.lax.all_gather(q2, daxes, axis=0, tiled=False
+                                  ).reshape(Cp)
+    else:
+        sl_q = q2.reshape(Cp)
+
+    # phase 3: rematerialize over model — the int8 sums cross the model
+    # axis, not fp32; decode once after the gather
+    if maxes and M > 1:
+        _record(f"all_gather.{kind}.model",
+                (M - 1) * Cp * sl_q.dtype.itemsize)
+        gath = jax.lax.all_gather(sl_q, maxes, axis=0, tiled=False)
+    else:
+        gath = sl_q[None]
+
+    shift = 2 ** _phase2_shift(D)
+    if k is not None:
+        if kind == "bf16":
+            dec = gath.astype(jnp.float32) / D
+        else:
+            dec = gath.astype(jnp.float32) * shift * s_sl[None] / D
+        blocks = dec[:, :Tb].reshape((gath.shape[0],) + tuple(B))
+        delivered = jnp.concatenate(
+            [blocks[m] for m in range(blocks.shape[0])], axis=k)
+    else:
+        flat_q = gath.reshape(-1)                       # [M * Cp]
+        if kind == "bf16":
+            dec = flat_q.astype(jnp.float32) / D
+        else:
+            row_full = jnp.minimum(jnp.arange(flat_q.shape[0]) // Prow_full,
+                                   L - 1)
+            dec = flat_q.astype(jnp.float32) * shift * scale[row_full] / D
+        delivered = dec[:_prod(S)].reshape(S)
+
+    # phase-2 error feedback: the chunk owner keeps the shift remainder
+    # inside its own slice, exactly like the 1D path
+    didx = jnp.int32(0)
+    for ax in daxes:
+        didx = didx * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
+    if kind != "bf16":
+        err2_val = err2 * jax.lax.dynamic_slice(s_sl, (didx * C,), (C,))
+    else:
+        err2_val = err2
+    new_r = res1 + jax.lax.dynamic_update_slice(
+        jnp.zeros((Cp,), jnp.float32), err2_val, (didx * C,))
+    return delivered.astype(dtype), new_r.astype(r.dtype)
+
+
+def _wire2d_specs(grads_stacked: Any, mesh):
+    """(grad in_specs, residual spec tree, delivered out_specs) for the 2D
+    collective: gradients enter stacked ``[n_data]`` over the data axes
+    AND model-sharded on their natural tensor axis, residuals in the
+    ``[n_data, n_model, C]`` sliced layout, delivered replicated."""
+    from .sharding import model_axis_for
+    daxes = data_axis_names(mesh)
+    maxes = _wire2d_model_axes(mesh)
+    M = model_axis_size(mesh)
+    d_entry = daxes if len(daxes) > 1 else daxes[0]
+
+    def gspec(leaf):
+        entries: list = [None] * leaf.ndim
+        entries[0] = d_entry
+        k = model_axis_for(leaf.shape[1:], M)
+        if k is not None and maxes:
+            entries[k + 1] = "model"
+        return P(*entries)
+
+    gin = jax.tree.map(gspec, grads_stacked)
+    rspec = jax.tree.map(
+        lambda leaf: P(d_entry, "model" if maxes else None, None),
+        grads_stacked)
+    dout = jax.tree.map(lambda leaf: P(*([None] * (leaf.ndim - 1))),
+                        grads_stacked)
+    return gin, rspec, dout
+
+
+def _wire2d_impl(grads_stacked: Any, residual: Any, mesh, kind: str
+                 ) -> Tuple[Any, Any]:
+    from .sharding import model_axis_for
+    daxes = data_axis_names(mesh)
+    maxes = _wire2d_model_axes(mesh)
+    D = data_axis_size(mesh)
+    M = model_axis_size(mesh)
+    shapes = [tuple(leaf.shape[1:])
+              for leaf in jax.tree.leaves(grads_stacked)]
+    ks = [model_axis_for(S, M) for S in shapes]
+
+    def body(gtree, rtree):
+        gflat, treedef = jax.tree.flatten(gtree)
+        rflat, _ = jax.tree.flatten(rtree)
+        pairs = [
+            _wire2d_leaf(g[0], r[0, 0], S, kk, daxes, maxes, D, M, kind)
+            for g, r, S, kk in zip(gflat, rflat, shapes, ks)]
+        delivered = jax.tree.unflatten(treedef, [d for d, _ in pairs])
+        new_res = jax.tree.unflatten(treedef,
+                                     [nr[None, None] for _, nr in pairs])
+        return delivered, new_res
+
+    gin, rspec, dout = _wire2d_specs(grads_stacked, mesh)
+    return shard_map(body, mesh=mesh, in_specs=(gin, rspec),
+                     out_specs=(dout, rspec), check_rep=False)(
+                         grads_stacked, residual)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def ef_wire_pmean_2d(grads_stacked: Any, residual: Any, mesh,
+                     kind: str = "int8") -> Tuple[Any, Any]:
+    """2D-sliced compressed mean all-reduce with error feedback.
+
+    ``grads_stacked`` is a pytree whose leaves carry a leading
+    ``[n_data]`` shard axis (each data shard's local gradient — NOT
+    pre-added with the residual: the add happens on the slice, inside the
+    collective); ``residual`` the matching ``[n_data, n_model, C]`` tree
+    from :func:`ef_wire2d_init`.  Returns ``(delivered, new_residual)``:
+    the int8/bf16-wire mean gradient, replicated, plus the sliced residual
+    for the next step.
+
+    The custom VJP passes the ``delivered`` cotangent through as the
+    transpose of an uncompressed shard mean (``ct / n_data`` per shard);
+    residual cotangents are dropped (state, not value).
+    """
+    _check_kind(kind)
+    return _wire2d_impl(grads_stacked, residual, mesh, kind)
+
+
+def _wire2d_fwd(grads_stacked, residual, mesh, kind):
+    return ef_wire_pmean_2d(grads_stacked, residual, mesh, kind), None
+
+
+def _wire2d_bwd(mesh, kind, _res, cts):
+    ct_delivered, ct_residual = cts
+    n = data_axis_size(mesh)
+    ct_g = jax.tree.map(
+        lambda ct: jnp.broadcast_to(ct[None] / n, (n,) + tuple(ct.shape)),
+        ct_delivered)
+    ct_r = jax.tree.map(jnp.zeros_like, ct_residual)
+    return (ct_g, ct_r)
+
+
+ef_wire_pmean_2d.defvjp(_wire2d_fwd, _wire2d_bwd)
+
+
+def simulate_wire_pmean_2d(grads_stacked: Any, residual: Any, n_model: int,
+                           kind: str = "int8") -> Tuple[Any, Any]:
+    """Collective-free reference of :func:`ef_wire_pmean_2d` on a stacked
+    ``[n_data, ...]`` gradient tree plus its ``[n_data, n_model, C]``
+    residual: same slicing, same grids, same chunking, same two-phase
+    errors — usable on one device.  The 8-device CI job asserts the
+    shard_map path matches this bit-for-bit on 2x4 and 4x2 meshes."""
+    _check_kind(kind)
+    from .sharding import model_axis_for
+
+    def leaf(es, res):
+        D = es.shape[0]
+        M = n_model
+        S = tuple(es.shape[1:])
+        dtype = es.dtype
+        T = _prod(S)
+        L, Prow_full = _wire2d_rows(S)
+        k = model_axis_for(S, M)
+        Cp = res.shape[-1]
+        C = Cp // D
+        shift = 2 ** _phase2_shift(D)
+
+        # per-(d, m) flat slices + row ids (identical to the shard_map body)
+        slices = [[None] * M for _ in range(D)]
+        rows = [None] * M
+        for d in range(D):
+            g32 = jnp.asarray(es[d], jnp.float32).reshape(-1)
+            for m in range(M):
+                if k is not None:
+                    Bk = S[k] // M
+                    blk = jax.lax.slice_in_dim(
+                        jnp.asarray(es[d], jnp.float32), m * Bk,
+                        (m + 1) * Bk, axis=k)
+                    Tb = blk.size
+                    slices[d][m] = jnp.pad(blk.reshape(-1), (0, Cp - Tb))
+                    rows[m] = jnp.minimum(
+                        jnp.arange(Cp) // (Tb // L), L - 1)
+                else:
+                    flat = jnp.pad(g32, (0, M * Cp - T))
+                    slices[d][m] = jax.lax.dynamic_slice(
+                        flat, (m * Cp,), (Cp,))
+                    pos = m * Cp + jnp.arange(Cp)
+                    rows[m] = jnp.minimum(pos // Prow_full, L - 1)
+        es_sl = [[slices[d][m] + jnp.asarray(res[d, m], jnp.float32)
+                  for m in range(M)] for d in range(D)]
+
+        if kind != "bf16":
+            local = [jnp.zeros((L,), jnp.float32).at[rows[m]].max(
+                jnp.abs(es_sl[d][m])) for d in range(D) for m in range(M)]
+            amax = jnp.max(jnp.stack(local), axis=0)
+            from ..core.quantizer import _exp2i
+            from ..kernels.qmatmul.ops import grid_exponent
+            scale = _exp2i(-grid_exponent(amax))
+
+        delivered_slices = [None] * M
+        new_res = [[None] * M for _ in range(D)]
+        for m in range(M):
+            if kind == "bf16":
+                s_sl = jnp.ones((Cp,), jnp.float32)
+                payloads = [es_sl[d][m].astype(jnp.bfloat16)
+                            for d in range(D)]
+                deqs = [p.astype(jnp.float32) for p in payloads]
+            else:
+                s_sl = scale[rows[m]]
+                payloads = [jnp.clip(jnp.round(es_sl[d][m] / s_sl), -127,
+                                     127).astype(jnp.int8) for d in range(D)]
+                deqs = [p.astype(jnp.float32) * s_sl for p in payloads]
+            res1 = [es_sl[d][m] - deqs[d] for d in range(D)]
+            acc_t = jnp.float32 if kind == "bf16" else jnp.int32
+            stacked = jnp.stack([p.reshape(D, C) for p in payloads])
+            sums = jnp.sum(stacked.astype(acc_t), axis=0)     # [D, C]
+            q2, err2 = _phase2_requantize(sums, D, kind)
+            sl_q = q2.reshape(Cp)
+            if kind == "bf16":
+                delivered_slices[m] = sl_q.astype(jnp.float32) / D
+            else:
+                delivered_slices[m] = (sl_q.astype(jnp.float32) * shift
+                                       * s_sl / D)
+            for d in range(D):
+                if kind != "bf16":
+                    err_val = err2[d] * jax.lax.dynamic_slice(
+                        s_sl, (d * C,), (C,))
+                else:
+                    err_val = err2[d]
+                new_res[d][m] = (res1[d] + jax.lax.dynamic_update_slice(
+                    jnp.zeros((Cp,), jnp.float32), err_val, (d * C,))
+                ).astype(res.dtype)
+
+        if k is not None:
+            Bk = S[k] // M
+            B = S[:k] + (Bk,) + S[k + 1:]
+            Tb = _prod(B)
+            blocks = [delivered_slices[m][:Tb].reshape(B) for m in range(M)]
+            delivered = jnp.concatenate(blocks, axis=k)
+        else:
+            delivered = jnp.concatenate(delivered_slices)[:T].reshape(S)
+        nr = jnp.stack([jnp.stack([new_res[d][m] for m in range(M)])
+                        for d in range(D)])
+        return delivered.astype(dtype), nr
+
+    gflat, treedef = jax.tree.flatten(grads_stacked)
+    rflat, _ = jax.tree.flatten(residual)
+    pairs = [leaf(g, r) for g, r in zip(gflat, rflat)]
+    return (jax.tree.unflatten(treedef, [d for d, _ in pairs]),
+            jax.tree.unflatten(treedef, [r for _, r in pairs]))
+
+
+def wire2d_leaf_bytes(shape, n_data: int, n_model: int, kind: str) -> float:
+    """Analytic per-device wire bytes of one 2D-sliced mean-reduce of a
+    leaf (matches :class:`record_wire_bytes` on the traced ops): data
+    all_to_all + all_gather on the 1/M slice, the int8 model-axis
+    all_gather, and the per-row scale pmax over all D*M devices."""
+    _check_kind(kind)
+    item = 1 if kind == "int8" else 2
+    Cp = wire2d_slice_len(shape, n_data, n_model)
+    C = Cp // n_data
+    a2a = (n_data - 1) / n_data * Cp * item if n_data > 1 else 0.0
+    ag = (n_data - 1) * C * item if n_data > 1 else 0.0
+    ag_model = (n_model - 1) * Cp * item if n_model > 1 else 0.0
+    L, _ = _wire2d_rows(shape)
+    scales = (_ring_allreduce_bytes(L * 4, n_data * n_model)
+              if kind == "int8" else 0.0)
+    return a2a + ag + ag_model + scales
+
+
+def tp_replication_bytes(shape, n_model: int) -> float:
+    """Per-device fp32 bytes the 1D wire path pays to rematerialize a
+    model-sharded gradient leaf before its model-replicated shard_map (an
+    all_gather over ``model`` GSPMD inserts implicitly): zero when the
+    leaf does not shard over ``model`` — and zero for the 2D path, whose
+    in_specs consume the sharded gradient directly."""
+    from .sharding import model_axis_for
+    if n_model <= 1 or model_axis_for(shape, n_model) is None:
+        return 0.0
+    return (n_model - 1) * (_prod(shape) / n_model) * 4.0
 
 
 def simulate_wire_pmean(e_stacked: Any, kind: str = "int8"

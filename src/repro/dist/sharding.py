@@ -51,6 +51,22 @@ def _key_name(k: Any) -> str:
     return str(k)
 
 
+def model_axis_for(shape: Sequence[int], model_size: int) -> Optional[int]:
+    """The (absolute) tensor axis the ``model`` mesh axis shards, or
+    ``None`` when the leaf replicates over ``model``.
+
+    One rule, shared by :func:`spec_for_param`, the 2D wire collective's
+    gradient in_specs, and its collective-free simulator — the larger of
+    the two trailing axes (axis -1 wins ties), only when it divides the
+    mesh's model size.  Rank < 2 leaves always replicate.
+    """
+    shape = tuple(shape)
+    if len(shape) < 2 or model_size <= 1:
+        return None
+    model_pos = len(shape) - 1 if shape[-1] >= shape[-2] else len(shape) - 2
+    return model_pos if shape[model_pos] % model_size == 0 else None
+
+
 def spec_for_param(path: Sequence[Any], shape: Sequence[int], mesh,
                    mode: str = "train") -> P:
     """Placement spec for one parameter leaf.
@@ -69,12 +85,11 @@ def spec_for_param(path: Sequence[Any], shape: Sequence[int], mesh,
     daxes = _data_axes(mesh)
     dsize = _data_size(mesh)
     entries: list = [None] * len(shape)
-    d0, d1 = shape[-2], shape[-1]
     # larger trailing axis -> model; axis -1 wins ties; the other -> data
-    model_pos = len(shape) - 1 if d1 >= d0 else len(shape) - 2
+    model_pos = len(shape) - 1 if shape[-1] >= shape[-2] else len(shape) - 2
     data_pos = len(shape) - 2 if model_pos == len(shape) - 1 \
         else len(shape) - 1
-    if model_size > 1 and shape[model_pos] % model_size == 0:
+    if model_axis_for(shape, model_size) is not None:
         entries[model_pos] = "model"
     if mode == "train" and dsize > 1 and shape[data_pos] % dsize == 0:
         entries[data_pos] = daxes if len(daxes) > 1 else daxes[0]
@@ -118,15 +133,29 @@ def cache_sharding(mesh, shape: Sequence[int], *, batch_axis: int = 1,
     return NamedSharding(mesh, P(*entries))
 
 
-def ef_residual_sharding(tree: Any, mesh) -> Any:
-    """Placement for the int8-wire error-feedback residual: every leaf
-    carries a leading ``[n_data]`` shard axis (one residual per data
-    shard, see ``collectives.ef_wire_init``), sharded over the data axes
-    exactly like the per-shard gradients it corrects — each device keeps
-    only its own residual slice.  Trailing axes replicate (the collective
-    body is manual over data only)."""
+def ef_residual_sharding(tree: Any, mesh, layout: str = "1d") -> Any:
+    """Placement for the int8-wire error-feedback residual.
+
+    ``layout="1d"`` (``collectives.ef_wire_init``): every leaf carries a
+    leading ``[n_data]`` shard axis (one residual per data shard), sharded
+    over the data axes exactly like the per-shard gradients it corrects —
+    each device keeps only its own residual slice; trailing axes replicate
+    (the collective body is manual over data only).
+
+    ``layout="2d"`` (``collectives.ef_wire2d_init``): every leaf is the
+    flat ``[n_data, n_model, C]`` slice stack of the 2D-sliced wire
+    collective — axis 0 shards over the data axes, axis 1 over ``model``,
+    so device ``(d, m)`` holds exactly its own ``[1, 1, C]`` residual
+    slice and nothing is replicated anywhere.
+    """
+    if layout not in ("1d", "2d"):
+        raise ValueError(f"layout must be '1d' or '2d', got {layout!r}")
     daxes = _data_axes(mesh)
     entries = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    if layout == "2d":
+        model = "model" if "model" in mesh.axis_names else None
+        return jax.tree.map(
+            lambda leaf: NamedSharding(mesh, P(entries, model, None)), tree)
 
     def spec(leaf):
         return NamedSharding(mesh, P(entries, *([None] * (leaf.ndim - 1))))

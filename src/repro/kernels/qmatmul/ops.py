@@ -9,7 +9,6 @@ through to serving).
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Optional, Tuple
 
@@ -17,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from .kernel import qmatmul
-from .ref import pack_ref, qmatmul_ref
+from .ref import pack_ref
 
 
 def default_interpret() -> bool:

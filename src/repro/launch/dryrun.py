@@ -18,23 +18,21 @@ import dataclasses
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ARCHS, SHAPES, ShapeSpec, get
 from ..core import hgq
 from ..dist.sharding import (batch_sharding, cache_sharding, replicated,
                              shard_tree)
-from ..models import (GriffinCaches, GriffinLM, ModelConfig, RWKVCaches,
-                      RWKVLM, TransformerLM, WhisperCaches, WhisperModel,
-                      model_for)
+from ..models import (GriffinCaches, ModelConfig, RWKVCaches,
+                      WhisperCaches, model_for)
 from ..nn.attention import KVCache
 from ..train import TrainConfig, lm_loss, make_train_step
 from .mesh import make_production_mesh
-from .roofline import mfu, terms_from_compiled
+from .roofline import mfu
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "experiments", "dryrun")

@@ -48,13 +48,17 @@ def main() -> None:
                     help="checkpoint every N steps (makes the EF-residual "
                          "resume path drivable in short runs)")
     ap.add_argument("--grad-compression",
-                    choices=["none", "bf16", "int8", "int8-wire"],
+                    choices=["none", "bf16", "int8", "int8-wire",
+                             "int8-wire-2d"],
                     default="none",
                     help="bf16/int8 quantize the synchronized gradient "
                          "(post-reduce); int8-wire compresses inside the "
                          "reduction — int8 bytes on the wire via "
-                         "dist.collectives (single-device runs fall back "
-                         "to the post-reduce int8 path)")
+                         "dist.collectives; int8-wire-2d additionally "
+                         "slices the exchange over the model (TP) axis — "
+                         "auto-selected for int8-wire when --mesh DxM has "
+                         "M>1 (single-device runs fall back to the "
+                         "post-reduce int8 path)")
     args = ap.parse_args()
 
     cfg = get(args.arch, smoke=not args.full)
@@ -89,11 +93,24 @@ def main() -> None:
     # two-phase int8 exchange, custom-vjp psum), so the gradient collective
     # itself is ~4x smaller.
     dsize = collectives.data_axis_size(mesh)
-    wire = args.grad_compression == "int8-wire" and dsize > 1
+    msize = collectives.model_axis_size(mesh)
+    wire_kinds = ("int8-wire", "int8-wire-2d")
+    # the 2D sliced exchange is strictly better whenever the mesh has a
+    # model axis (int8 instead of fp32 crosses it) — auto-upgrade int8-wire
+    wire_layout = ("2d" if (args.grad_compression == "int8-wire-2d"
+                            or msize > 1) else "1d")
+    wire = (args.grad_compression in wire_kinds
+            and (dsize > 1 or (wire_layout == "2d" and msize > 1)))
+    if args.grad_compression == "int8-wire" and wire and wire_layout == "2d":
+        print(f"mesh has model axis of size {msize}: upgrading int8-wire "
+              f"to the 2D-sliced exchange (int8-wire-2d)")
     grad_tx = None
     ef_state = None
-    if args.grad_compression == "int8-wire":
-        if wire:
+    if args.grad_compression in wire_kinds:
+        if wire and wire_layout == "2d":
+            ef_state = EFState(
+                residual=collectives.ef_wire2d_init(params, dsize, msize))
+        elif wire:
             ef_state = EFState(
                 residual=collectives.ef_wire_init(params, dsize))
         else:
@@ -107,7 +124,8 @@ def main() -> None:
     step_fn = make_train_step(fwd, lambda out, b: lm_loss(out, b["tokens"]),
                               tcfg, grad_tx=grad_tx,
                               reduce="compressed" if wire else "full",
-                              mesh=mesh if wire else None)
+                              mesh=mesh if wire else None,
+                              wire_layout=wire_layout if wire else "auto")
     with mesh:
         in_shardings = (shard_tree(params, mesh, "train"),
                         shard_tree(qstate, mesh, "train"),
@@ -118,7 +136,8 @@ def main() -> None:
                         replicated(mesh))
         donate = (0, 2)
         if ef_state is not None:
-            res_sh = (ef_residual_sharding(ef_state.residual, mesh) if wire
+            res_sh = (ef_residual_sharding(ef_state.residual, mesh,
+                                           layout=wire_layout) if wire
                       else shard_tree(ef_state.residual, mesh, "train"))
             in_shardings += (EFState(residual=res_sh),)
             donate += (5,)  # the residual threads step-to-step like opt
@@ -135,9 +154,10 @@ def main() -> None:
                 # EF residual resumes rather than resetting — but only when
                 # the checkpoint has a shape-compatible one (a run may turn
                 # compression on mid-stream, change kind, or rescale the
-                # mesh: the per-shard wire residual is [n_data, ...], so a
-                # rescale cannot re-chunk it — restart it at zero and eat
-                # one biased window instead of dying)
+                # mesh: the 1D wire residual is [n_data, ...] and the 2D
+                # one [n_data, n_model, C], so a rescale — or a 1d<->2d
+                # layout switch — cannot re-chunk it: warn, restart it at
+                # zero, and eat one biased window instead of dying)
                 if ef_state is not None and ckpt_lib.has_tree(
                         args.ckpt_dir, last, "ef"):
                     try:

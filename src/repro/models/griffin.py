@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import hgq
-from ..core.hgq import Aux, QTensor
+from ..core.hgq import Aux
 from ..dist.axes import constrain
 from ..nn.attention import (AttnConfig, GQAAttention, KVCache,
                             decode_positions)

@@ -11,7 +11,7 @@ every matmul sees quantized operands.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,8 +22,7 @@ from ..dist.axes import constrain
 from ..nn.attention import (AttnConfig, GQAAttention, KVCache,
                             decode_positions)
 from ..nn.basic import HDense, HEmbedding, LayerNorm, RMSNorm
-from ..nn.common import HGQConfig
-from ..nn.mlp import GLUMLP, MLP
+from ..nn.mlp import GLUMLP
 from ..nn.moe import MoE, MoEConfig
 from .config import ModelConfig
 

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import hgq
-from ..core.hgq import Aux, QTensor
+from ..core.hgq import Aux
 from ..dist.axes import constrain
 from ..nn.basic import HDense, HEmbedding, LayerNorm
 from ..nn.recurrent import (RWKVChannelMix, RWKVConfig, RWKVState,

@@ -17,7 +17,6 @@ from ..dist.axes import constrain
 from ..nn.attention import (AttnConfig, GQAAttention, KVCache,
                             decode_positions)
 from ..nn.basic import HDense, HEmbedding, LayerNorm
-from ..nn.common import act_q_init, apply_act_q
 from ..nn.mlp import MLP
 from .config import ModelConfig
 

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from ..core import hgq
 from ..core.hgq import Aux, QTensor
-from ..core.quantizer import quantize, quantize_inference, sg
+from ..core.quantizer import quantize, quantize_inference
 from ..dist.axes import constrain, get_model_size
 from .basic import HDense
 from .common import HGQConfig, act_q_init, apply_act_q

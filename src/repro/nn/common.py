@@ -81,7 +81,6 @@ def get_qw(p: Dict[str, Any], mode: str) -> QTensor:
     if "w_int8" in p:
         from ..dist.perf import unpack_weight
         w = unpack_weight(p)
-        from ..core.quantizer import train_bits
         return QTensor(w, None if p.get("f") is None else
                        jax.nn.relu(jnp.asarray(p["f"], jnp.float32)) + 1.0)
     qt = hgq.quant_weight(p["w"], p.get("f"), mode)

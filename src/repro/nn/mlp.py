@@ -8,7 +8,7 @@ import jax.numpy as jnp
 
 from ..core.hgq import Aux, QTensor
 from ..dist.axes import constrain
-from .basic import HDense, activation
+from .basic import HDense
 from .common import HGQConfig
 
 

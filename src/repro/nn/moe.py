@@ -21,8 +21,6 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import ebops as ebops_lib
-from ..core import hgq
 from ..core.hgq import Aux, QTensor
 from ..dist.axes import constrain
 from .basic import HDense, activation

@@ -14,7 +14,7 @@ TPU adaptation notes (DESIGN.md SS2):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +23,7 @@ from ..core import hgq
 from ..core.hgq import Aux, QTensor
 from ..dist.axes import constrain
 from .basic import HDense
-from .common import HGQConfig, act_q_init, apply_act_q, qweight_init, get_qw
+from .common import HGQConfig, qweight_init, get_qw
 
 
 # ===========================================================================

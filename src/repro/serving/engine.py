@@ -30,7 +30,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import warnings
-from typing import Any, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

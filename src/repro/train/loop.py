@@ -60,7 +60,7 @@ def make_train_step(forward: Forward, loss_fn: LossFn, tcfg: TrainConfig,
                     lr_sched: Optional[Schedule] = None,
                     grad_tx: Optional[Callable] = None,
                     reduce: str = "full", mesh=None,
-                    wire_kind: str = "int8"):
+                    wire_kind: str = "int8", wire_layout: str = "auto"):
     """Build the pure train step.
 
     With ``grad_tx`` (e.g. ``dist.ef_compress`` partial application: a
@@ -71,20 +71,36 @@ def make_train_step(forward: Forward, loss_fn: LossFn, tcfg: TrainConfig,
     ``reduce="compressed"`` moves the compression *into* the data-parallel
     reduction: per-shard gradients come from a vmap over ``n_data`` batch
     slices (sharded on the slice axis, so no fp32 gradient collective is
-    ever emitted) and are mean-reduced by the int8-on-the-wire two-phase
-    collective ``dist.collectives.ef_wire_pmean`` under ``mesh``.  The
-    ``tx_state`` residual then carries a leading ``[n_data]`` shard axis
-    (``collectives.ef_wire_init``; shard with
-    ``sharding.ef_residual_sharding``).  Global-norm clipping applies to
-    the *delivered* mean gradient (post-reduce compression clips before —
-    the true pre-reduce global norm is unknowable without the very fp32
-    reduce this path removes).  With ``mesh=None`` or one data shard the
-    compressed path degenerates to the current post-reduce
-    ``ef_compress(kind=wire_kind)`` transform, bit-for-bit.
+    ever emitted) and are mean-reduced by the int8-on-the-wire collective
+    under ``mesh``.  ``wire_layout`` picks the exchange topology:
+
+    * ``"1d"`` — ``collectives.ef_wire_pmean``: two-phase exchange over
+      the data axes only; every model (TP) shard reduces the full
+      gradient.  ``tx_state`` carries a leading ``[n_data]`` residual
+      (``collectives.ef_wire_init``; shard with
+      ``sharding.ef_residual_sharding``).
+    * ``"2d"`` — ``collectives.ef_wire_pmean_2d``: each (data, model)
+      device reduces only its 1/(D*M) slice, and one int8 all_gather over
+      ``model`` rematerializes the full gradient.  ``tx_state`` carries
+      the sliced ``[n_data, n_model, C]`` residual
+      (``collectives.ef_wire2d_init``; shard with
+      ``sharding.ef_residual_sharding(..., layout="2d")``).
+    * ``"auto"`` — ``"2d"`` when ``mesh`` has a model axis of size > 1,
+      else ``"1d"``.
+
+    Global-norm clipping applies to the *delivered* mean gradient
+    (post-reduce compression clips before — the true pre-reduce global
+    norm is unknowable without the very fp32 reduce this path removes).
+    With ``mesh=None``, or a single device, the compressed path
+    degenerates to the post-reduce ``ef_compress(kind=wire_kind)``
+    transform, bit-for-bit.
     """
     if reduce not in ("full", "compressed"):
         raise ValueError(f"reduce must be 'full' or 'compressed', "
                          f"got {reduce!r}")
+    if wire_layout not in ("auto", "1d", "2d"):
+        raise ValueError(f"wire_layout must be 'auto', '1d' or '2d', "
+                         f"got {wire_layout!r}")
     beta_sched = (constant(tcfg.beta_const) if tcfg.beta_const is not None
                   else log_ramp(tcfg.beta0, tcfg.beta1, tcfg.steps))
     lr_sched = lr_sched or constant(tcfg.lr)
@@ -96,14 +112,19 @@ def make_train_step(forward: Forward, loss_fn: LossFn, tcfg: TrainConfig,
                 "the compressed reduction IS the gradient transform "
                 "(wire_kind selects its quantization)")
         n_data = collectives.data_axis_size(mesh) if mesh is not None else 1
-        if n_data <= 1:
+        n_model = (collectives.model_axis_size(mesh)
+                   if mesh is not None else 1)
+        if wire_layout == "auto":
+            wire_layout = "2d" if n_model > 1 else "1d"
+        if n_data <= 1 and not (wire_layout == "2d" and n_model > 1):
             # single device: the wire is a no-op — the current post-reduce
             # error-feedback path IS the compressed path, exactly
             from ..dist import ef_compress
             grad_tx = lambda g, s: ef_compress(g, s, kind=wire_kind)
         else:
             return _make_compressed_step(forward, loss_fn, tcfg, beta_sched,
-                                         lr_sched, mesh, wire_kind, n_data)
+                                         lr_sched, mesh, wire_kind, n_data,
+                                         wire_layout)
 
     def _step(params, qstate, opt: AdamWState, batch, step, tx_state):
         beta = beta_sched(step)
@@ -138,14 +159,17 @@ def make_train_step(forward: Forward, loss_fn: LossFn, tcfg: TrainConfig,
 
 def _make_compressed_step(forward: Forward, loss_fn: LossFn,
                           tcfg: TrainConfig, beta_sched, lr_sched,
-                          mesh, wire_kind: str, n_data: int):
+                          mesh, wire_kind: str, n_data: int,
+                          wire_layout: str = "1d"):
     """The int8-on-the-wire train step (see ``make_train_step`` docstring).
 
     Per-shard gradients are materialized with a leading ``[n_data]`` axis
     (vmap of ``value_and_grad`` over equal batch slices, sharded over the
     data axes — the backward never sums across slices, so XLA emits no
-    gradient all-reduce at all); ``collectives.ef_wire_pmean`` is then the
-    only gradient communication in the program.
+    gradient all-reduce at all); the wire collective
+    (``collectives.ef_wire_pmean`` / ``ef_wire_pmean_2d`` per
+    ``wire_layout``) is then the only gradient communication in the
+    program.
     """
     def step_fn_wire(params, qstate, opt: AdamWState, batch, step, tx_state):
         beta = beta_sched(step)
@@ -170,8 +194,16 @@ def _make_compressed_step(forward: Forward, loss_fn: LossFn,
             jax.value_and_grad(loss_slice, has_aux=True),
             in_axes=(None, 0))(params, sliced)
         newq = _merge_sliced_qstate(newqs)
-        err = jax.tree.map(jnp.add, grads, tx_state.residual)
-        delivered, residual = collectives.ef_wire_pmean(err, mesh, wire_kind)
+        if wire_layout == "2d":
+            # the residual lives in the sliced [n_data, n_model, C] layout,
+            # so the grad+residual add happens on the slice, inside the
+            # collective — gradients go in raw
+            delivered, residual = collectives.ef_wire_pmean_2d(
+                grads, tx_state.residual, mesh, wire_kind)
+        else:
+            err = jax.tree.map(jnp.add, grads, tx_state.residual)
+            delivered, residual = collectives.ef_wire_pmean(err, mesh,
+                                                            wire_kind)
         delivered, gnorm = clip_by_global_norm(delivered, tcfg.clip_norm)
         params, opt = adamw_update(delivered, opt, params, lr=lr,
                                    weight_decay=tcfg.weight_decay)

@@ -1,0 +1,201 @@
+"""benchmarks/check_regression.py — the CI bench-gate.
+
+Pure-python tests: metric extraction from both bench schemas, the
+direction-aware tolerance compare, per-metric overrides, the
+injected-regression failure path (the acceptance contract: the gate MUST
+fail when wire bytes/element rises or smoke tokens/sec drops beyond
+tolerance, and MUST pass on an unchanged run), and --update
+re-baselining."""
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+import check_regression as gate  # noqa: E402
+
+
+COLLECTIVES = {
+    "bench": "collectives", "arch": "qwen2-0.5b-smoke", "devices": 8,
+    "runs": [
+        {"mode": "fp32", "bytes_per_element": 7.0, "step_ms": 30.0,
+         "reduction_vs_fp32": 1.0},
+        {"mode": "int8-wire", "bytes_per_element": 1.757, "step_ms": 80.0,
+         "reduction_vs_fp32": 3.98},
+    ],
+    "mesh2d": [
+        {"mesh": "2x4", "runs": [
+            {"mode": "int8-wire", "bytes_on_wire_per_device": 50000.0,
+             "tp_replication_bytes": 150000.0,
+             "total_bytes_per_element": 4.0, "step_ms": 35.0},
+            {"mode": "int8-wire-2d", "bytes_on_wire_per_device": 50500.0,
+             "tp_replication_bytes": 0.0,
+             "total_bytes_per_element": 1.006, "step_ms": 70.0,
+             "reduction_vs_1d": 3.98},
+        ]},
+    ],
+}
+
+SERVING = {
+    "bench": "serving", "arch": "qwen2-0.5b-smoke", "hbm_saving_x": 3.7,
+    "runs": [
+        {"mode": "fp", "decode_tokens_per_sec": 1980.0,
+         "mixed_tokens_per_sec": 800.0},
+        {"mode": "packed", "decode_tokens_per_sec": 1500.0,
+         "mixed_tokens_per_sec": 700.0},
+    ],
+}
+
+
+def _write(tmp_path, name, data):
+    p = os.path.join(tmp_path, name)
+    with open(p, "w") as f:
+        json.dump(data, f)
+    return p
+
+
+@pytest.fixture
+def gate_env(tmp_path):
+    """(fresh_dir, baseline_dir) with both benches baselined."""
+    tmp = str(tmp_path)
+    base = os.path.join(tmp, "baselines")
+    os.makedirs(base)
+    _write(base, "BENCH_collectives.json", COLLECTIVES)
+    _write(base, "BENCH_serving.json", SERVING)
+    return tmp, base
+
+
+def test_extract_collectives_metrics():
+    m = gate.extract_metrics(COLLECTIVES)
+    assert m["collectives.int8-wire.bytes_per_element"] == (1.757, "lower")
+    assert m["collectives[2x4].int8-wire-2d.total_bytes_per_element"] == \
+        (1.006, "lower")
+    assert m["collectives[2x4].int8-wire-2d.reduction_vs_1d"] == \
+        (3.98, "higher")
+
+
+def test_extract_serving_metrics():
+    m = gate.extract_metrics(SERVING)
+    assert m["serving.fp.decode_tokens_per_sec"] == (1980.0, "higher")
+    assert m["serving.packed.mixed_tokens_per_sec"] == (700.0, "higher")
+    assert m["serving.hbm_saving_x"] == (3.7, "higher")
+
+
+def test_unknown_bench_contributes_nothing():
+    assert gate.extract_metrics({"bench": "mystery", "runs": [{"x": 1}]}) \
+        == {}
+
+
+def test_gate_passes_on_identical_run(gate_env, capsys):
+    tmp, base = gate_env
+    fresh = _write(tmp, "BENCH_collectives.json", COLLECTIVES)
+    assert gate.main([fresh, "--baseline-dir", base]) == 0
+    assert "OK" in capsys.readouterr().out
+
+
+def test_gate_fails_on_injected_byte_regression(gate_env, capsys):
+    """The acceptance contract: bytes/element rising >10% must fail."""
+    tmp, base = gate_env
+    bad = copy.deepcopy(COLLECTIVES)
+    bad["runs"][1]["bytes_per_element"] = 2.4          # 1.757 -> +37%
+    fresh = _write(tmp, "BENCH_collectives.json", bad)
+    assert gate.main([fresh, "--baseline-dir", base]) == 1
+    err = capsys.readouterr().err
+    assert "bytes_per_element" in err and "rose" in err
+
+
+def test_gate_fails_on_2d_reduction_drop(gate_env, capsys):
+    tmp, base = gate_env
+    bad = copy.deepcopy(COLLECTIVES)
+    bad["mesh2d"][0]["runs"][1]["reduction_vs_1d"] = 1.2   # 3.98 -> 1.2
+    fresh = _write(tmp, "BENCH_collectives.json", bad)
+    assert gate.main([fresh, "--baseline-dir", base]) == 1
+    assert "reduction_vs_1d" in capsys.readouterr().err
+
+
+def test_gate_fails_on_tokens_per_sec_drop(gate_env, capsys):
+    tmp, base = gate_env
+    bad = copy.deepcopy(SERVING)
+    bad["runs"][0]["decode_tokens_per_sec"] = 900.0    # 1980 -> -55%
+    fresh = _write(tmp, "BENCH_serving.json", bad)
+    assert gate.main([fresh, "--baseline-dir", base]) == 1
+    assert "dropped" in capsys.readouterr().err
+
+
+def test_gate_ignores_improvements(gate_env):
+    """Direction-aware: fewer bytes / more tokens never fail."""
+    tmp, base = gate_env
+    good = copy.deepcopy(COLLECTIVES)
+    good["runs"][1]["bytes_per_element"] = 0.9
+    good["mesh2d"][0]["runs"][1]["reduction_vs_1d"] = 7.0
+    fresh = _write(tmp, "BENCH_collectives.json", good)
+    assert gate.main([fresh, "--baseline-dir", base]) == 0
+
+
+def test_gate_within_default_tolerance(gate_env):
+    tmp, base = gate_env
+    ok = copy.deepcopy(SERVING)
+    ok["runs"][0]["decode_tokens_per_sec"] = 1980.0 * 0.95   # -5% < 10%
+    fresh = _write(tmp, "BENCH_serving.json", ok)
+    assert gate.main([fresh, "--baseline-dir", base]) == 0
+
+
+def test_per_metric_override_loosens(gate_env):
+    """--override PATTERN=TOL: a 40% throughput drop passes at tol 0.5
+    but the untouched byte metrics keep the tight default."""
+    tmp, base = gate_env
+    noisy = copy.deepcopy(SERVING)
+    for row in noisy["runs"]:
+        row["decode_tokens_per_sec"] *= 0.6
+        row["mixed_tokens_per_sec"] *= 0.6
+    fresh = _write(tmp, "BENCH_serving.json", noisy)
+    assert gate.main([fresh, "--baseline-dir", base]) == 1
+    assert gate.main([fresh, "--baseline-dir", base,
+                      "--override", "serving.*tokens_per_sec=0.5"]) == 0
+
+
+def test_override_last_match_wins():
+    assert gate.tolerance_for("a.b", 0.1, [("a.*", 0.3), ("a.b", 0.05)]) \
+        == 0.05
+    assert gate.tolerance_for("zzz", 0.1, [("a.*", 0.3)]) == 0.1
+
+
+def test_missing_baseline_is_exit_2(gate_env, capsys):
+    tmp, base = gate_env
+    fresh = _write(tmp, "BENCH_unknown.json", SERVING)
+    assert gate.main([fresh, "--baseline-dir", base]) == 2
+    assert "no baseline" in capsys.readouterr().err
+
+
+def test_new_metric_warns_then_strict_fails(gate_env, capsys):
+    tmp, base = gate_env
+    grown = copy.deepcopy(SERVING)
+    grown["runs"].append({"mode": "spec-decode",
+                          "decode_tokens_per_sec": 5000.0,
+                          "mixed_tokens_per_sec": 2000.0})
+    fresh = _write(tmp, "BENCH_serving.json", grown)
+    assert gate.main([fresh, "--baseline-dir", base]) == 0
+    assert "WARN" in capsys.readouterr().out
+    assert gate.main([fresh, "--baseline-dir", base, "--strict"]) == 1
+
+
+def test_update_rebaselines(gate_env):
+    tmp, base = gate_env
+    newer = copy.deepcopy(COLLECTIVES)
+    newer["runs"][1]["bytes_per_element"] = 1.5
+    fresh = _write(tmp, "BENCH_collectives.json", newer)
+    assert gate.main([fresh, "--baseline-dir", base, "--update"]) == 0
+    # the regression that would have failed is now the baseline
+    assert gate.main([fresh, "--baseline-dir", base]) == 0
+    with open(os.path.join(base, "BENCH_collectives.json")) as f:
+        assert json.load(f)["runs"][1]["bytes_per_element"] == 1.5
+
+
+def test_bad_override_is_exit_2(gate_env, capsys):
+    tmp, base = gate_env
+    fresh = _write(tmp, "BENCH_serving.json", SERVING)
+    assert gate.main([fresh, "--baseline-dir", base,
+                      "--override", "nonsense"]) == 2

@@ -249,7 +249,11 @@ def test_compressed_step_tracks_post_reduce():
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     n = collectives.data_axis_size(mesh)
 
-    step_c = make_train_step(fwd, loss, tc, reduce="compressed", mesh=mesh)
+    # wire_layout pinned to "1d": this test drives the 1D collective (the
+    # 2x4-mesh default would auto-select the 2D sliced path, see
+    # tests/test_wire2d.py)
+    step_c = make_train_step(fwd, loss, tc, reduce="compressed", mesh=mesh,
+                             wire_layout="1d")
     step_r = make_train_step(
         fwd, loss, tc, grad_tx=lambda g, s: ef_compress(g, s, kind="int8"))
     with mesh:
@@ -293,7 +297,8 @@ def test_compressed_step_hlo_moves_int8():
     tc = TrainConfig(steps=8, lr=3e-3)
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     n = collectives.data_axis_size(mesh)
-    step = make_train_step(fwd, loss, tc, reduce="compressed", mesh=mesh)
+    step = make_train_step(fwd, loss, tc, reduce="compressed", mesh=mesh,
+                           wire_layout="1d")
     with mesh:
         ec = EFState(residual=ef_wire_init(p0, n))
         hlo = jax.jit(step).lower(p0, q0, adamw_init(p0), pipe(0),
