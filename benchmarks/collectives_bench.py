@@ -62,20 +62,27 @@ def main() -> None:
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    from repro.configs import get
+    from repro.api import (CompressionSpec, MeshSpec, RunSpec, build,
+                           build_mesh)
     from repro.dist import collectives
-    from repro.dist.sharding import ef_residual_sharding
-    from repro.models import model_for
+    from repro.dist.sharding import ef_residual_sharding, stacked_tree
 
-    cfg = get(args.arch, smoke=not args.full)
-    M = model_for(cfg)
-    params, _ = M.init(jax.random.PRNGKey(0), cfg)
+    # the bench measures the same declarative config surface the
+    # launcher trains: one RunSpec per (mesh, compression) cell
     n = args.devices
-    mesh = jax.make_mesh((n, 1), ("data", "model"))
+    spec_1d = RunSpec(arch=args.arch, full=args.full,
+                      mesh=MeshSpec.host(n, 1),
+                      compression=CompressionSpec(kind="int8-wire"))
+    ctx = build(spec_1d)
+    cfg = ctx.cfg
+    mesh = ctx.mesh
+    params, _ = ctx.init_state()
 
     leaves = jax.tree.leaves(params)
+    stacked_flags = jax.tree.leaves(stacked_tree(params))
     elements = int(sum(x.size for x in leaves))
-    scale_rows = int(sum(x.shape[0] if x.ndim >= 3 else 1 for x in leaves))
+    scale_rows = int(sum(x.shape[0] if (st and x.ndim >= 3) else 1
+                         for x, st in zip(leaves, stacked_flags)))
     stacked = jax.tree.map(
         lambda x: jax.random.normal(
             jax.random.PRNGKey(x.size % 9973),
@@ -130,7 +137,10 @@ def main() -> None:
     shapes_2d = [(n // m, m) for m in (4, 2)
                  if m < n and n % m == 0 and n // m >= 1]
     for (D, M) in shapes_2d:
-        mesh_dm = jax.make_mesh((D, M), ("data", "model"))
+        spec_2d = RunSpec(arch=args.arch, full=args.full,
+                          mesh=MeshSpec.host(D, M),
+                          compression=CompressionSpec(kind="int8-wire-2d"))
+        mesh_dm = build_mesh(spec_2d.mesh)
         stacked_dm = jax.tree.map(
             lambda x: jax.random.normal(
                 jax.random.PRNGKey(x.size % 9973),
@@ -169,10 +179,12 @@ def main() -> None:
                 "total_bytes_per_element": round(total2 / elements, 3),
                 "step_ms": round(ms2, 2),
                 "reduction_vs_1d": round(total1 / total2, 2)})
-        mesh2d.append({"mesh": f"{D}x{M}", "runs": dm_rows})
+        mesh2d.append({"mesh": f"{D}x{M}", "spec": spec_2d.to_dict(),
+                       "runs": dm_rows})
 
     result = {
         "bench": "collectives", "arch": cfg.name,
+        "spec": spec_1d.to_dict(),
         "backend": jax.default_backend(), "devices": n,
         "grad_elements": elements, "scale_rows": scale_rows,
         "bytes_model": {

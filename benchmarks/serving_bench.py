@@ -39,11 +39,12 @@ def ragged_requests(vocab: int, n: int, max_new: int, seed: int = 7):
     return reqs
 
 
-def bench_engine(M, params, qstate, cfg, *, packed: bool, n_requests: int,
+def bench_engine(ctx, params, qstate, *, n_requests: int,
                  max_new: int, batch_slots: int, max_len: int) -> dict:
-    from repro.serving import Engine
-    eng = Engine(M, params, qstate, cfg, batch_slots=batch_slots,
-                 max_len=max_len, prefill_chunk=8, packed=packed)
+    cfg = ctx.cfg
+    packed = ctx.spec.precision.packed_serving
+    eng = ctx.make_engine(params, qstate, batch_slots=batch_slots,
+                          max_len=max_len, prefill_chunk=8)
     # warmup: compile decode/prefill/sample once
     eng.run(ragged_requests(cfg.vocab, batch_slots, 4))
     # decode-only: saturate every slot (prefill + first token untimed),
@@ -64,6 +65,7 @@ def bench_engine(M, params, qstate, cfg, *, packed: bool, n_requests: int,
     dt = time.perf_counter() - t0
     new_tokens = sum(len(r.out) for r in reqs)
     return {"mode": "packed" if packed else "fp",
+            "spec": ctx.spec.to_dict(),
             "requests": n_requests,
             "decode_tokens": dec_tokens, "decode_wall_s": round(dt_dec, 4),
             "decode_tokens_per_sec": round(dec_tokens / dt_dec, 2),
@@ -87,17 +89,23 @@ def main() -> None:
     if args.smoke:
         args.requests, args.max_new = 6, 6
 
-    from repro.configs import get
-    from repro.models import model_for
+    import dataclasses
+
+    from repro.api import PrecisionSpec, RunSpec, build
     from repro.serving.packed import pack_tree, packed_nbytes
 
-    cfg = get(args.arch, smoke=not args.full)
-    M = model_for(cfg)
-    params, qstate = M.init(jax.random.PRNGKey(0), cfg)
+    # the bench measures exactly the declarative config the launcher and
+    # the serving example run: one RunSpec per mode, two coexisting
+    # contexts (the packed engine's traces never touch the fp one's)
+    base = RunSpec(arch=args.arch, full=args.full)
+    ctxs = [build(dataclasses.replace(
+        base, precision=PrecisionSpec(packed_serving=packed)))
+        for packed in (False, True)]
+    params, qstate = ctxs[0].init_state()
 
     rows = []
-    for packed in (False, True):
-        row = bench_engine(M, params, qstate, cfg, packed=packed,
+    for ctx in ctxs:
+        row = bench_engine(ctx, params, qstate,
                            n_requests=args.requests, max_new=args.max_new,
                            batch_slots=args.batch_slots,
                            max_len=args.max_len)
@@ -109,7 +117,7 @@ def main() -> None:
 
     fp_b, q_b = packed_nbytes(params), packed_nbytes(pack_tree(params))
     result = {
-        "bench": "serving", "arch": cfg.name,
+        "bench": "serving", "arch": ctxs[0].cfg.name,
         "backend": jax.default_backend(),
         "batch_slots": args.batch_slots, "max_len": args.max_len,
         "weight_bytes_fp": fp_b, "weight_bytes_packed": q_b,

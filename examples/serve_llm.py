@@ -1,22 +1,26 @@
 """Continuous-batching serving example: ragged per-slot decode + HGQ
 int8-packed weights on the decode hot path.
 
-Runs a reduced llama-family model, serves a ragged workload (prompts of
-different lengths joining and leaving mid-run) through the single jitted
-per-slot decode step, then re-serves it with ``packed=True`` — decode
-projections running on the fused int8 dequant-matmul Pallas kernel
-(``kernels/qmatmul``), the TPU serving win of HGQ (DESIGN.md SS2: decode
-is HBM-bound; packed weights halve the streamed bytes).
+Each serving mode is a declarative ``repro.api.RunSpec`` (fp vs
+``precision.packed_serving=True``), and the two engines are built from
+two *coexisting* RunContexts in one process — the packed engine's traces
+never perturb the fp engine's (no global flags).  Runs a reduced
+llama-family model, serves a ragged workload (prompts of different
+lengths joining and leaving mid-run) through the single jitted per-slot
+decode step in both modes; packed decode projections run on the fused
+int8 dequant-matmul Pallas kernel (``kernels/qmatmul``), the TPU serving
+win of HGQ (DESIGN.md SS2: decode is HBM-bound; packed weights halve the
+streamed bytes).
 
     PYTHONPATH=src python examples/serve_llm.py
 """
+import dataclasses
 import time
 
 import jax
 
-from repro.configs import get
-from repro.models import model_for
-from repro.serving import Engine, Request, SamplingConfig, generate
+from repro.api import PrecisionSpec, RunSpec, build
+from repro.serving import Request, SamplingConfig, generate
 from repro.serving.packed import pack_tree, packed_nbytes
 
 
@@ -32,32 +36,37 @@ def make_requests(vocab):
     return reqs
 
 
-def serve(M, params, qstate, cfg, *, packed):
-    eng = Engine(M, params, qstate, cfg, batch_slots=4, max_len=64,
-                 prefill_chunk=8, packed=packed)
-    reqs = make_requests(cfg.vocab)
+def serve(ctx, params, qstate):
+    eng = ctx.make_engine(params, qstate, batch_slots=4, max_len=64,
+                          prefill_chunk=8)
+    reqs = make_requests(ctx.cfg.vocab)
     t0 = time.perf_counter()
     eng.run(reqs)
     dt = time.perf_counter() - t0
     new_tokens = sum(len(r.out) for r in reqs)
-    tag = "packed" if packed else "fp"
+    tag = "packed" if eng.packed else "fp"
     print(f"[{tag}] {len(reqs)} requests, {new_tokens} new tokens "
           f"in {dt:.2f}s ({new_tokens / dt:.1f} tok/s incl. compile)")
     return reqs
 
 
 def main():
-    cfg = get("llama3.2-3b", smoke=True)
-    M = model_for(cfg)
-    params, qstate = M.init(jax.random.PRNGKey(0), cfg)
+    spec = RunSpec(arch="llama3.2-3b")
+    packed_spec = dataclasses.replace(
+        spec, precision=PrecisionSpec(packed_serving=True))
+
+    # two contexts, two precisions, one process: the fp and packed
+    # engines trace under their own spec — nothing global is shared
+    ctx, packed_ctx = build(spec), build(packed_spec)
+    params, qstate = ctx.init_state()
 
     # ---- fp engine: ragged continuous batching -----------------------
-    reqs = serve(M, params, qstate, cfg, packed=False)
+    reqs = serve(ctx, params, qstate)
     for i, r in enumerate(reqs):
         print(f"  request {i}: prompt[{len(r.prompt)}] -> {r.out}")
 
     # ---- packed engine: int8 weights on the decode path --------------
-    packed_reqs = serve(M, params, qstate, cfg, packed=True)
+    packed_reqs = serve(packed_ctx, params, qstate)
     greedy = [i for i, r in enumerate(reqs) if r.sampling is None]
     agree = sum(reqs[i].out == packed_reqs[i].out for i in greedy)
     print(f"  greedy packed-vs-fp request agreement: {agree}/{len(greedy)}")
@@ -68,7 +77,7 @@ def main():
     # ---- per-request greedy reference (what the tests assert) --------
     import jax.numpy as jnp
     r = reqs[0]
-    ref = generate(M, params, qstate, cfg,
+    ref = generate(ctx.model, params, qstate, ctx.cfg,
                    jnp.asarray([r.prompt], jnp.int32), r.max_new,
                    cache_len=64)
     print(f"  engine == generate() for request 0: "

@@ -1,61 +1,57 @@
 """End-to-end LM training driver: any assigned arch (smoke or full config),
 HGQ quantization-aware, checkpointed + resumable.
 
+Configuration is one declarative ``repro.api.RunSpec`` (the same surface
+``repro.launch.train`` and the benchmarks parse): CLI flags are overrides
+on a spec, ``--spec run.json`` loads one whole.
+
 CPU demo (default; a reduced llama-family model, a few hundred steps):
     PYTHONPATH=src python examples/train_lm.py --arch llama3.2-3b --steps 200
 
-On a real pod the same driver runs the full config under the production
+On a real pod the same spec drives the full config under the production
 mesh (see src/repro/launch/train.py for the pjit wrapper).
 """
-import argparse
+import dataclasses
 
-import jax
 import jax.numpy as jnp
 
-from repro.configs import get
-from repro.data import DataSpec, make_pipeline
-from repro.models import model_for
-from repro.train import TrainConfig, Trainer, lm_loss
+from repro.api import RunSpec, build
+from repro.train import Trainer, lm_loss
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-3b")
-    ap.add_argument("--steps", type=int, default=200)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=64)
-    ap.add_argument("--full", action="store_true",
-                    help="use the full (pod-scale) config instead of smoke")
-    ap.add_argument("--ckpt-dir", default="")
-    args = ap.parse_args()
+    # this example's own defaults — a llama-family arch, a longer run, a
+    # denser batch than the launcher.  Explicit flags override them; a
+    # --spec file replaces them entirely (never silently rewritten).
+    base = RunSpec(
+        arch="llama3.2-3b",
+        train=dataclasses.replace(RunSpec().train, steps=200,
+                                  log_every=20, ckpt_every=50),
+        data=dataclasses.replace(RunSpec().data, batch=8, seq=64))
+    spec = RunSpec.from_parsed(RunSpec.parser().parse_args(), base=base)
 
-    cfg = get(args.arch, smoke=not args.full)
-    M = model_for(cfg)
+    ctx = build(spec)
+    cfg = ctx.cfg
     print(f"arch={cfg.name} params={cfg.n_params()/1e6:.1f}M "
           f"(active {cfg.n_active_params()/1e6:.1f}M)")
-    params, qstate = M.init(jax.random.PRNGKey(0), cfg)
-
-    pipe_raw = make_pipeline(DataSpec(kind="lm", batch=args.batch,
-                                      seq=args.seq, vocab=cfg.vocab))
+    params, qstate = ctx.init_state()
+    pipe_raw = ctx.make_pipeline()
+    batch = spec.data.batch
 
     def pipe(step):
         b = pipe_raw(step)
         if cfg.family == "vlm":
-            b["patch_embeds"] = jnp.zeros((args.batch, cfg.n_patches,
+            b["patch_embeds"] = jnp.zeros((batch, cfg.n_patches,
                                            cfg.d_model))
         if cfg.family == "audio":
-            b["frame_embeds"] = jnp.zeros((args.batch, cfg.enc_seq,
+            b["frame_embeds"] = jnp.zeros((batch, cfg.enc_seq,
                                            cfg.d_model))
         return b
 
-    fwd = lambda p, q, batch, mode: M.forward(p, q, batch, cfg, mode)
-    tcfg = TrainConfig(steps=args.steps, lr=1e-3, beta0=1e-9, beta1=1e-7,
-                       log_every=max(args.steps // 10, 1),
-                       ckpt_every=max(args.steps // 4, 1),
-                       ckpt_dir=args.ckpt_dir)
-    tr = Trainer(fwd, lambda out, b: lm_loss(out, b["tokens"]), tcfg,
+    tr = Trainer(ctx.wrap(ctx.forward),
+                 lambda out, b: lm_loss(out, b["tokens"]), spec.train,
                  params, qstate, pipeline=pipe)
-    if args.ckpt_dir and tr.maybe_resume():
+    if spec.train.ckpt_dir and tr.maybe_resume():
         print(f"resumed from step {tr.start_step}")
     res = tr.run()
     print(f"final loss={res['metrics']['loss']:.4f} "

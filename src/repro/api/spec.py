@@ -1,0 +1,365 @@
+"""RunSpec: the one declarative, serializable configuration surface.
+
+Every scenario this repo runs — CPU smoke training, FSDP x TP host
+meshes, the 512-chip production dry-run, int8-wire gradient compression,
+bf16 compute, packed int8 serving — is a *value* of :class:`RunSpec`, a
+frozen composition of:
+
+* :class:`MeshSpec` — mesh topology (data/model/pod axes; host vs
+  production devices);
+* :class:`PrecisionSpec` — matmul compute dtype, int8 serving-weight
+  packing, packed-kernel routing;
+* :class:`CompressionSpec` — gradient compression kind, wire exchange
+  layout, error-feedback residual layout;
+* the existing :class:`repro.train.TrainConfig` and
+  :class:`repro.data.DataSpec`.
+
+``RunSpec.to_json`` / ``from_json`` round-trip exactly
+(``RunSpec.from_json(s.to_json()) == s``), so the config a CI bench-gate
+measures can be byte-identical to the config a launcher trains.
+``RunSpec.from_args`` is the single CLI parser the launchers share:
+``--spec run.json`` loads a spec file, and the classic flags
+(``--mesh 2x4``, ``--grad-compression int8-wire`` ...) are overrides on
+top of it.  :func:`repro.api.build` turns a spec into a
+:class:`repro.api.RunContext` — mesh, axis registry, shardings, train
+step, serving engine — with no module-level mutable state.
+
+This module is pure configuration: no jax import, no device state.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+from ..data.synthetic import DataSpec
+from ..train.loop import TrainConfig
+
+GRAD_COMPRESSION_KINDS = ("none", "bf16", "int8", "int8-wire",
+                          "int8-wire-2d")
+WIRE_LAYOUTS = ("auto", "1d", "2d")
+COMPUTE_DTYPES = (None, "bfloat16", "float32")
+
+
+def _check(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ValueError(msg)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """Mesh topology as data: replaces per-launcher mesh wiring.
+
+    ``kind="host"`` builds a ``data x model`` mesh over (forced) host
+    devices — ``MeshSpec()`` is the 1x1 smoke mesh, ``MeshSpec(data=2,
+    model=4)`` the 2x4 FSDP x TP mesh (needs
+    ``XLA_FLAGS=--xla_force_host_platform_device_count>=8``).
+    ``kind="production"`` is the 16x16 pod slice; ``pods=2`` adds the
+    outer ``pod`` data axis (2x16x16, the multi-pod dry-run mesh).
+    """
+    kind: str = "host"          # "host" | "production"
+    data: int = 1
+    model: int = 1
+    pods: int = 1
+
+    def __post_init__(self):
+        _check(self.kind in ("host", "production"),
+               f"MeshSpec.kind must be 'host' or 'production', "
+               f"got {self.kind!r}")
+        _check(self.data >= 1 and self.model >= 1 and self.pods >= 1,
+               f"MeshSpec sizes must be >= 1, got {self}")
+        _check(self.kind == "production" or self.pods == 1,
+               "multi-pod meshes are production meshes (pods > 1 needs "
+               "kind='production')")
+
+    @classmethod
+    def host(cls, data: int = 1, model: int = 1) -> "MeshSpec":
+        return cls(kind="host", data=data, model=model)
+
+    @classmethod
+    def production(cls, multi_pod: bool = False) -> "MeshSpec":
+        """The 16x16 = 256-chip pod slice (2 pods = 512 chips)."""
+        return cls(kind="production", data=16, model=16,
+                   pods=2 if multi_pod else 1)
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return (("pod", "data", "model") if self.pods > 1
+                else ("data", "model"))
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return ((self.pods, self.data, self.model) if self.pods > 1
+                else (self.data, self.model))
+
+    @property
+    def device_count(self) -> int:
+        return self.pods * self.data * self.model
+
+    @property
+    def data_size(self) -> int:
+        """Total data-parallel degree (pod is outer data parallelism)."""
+        return self.pods * self.data
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionSpec:
+    """Compute/serving precision as data: replaces ``set_compute_dtype``
+    and the ad-hoc ``Engine(packed=...)`` / ``set_packed_matmul`` wiring.
+
+    * ``compute_dtype`` — matmul operand cast (``dist.perf
+      .cast_for_matmul``): ``None`` (no cast), ``"bfloat16"`` or
+      ``"float32"``;
+    * ``packed_serving`` — serve from the HGQ int8-packed weight tree
+      (``serving/packed.py``);
+    * ``packed_matmul`` — route packed weights onto the fused Pallas
+      dequant-matmul kernel; ``None`` follows ``packed_serving``.
+    """
+    compute_dtype: Optional[str] = None
+    packed_serving: bool = False
+    packed_matmul: Optional[bool] = None
+
+    def __post_init__(self):
+        _check(self.compute_dtype in COMPUTE_DTYPES,
+               f"PrecisionSpec.compute_dtype must be one of "
+               f"{COMPUTE_DTYPES}, got {self.compute_dtype!r}")
+
+    @property
+    def packed_kernels(self) -> bool:
+        """The resolved packed-kernel routing flag."""
+        return (self.packed_serving if self.packed_matmul is None
+                else self.packed_matmul)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionSpec:
+    """Gradient-compression configuration as data.
+
+    * ``kind`` — ``none`` | post-reduce error feedback (``bf16``,
+      ``int8``) | in-reduction wire compression (``int8-wire``,
+      ``int8-wire-2d``);
+    * ``wire_layout`` — exchange topology for the wire kinds: ``1d``
+      (data axes only), ``2d`` (sliced over data x model), or ``auto``
+      (2d whenever the mesh has a model axis of size > 1 — the strictly
+      better choice there);
+    * ``residual_layout`` — error-feedback residual placement;
+      ``auto`` follows the resolved wire layout (``sharding
+      .ef_residual_sharding``'s ``[n_data, ...]`` stack vs the sliced
+      ``[n_data, n_model, C]`` tree).
+    """
+    kind: str = "none"
+    wire_layout: str = "auto"
+    residual_layout: str = "auto"
+
+    def __post_init__(self):
+        _check(self.kind in GRAD_COMPRESSION_KINDS,
+               f"CompressionSpec.kind must be one of "
+               f"{GRAD_COMPRESSION_KINDS}, got {self.kind!r}")
+        _check(self.wire_layout in WIRE_LAYOUTS,
+               f"CompressionSpec.wire_layout must be one of "
+               f"{WIRE_LAYOUTS}, got {self.wire_layout!r}")
+        _check(self.residual_layout in WIRE_LAYOUTS,
+               f"CompressionSpec.residual_layout must be one of "
+               f"{WIRE_LAYOUTS}, got {self.residual_layout!r}")
+        _check(not (self.kind == "int8-wire-2d"
+                    and self.wire_layout == "1d"),
+               "int8-wire-2d IS the 2D layout; wire_layout='1d' "
+               "contradicts it")
+
+    @property
+    def is_wire(self) -> bool:
+        return self.kind in ("int8-wire", "int8-wire-2d")
+
+    @property
+    def wire_kind(self) -> str:
+        """Payload dtype of the wire collective (int8 unless bf16)."""
+        return "bf16" if self.kind == "bf16" else "int8"
+
+    def resolved_wire_layout(self, model_size: int) -> str:
+        """The concrete exchange layout on a mesh with ``model_size`` TP
+        shards: the 2D sliced exchange is strictly better whenever the
+        mesh has a model axis (int8 instead of fp32 crosses it)."""
+        if self.kind == "int8-wire-2d":
+            return "2d"
+        if self.wire_layout != "auto":
+            return self.wire_layout
+        return "2d" if model_size > 1 else "1d"
+
+    def resolved_residual_layout(self, model_size: int) -> str:
+        if self.residual_layout != "auto":
+            return self.residual_layout
+        return self.resolved_wire_layout(model_size)
+
+
+def _default_train() -> TrainConfig:
+    # the launcher's classic training hyperparameters (launch.train)
+    return TrainConfig(steps=20, lr=1e-3, beta0=1e-9, beta1=1e-7)
+
+
+def _default_data() -> DataSpec:
+    # vocab=0 resolves to the architecture's vocab at build time
+    return DataSpec(kind="lm", batch=4, seq=32, vocab=0, seed=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """One run, fully specified: arch + mesh + precision + compression +
+    train/data config + seed.  See the module docstring."""
+    arch: str = "qwen2-0.5b"
+    full: bool = False
+    seed: int = 0
+    mesh: MeshSpec = dataclasses.field(default_factory=MeshSpec)
+    precision: PrecisionSpec = dataclasses.field(
+        default_factory=PrecisionSpec)
+    compression: CompressionSpec = dataclasses.field(
+        default_factory=CompressionSpec)
+    train: TrainConfig = dataclasses.field(default_factory=_default_train)
+    data: DataSpec = dataclasses.field(default_factory=_default_data)
+
+    # ------------------------- serialization --------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True) + "\n"
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "RunSpec":
+        parts = {"mesh": MeshSpec, "precision": PrecisionSpec,
+                 "compression": CompressionSpec, "train": TrainConfig,
+                 "data": DataSpec}
+        d = dict(d)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        _check(not unknown, f"unknown RunSpec fields: {sorted(unknown)}")
+        for name, sub in parts.items():
+            if isinstance(d.get(name), dict):
+                sub_known = {f.name for f in dataclasses.fields(sub)}
+                sub_unknown = set(d[name]) - sub_known
+                _check(not sub_unknown,
+                       f"unknown {sub.__name__} fields: "
+                       f"{sorted(sub_unknown)}")
+                d[name] = sub(**d[name])
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "RunSpec":
+        return cls.from_dict(json.loads(s))
+
+    @classmethod
+    def from_file(cls, path: str) -> "RunSpec":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    # ----------------------------- CLI --------------------------------
+
+    @classmethod
+    def parser(cls, **kwargs) -> argparse.ArgumentParser:
+        """The shared launcher argument parser: ``--spec run.json`` plus
+        the classic flags as overrides (every flag maps to one spec
+        field; see the README migration table)."""
+        ap = argparse.ArgumentParser(**kwargs)
+        ap.add_argument("--spec", default=None, metavar="RUN_JSON",
+                        help="RunSpec JSON file; other flags override "
+                             "individual fields of it")
+        ap.add_argument("--arch", default=None)
+        ap.add_argument("--full", action="store_true", default=None,
+                        help="use the full (published) config, not smoke")
+        ap.add_argument("--steps", type=int, default=None)
+        ap.add_argument("--batch", type=int, default=None)
+        ap.add_argument("--seq", type=int, default=None)
+        ap.add_argument("--seed", type=int, default=None,
+                        help="PRNG seed for init AND the data pipeline")
+        ap.add_argument("--production-mesh", action="store_true",
+                        default=None)
+        ap.add_argument("--multi-pod", action="store_true", default=None)
+        ap.add_argument("--mesh", default=None,
+                        help="host mesh DATAxMODEL (e.g. 4x2) for "
+                             "multi-device smoke runs; needs XLA_FLAGS="
+                             "--xla_force_host_platform_device_count>=D*M")
+        ap.add_argument("--ckpt-dir", default=None)
+        ap.add_argument("--ckpt-every", type=int, default=None,
+                        help="checkpoint every N steps (makes the "
+                             "EF-residual resume path drivable in short "
+                             "runs)")
+        ap.add_argument("--compute-dtype", default=None,
+                        choices=["none", "bfloat16", "float32"],
+                        help="matmul compute dtype "
+                             "(PrecisionSpec.compute_dtype)")
+        ap.add_argument("--grad-compression",
+                        choices=list(GRAD_COMPRESSION_KINDS), default=None,
+                        help="bf16/int8 quantize the synchronized "
+                             "gradient (post-reduce); int8-wire "
+                             "compresses inside the reduction — int8 "
+                             "bytes on the wire via dist.collectives; "
+                             "int8-wire-2d additionally slices the "
+                             "exchange over the model (TP) axis — "
+                             "auto-selected for int8-wire when the mesh "
+                             "has M>1 (single-device runs fall back to "
+                             "the post-reduce int8 path)")
+        return ap
+
+    @classmethod
+    def from_args(cls, argv: Optional[Sequence[str]] = None,
+                  **parser_kwargs) -> "RunSpec":
+        """Parse CLI flags into a spec: ``--spec`` loads a JSON file,
+        explicit flags override its fields, and with no ``--spec`` the
+        flags override the defaults (classic launcher behavior)."""
+        args = cls.parser(**parser_kwargs).parse_args(argv)
+        return cls.from_parsed(args)
+
+    @classmethod
+    def from_parsed(cls, args: argparse.Namespace,
+                    base: Optional["RunSpec"] = None) -> "RunSpec":
+        """Apply explicitly-passed flags as overrides on ``--spec``'s
+        file, or on ``base`` (an entry point's own defaults — e.g. the
+        examples ship different default arch/steps than the launcher),
+        or on the class defaults."""
+        spec = (cls.from_file(args.spec) if getattr(args, "spec", None)
+                else (base if base is not None else cls()))
+        rep: Dict[str, Any] = {}
+        if args.arch is not None:
+            rep["arch"] = args.arch
+        if args.full:
+            rep["full"] = True
+        if args.seed is not None:
+            rep["seed"] = args.seed
+        if args.production_mesh or args.multi_pod:
+            rep["mesh"] = MeshSpec.production(
+                multi_pod=bool(args.multi_pod))
+        elif args.mesh is not None:
+            d, m = (int(v) for v in args.mesh.lower().split("x"))
+            rep["mesh"] = MeshSpec.host(d, m)
+        if args.compute_dtype is not None:
+            rep["precision"] = dataclasses.replace(
+                spec.precision,
+                compute_dtype=(None if args.compute_dtype == "none"
+                               else args.compute_dtype))
+        if args.grad_compression is not None:
+            rep["compression"] = dataclasses.replace(
+                spec.compression, kind=args.grad_compression)
+        tr: Dict[str, Any] = {}
+        if args.steps is not None:
+            tr["steps"] = args.steps
+        if args.ckpt_dir is not None:
+            tr["ckpt_dir"] = args.ckpt_dir
+        if args.ckpt_every is not None:
+            tr["ckpt_every"] = args.ckpt_every
+        if tr:
+            rep["train"] = dataclasses.replace(spec.train, **tr)
+        da: Dict[str, Any] = {}
+        if args.batch is not None:
+            da["batch"] = args.batch
+        if args.seq is not None:
+            da["seq"] = args.seq
+        if args.seed is not None:
+            da["seed"] = args.seed
+        if da:
+            rep["data"] = dataclasses.replace(spec.data, **da)
+        return dataclasses.replace(spec, **rep) if rep else spec

@@ -1,7 +1,10 @@
 """``repro.dist`` — distribution & deployment utilities.
 
-Five small modules, one convention:
+Six small modules, one convention:
 
+* :mod:`repro.dist.scope` — the per-trace dynamic scope every trace-time
+  knob lives in (no module-level mutable state; how
+  ``repro.api.RunContext`` activates a configuration).
 * :mod:`repro.dist.axes` — logical-axis registry + pattern-string
   activation sharding (``constrain(x, "b.m.")``); identity on 1 device.
 * :mod:`repro.dist.sharding` — parameter/batch/cache placement rules
@@ -26,16 +29,18 @@ from typing import Any, Dict, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from .axes import constrain, get_model_size, set_axes  # noqa: F401
+from .axes import (AxisRegistry, axis_scope, constrain,  # noqa: F401
+                   get_model_size, registry_for_mesh, set_axes)
 from .collectives import (WIRE_KINDS, ef_wire2d_init,  # noqa: F401
                           ef_wire_init, ef_wire_pmean, ef_wire_pmean_2d,
                           model_axis_size, simulate_wire_pmean,
                           simulate_wire_pmean_2d)
-from .perf import (cast_for_matmul, get_compute_dtype,  # noqa: F401
-                   pack_params_for_serving, set_compute_dtype, unpack_weight)
+from .perf import (cast_for_matmul, compute_dtype_scope,  # noqa: F401
+                   get_compute_dtype, pack_params_for_serving,
+                   set_compute_dtype, unpack_weight)
 from .sharding import (batch_sharding, batch_spec, cache_sharding,  # noqa: F401
-                       ef_residual_sharding, replicated, shard_tree,
-                       spec_for_param)
+                       ef_residual_sharding, is_stacked_path, replicated,
+                       shard_tree, spec_for_param, stacked_tree)
 
 EF_KINDS = ("none", "bf16", "int8")
 
@@ -49,14 +54,18 @@ def ef_init(grads: Any) -> EFState:
     return EFState(residual=jax.tree.map(jnp.zeros_like, grads))
 
 
-def _compress_leaf(e: jax.Array, kind: str) -> jax.Array:
+def _compress_leaf(e: jax.Array, kind: str, stacked: bool = False
+                   ) -> jax.Array:
     if kind == "bf16":
         return e.astype(jnp.bfloat16).astype(e.dtype)
     # int8: symmetric grid, max|e| -> 127.  Stacked [L, ...] leaves (the
-    # lax.scan layer axis, rank >= 3) get one grid per layer — a single
-    # outlier layer must not crush quantization resolution for all L
-    # (a per-tensor grid made every other layer's step L-outlier-sized).
-    if e.ndim >= 3:
+    # lax.scan layer / MoE expert axis, marked by ``stacked`` — derived
+    # from the tree path by ``sharding.stacked_tree``, NOT sniffed from
+    # rank) get one grid per layer: a single outlier layer must not crush
+    # quantization resolution for all L (a per-tensor grid made every
+    # other layer's step L-outlier-sized).  A genuinely 3-D weight (e.g. a
+    # per-head attention tensor) is one tensor and keeps one grid.
+    if stacked and e.ndim >= 3:
         axes = tuple(range(1, e.ndim))
         amax = jnp.max(jnp.abs(e), axis=axes, keepdims=True)
     else:
@@ -65,13 +74,18 @@ def _compress_leaf(e: jax.Array, kind: str) -> jax.Array:
     return jnp.round(e / scale) * scale
 
 
-def ef_compress(grads: Any, state: EFState, *, kind: str = "int8"
-                ) -> Tuple[Any, EFState]:
+def ef_compress(grads: Any, state: EFState, *, kind: str = "int8",
+                stacked: Any = None) -> Tuple[Any, EFState]:
     """Compress ``grads`` with error feedback.
 
     Returns ``(sent, new_state)`` where ``sent`` is what goes over the
     wire (same dtype/shape as ``grads``; apply it to the optimizer) and
     ``new_state`` carries ``(grad + residual) - sent`` to the next step.
+
+    ``stacked`` is an optional matching tree of bools marking leaves whose
+    leading axis is a stacked-layer axis (per-layer int8 grids).  Default:
+    derived from the tree paths (``sharding.stacked_tree`` — the scan'd
+    ``layers``/``units``/expert containers).
     """
     if kind not in EF_KINDS:
         raise ValueError(
@@ -79,7 +93,10 @@ def ef_compress(grads: Any, state: EFState, *, kind: str = "int8"
             f"supported: {EF_KINDS}")
     if kind == "none":
         return grads, state
+    if stacked is None:
+        stacked = stacked_tree(grads)
     err = jax.tree.map(jnp.add, grads, state.residual)
-    sent = jax.tree.map(lambda e: _compress_leaf(e, kind), err)
+    sent = jax.tree.map(lambda e, s: _compress_leaf(e, kind, s), err,
+                        stacked)
     residual = jax.tree.map(jnp.subtract, err, sent)
     return sent, EFState(residual=residual)

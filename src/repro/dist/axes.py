@@ -10,18 +10,27 @@ array axis:
     '.'  — replicated / unconstrained
 
 e.g. ``constrain(x, "b.m.")`` on a ``[B, S, H, hd]`` tensor shards batch
-over data and heads over model.  The launchers register the concrete mesh
-axes via :func:`set_axes`; until then (and always on a single device) every
-``constrain`` is an identity, so library code is importable and testable
-with no mesh at all.
+over data and heads over model.  The registry a ``constrain`` call reads
+is *scoped*, not global: a :class:`repro.api.RunContext` activates its
+:class:`AxisRegistry` (built from the run's ``MeshSpec``) around every
+trace via :func:`axis_scope`, so two contexts with different meshes
+coexist in one process.  Outside any scope the immutable default applies
+(single-device identity), so library code is importable and testable with
+no mesh at all.
+
+``set_axes`` — the old module-global mutation — survives one release as a
+deprecated shim that rebinds the default registry.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P
+
+from .scope import Scoped
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,43 +41,66 @@ class AxisRegistry:
     model_size: int = 1
 
 
-_REGISTRY = AxisRegistry()
+_AXES: Scoped[AxisRegistry] = Scoped("repro.dist.axes", AxisRegistry())
+
+
+def axis_scope(registry: AxisRegistry):
+    """Context manager: trace the enclosed computation under ``registry``
+    (re-entrant; restores the previous registry on exit).  This is how
+    ``repro.api.RunContext`` binds a mesh's logical axes with no global
+    state."""
+    return _AXES.scope(registry)
 
 
 def set_axes(data_axes: Tuple[str, ...], model_axis: str, *,
              data_size: int, model_size: int) -> None:
-    """Register the logical mesh axes used by ``constrain`` patterns.
+    """Deprecated: rebind the *default* axis registry.
 
-    Called by the launchers after building the mesh; axis *sizes* are
-    needed so non-divisible dimensions degrade to replication instead of
-    failing GSPMD propagation.
+    Build a :class:`repro.api.RunSpec` (its ``MeshSpec`` field) and trace
+    under ``RunContext.activate()`` / :func:`axis_scope` instead — scoped
+    registration composes across contexts; this shim mutates the ambient
+    default exactly like the old global did.
     """
-    global _REGISTRY
-    _REGISTRY = AxisRegistry(tuple(data_axes), model_axis,
-                             int(data_size), int(model_size))
+    warnings.warn(
+        "set_axes is deprecated: put the mesh in repro.api.RunSpec.mesh "
+        "and trace under RunContext.activate() (or dist.axes.axis_scope)",
+        DeprecationWarning, stacklevel=2)
+    _AXES.set_default(AxisRegistry(tuple(data_axes), model_axis,
+                                   int(data_size), int(model_size)))
 
 
 def reset_axes() -> None:
-    """Back to the single-device identity state (tests)."""
-    global _REGISTRY
-    _REGISTRY = AxisRegistry()
+    """Back to the single-device identity default (tests)."""
+    _AXES.reset_default()
 
 
 def get_axes() -> AxisRegistry:
-    return _REGISTRY
+    return _AXES.get()
 
 
 def get_model_size() -> int:
-    """Tensor-parallel degree currently registered (1 = no TP)."""
-    return _REGISTRY.model_size
+    """Tensor-parallel degree currently in scope (1 = no TP)."""
+    return _AXES.get().model_size
 
 
 def get_data_size() -> int:
-    return _REGISTRY.data_size
+    return _AXES.get().data_size
+
+
+def registry_for_mesh(mesh) -> AxisRegistry:
+    """The :class:`AxisRegistry` describing a concrete mesh (pod is outer
+    data parallelism; the axis whitelist lives in ``sharding``)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    daxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dsize = 1
+    for a in daxes:
+        dsize *= sizes[a]
+    return AxisRegistry(daxes or ("data",), "model", dsize,
+                        int(sizes.get("model", 1)))
 
 
 def _spec_for(pattern: str, shape: Tuple[int, ...]) -> P:
-    reg = _REGISTRY
+    reg = _AXES.get()
     entries = []
     for ch, dim in zip(pattern, shape):
         if ch == "b":
@@ -95,7 +127,7 @@ def constrain(x: jax.Array, pattern: str) -> jax.Array:
     bad = set(pattern) - set("bm.")
     if bad:
         raise ValueError(f"bad axis chars {sorted(bad)!r} in {pattern!r}")
-    reg = _REGISTRY
+    reg = _AXES.get()
     if reg.data_size * reg.model_size <= 1:
         return x
     return jax.lax.with_sharding_constraint(x, _spec_for(pattern, x.shape))

@@ -58,12 +58,16 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from .scope import Scoped
+
 WIRE_KINDS = ("int8", "bf16")
 
 # trace-time recorder for bytes-on-wire accounting (collectives_bench):
 # shapes are static, so appending (op, per-device bytes) while tracing
-# measures exactly what the compiled collectives move.
-_BYTES_TRACE: Optional[List[Tuple[str, float]]] = None
+# measures exactly what the compiled collectives move.  Scoped, not a
+# module global — see dist.scope.
+_BYTES_TRACE: Scoped[Optional[List[Tuple[str, float]]]] = Scoped(
+    "repro.dist.wire_bytes", None)
 
 
 class record_wire_bytes:
@@ -72,25 +76,25 @@ class record_wire_bytes:
 
     def __init__(self):
         self.records: List[Tuple[str, float]] = []
+        self._cm = None
 
     def __enter__(self):
-        global _BYTES_TRACE
-        self._prev = _BYTES_TRACE
-        _BYTES_TRACE = self.records
+        self._cm = _BYTES_TRACE.scope(self.records)
+        self._cm.__enter__()
         return self
 
     def __exit__(self, *exc):
-        global _BYTES_TRACE
-        _BYTES_TRACE = self._prev
-        return False
+        cm, self._cm = self._cm, None
+        return cm.__exit__(*exc)
 
     def total(self) -> float:
         return sum(b for _, b in self.records)
 
 
 def _record(op: str, nbytes: float) -> None:
-    if _BYTES_TRACE is not None:
-        _BYTES_TRACE.append((op, float(nbytes)))
+    records = _BYTES_TRACE.get()
+    if records is not None:
+        records.append((op, float(nbytes)))
 
 
 def _ring_allreduce_bytes(nbytes: float, n: int) -> float:
@@ -114,15 +118,29 @@ def data_axis_size(mesh) -> int:
 # and the tests)
 # ---------------------------------------------------------------------------
 
-def _layer_rows(e: jax.Array) -> jax.Array:
+def _stacked_flags(tree: Any, stacked: Any) -> Tuple[bool, ...]:
+    """Per-leaf stacked-layer flags in ``jax.tree.flatten`` order.
+
+    ``stacked`` is an optional matching tree of bools; ``None`` derives
+    the flags from the tree paths (``sharding.stacked_tree`` — the same
+    explicit rule ``dist.ef_compress`` uses, replacing the old rank
+    sniff)."""
+    from .sharding import stacked_tree
+    marks = stacked_tree(tree) if stacked is None else stacked
+    return tuple(bool(m) for m in jax.tree.leaves(marks))
+
+
+def _layer_rows(e: jax.Array, stacked: bool) -> jax.Array:
     """Flatten a leaf to [L, P] rows — one quantization grid per leading
-    (stacked-layer) axis entry for rank >= 3 leaves, one per tensor
-    otherwise (same stacked-leaf rule as ``dist._compress_leaf``)."""
-    L = e.shape[0] if e.ndim >= 3 else 1
+    (stacked-layer) axis entry for stacked rank >= 3 leaves, one per
+    tensor otherwise (same stacked-leaf rule as ``dist._compress_leaf``;
+    ``stacked`` comes from the tree path, not the rank)."""
+    L = e.shape[0] if (stacked and e.ndim >= 3) else 1
     return jnp.asarray(e, jnp.float32).reshape(L, -1)
 
 
-def _phase1_quantize(e: jax.Array, amax_rows: jax.Array, kind: str
+def _phase1_quantize(e: jax.Array, amax_rows: jax.Array, kind: str,
+                     stacked: bool
                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Quantize one leaf for the wire.
 
@@ -132,7 +150,7 @@ def _phase1_quantize(e: jax.Array, amax_rows: jax.Array, kind: str
     ``amax_rows`` is the *global* per-row amax (``pmax`` over shards), so
     every shard lands on the same grid and int32 chunk sums are exact.
     """
-    rows = _layer_rows(e)
+    rows = _layer_rows(e, stacked)
     if kind == "bf16":
         payload = rows.astype(jnp.bfloat16)
         deq = payload.astype(jnp.float32)
@@ -178,21 +196,21 @@ def _phase2_shift(n: int) -> int:
 # the shard_map body (one leaf at a time)
 # ---------------------------------------------------------------------------
 
-def _wire_leaf(e: jax.Array, axes: Tuple[str, ...], n: int, kind: str
-               ) -> Tuple[jax.Array, jax.Array]:
+def _wire_leaf(e: jax.Array, axes: Tuple[str, ...], n: int, kind: str,
+               stacked: bool) -> Tuple[jax.Array, jax.Array]:
     """Compressed mean-reduce of one per-shard leaf inside shard_map.
 
     ``e`` is this shard's ``grad + residual`` (leading shard axis of size 1
     already squeezed).  Returns ``(delivered_mean, new_residual)``.
     """
     dtype = e.dtype
-    rows = _layer_rows(e)
+    rows = _layer_rows(e, stacked)
     L, Pn = rows.shape
     amax = None
     if kind != "bf16":     # bf16 payloads carry their own exponents
         amax = jax.lax.pmax(jnp.max(jnp.abs(rows), axis=1), axes)
         _record("pmax.scale", _ring_allreduce_bytes(L * 4, n))
-    payload, scale, residual = _phase1_quantize(e, amax, kind)
+    payload, scale, residual = _phase1_quantize(e, amax, kind, stacked)
 
     flat = payload.reshape(-1)
     T = flat.shape[0]
@@ -256,13 +274,15 @@ def _check_kind(kind: str) -> None:
                          f"supported: {WIRE_KINDS}")
 
 
-def _wire_pmean_impl(e_stacked: Any, mesh, kind: str) -> Tuple[Any, Any]:
+def _wire_pmean_impl(e_stacked: Any, mesh, kind: str,
+                     flags: Tuple[bool, ...]) -> Tuple[Any, Any]:
     axes = data_axis_names(mesh)
     n = data_axis_size(mesh)
 
     def body(tree):
         flat, treedef = jax.tree.flatten(tree)
-        pairs = [_wire_leaf(leaf[0], axes, n, kind) for leaf in flat]
+        pairs = [_wire_leaf(leaf[0], axes, n, kind, st)
+                 for leaf, st in zip(flat, flags)]
         delivered = jax.tree.unflatten(treedef, [d for d, _ in pairs])
         residual = jax.tree.unflatten(treedef, [r[None] for _, r in pairs])
         return delivered, residual
@@ -276,31 +296,17 @@ def _wire_pmean_impl(e_stacked: Any, mesh, kind: str) -> Tuple[Any, Any]:
                      check_rep=False)(e_stacked)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
-def ef_wire_pmean(e_stacked: Any, mesh, kind: str = "int8"
-                  ) -> Tuple[Any, Any]:
-    """Compressed mean all-reduce with error feedback, inside the wire.
-
-    ``e_stacked`` is a pytree whose leaves carry a leading ``[n_data]``
-    shard axis holding each data shard's ``local_grad + residual``
-    (sharded over the data axes).  Returns ``(delivered, new_residual)``:
-    the int8/bf16-wire mean gradient, replicated, plus the per-shard
-    residual to thread into the next step.
-
-    The custom VJP passes the ``delivered`` cotangent through as the
-    transpose of an uncompressed shard mean, so the backward of a loss
-    containing this collective is unchanged and ``jax.value_and_grad``
-    composes; residual cotangents are dropped (state, not value).
-    """
-    _check_kind(kind)
-    return _wire_pmean_impl(e_stacked, mesh, kind)
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _ef_wire_pmean_cv(e_stacked: Any, mesh, kind: str,
+                      flags: Tuple[bool, ...]) -> Tuple[Any, Any]:
+    return _wire_pmean_impl(e_stacked, mesh, kind, flags)
 
 
-def _ef_wire_fwd(e_stacked, mesh, kind):
-    return ef_wire_pmean(e_stacked, mesh, kind), None
+def _ef_wire_fwd(e_stacked, mesh, kind, flags):
+    return _ef_wire_pmean_cv(e_stacked, mesh, kind, flags), None
 
 
-def _ef_wire_bwd(mesh, kind, _res, cts):
+def _ef_wire_bwd(mesh, kind, flags, _res, cts):
     ct_delivered, _ct_residual = cts
     n = data_axis_size(mesh)
     ct_e = jax.tree.map(
@@ -309,7 +315,31 @@ def _ef_wire_bwd(mesh, kind, _res, cts):
     return (ct_e,)
 
 
-ef_wire_pmean.defvjp(_ef_wire_fwd, _ef_wire_bwd)
+_ef_wire_pmean_cv.defvjp(_ef_wire_fwd, _ef_wire_bwd)
+
+
+def ef_wire_pmean(e_stacked: Any, mesh, kind: str = "int8",
+                  stacked: Any = None) -> Tuple[Any, Any]:
+    """Compressed mean all-reduce with error feedback, inside the wire.
+
+    ``e_stacked`` is a pytree whose leaves carry a leading ``[n_data]``
+    shard axis holding each data shard's ``local_grad + residual``
+    (sharded over the data axes).  Returns ``(delivered, new_residual)``:
+    the int8/bf16-wire mean gradient, replicated, plus the per-shard
+    residual to thread into the next step.
+
+    ``stacked`` optionally marks stacked-layer leaves (a matching bool
+    tree) for per-layer quantization grids; default derives it from the
+    tree paths, like ``dist.ef_compress``.
+
+    The custom VJP passes the ``delivered`` cotangent through as the
+    transpose of an uncompressed shard mean, so the backward of a loss
+    containing this collective is unchanged and ``jax.value_and_grad``
+    composes; residual cotangents are dropped (state, not value).
+    """
+    _check_kind(kind)
+    return _ef_wire_pmean_cv(e_stacked, mesh, kind,
+                             _stacked_flags(e_stacked, stacked))
 
 
 # ---------------------------------------------------------------------------
@@ -391,17 +421,17 @@ def ef_wire2d_init(grads: Any, n_data: int, n_model: int) -> Any:
              wire2d_slice_len(g.shape, n_data, n_model)), g.dtype), grads)
 
 
-def _wire2d_rows(shape) -> Tuple[int, int]:
+def _wire2d_rows(shape, stacked: bool) -> Tuple[int, int]:
     """(L, row_len) of a leaf: one quantization row per leading
-    (stacked-layer) axis entry for rank >= 3, one per tensor otherwise —
-    the same rule as :func:`_layer_rows`."""
-    L = int(shape[0]) if len(shape) >= 3 else 1
+    (stacked-layer) axis entry for stacked rank >= 3 leaves, one per
+    tensor otherwise — the same rule as :func:`_layer_rows`."""
+    L = int(shape[0]) if (stacked and len(shape) >= 3) else 1
     return L, _prod(shape) // max(L, 1)
 
 
 def _wire2d_leaf(g: jax.Array, r: jax.Array, S: Tuple[int, ...],
                  k: Optional[int], daxes: Tuple[str, ...], maxes:
-                 Tuple[str, ...], D: int, M: int, kind: str
+                 Tuple[str, ...], D: int, M: int, kind: str, stacked: bool
                  ) -> Tuple[jax.Array, jax.Array]:
     """Sliced compressed mean-reduce of one leaf inside shard_map.
 
@@ -413,7 +443,7 @@ def _wire2d_leaf(g: jax.Array, r: jax.Array, S: Tuple[int, ...],
     dtype = g.dtype
     axes2d = tuple(daxes) + tuple(maxes)
     g32 = jnp.asarray(g, jnp.float32)
-    L, Prow_full = _wire2d_rows(S)
+    L, Prow_full = _wire2d_rows(S, stacked)
     if k is not None:
         B = g.shape                      # model block; block rows keep L
         Tb = g32.size
@@ -543,8 +573,8 @@ def _wire2d_specs(grads_stacked: Any, mesh):
     return gin, rspec, dout
 
 
-def _wire2d_impl(grads_stacked: Any, residual: Any, mesh, kind: str
-                 ) -> Tuple[Any, Any]:
+def _wire2d_impl(grads_stacked: Any, residual: Any, mesh, kind: str,
+                 flags: Tuple[bool, ...]) -> Tuple[Any, Any]:
     from .sharding import model_axis_for
     daxes = data_axis_names(mesh)
     maxes = _wire2d_model_axes(mesh)
@@ -558,8 +588,8 @@ def _wire2d_impl(grads_stacked: Any, residual: Any, mesh, kind: str
         gflat, treedef = jax.tree.flatten(gtree)
         rflat, _ = jax.tree.flatten(rtree)
         pairs = [
-            _wire2d_leaf(g[0], r[0, 0], S, kk, daxes, maxes, D, M, kind)
-            for g, r, S, kk in zip(gflat, rflat, shapes, ks)]
+            _wire2d_leaf(g[0], r[0, 0], S, kk, daxes, maxes, D, M, kind, st)
+            for g, r, S, kk, st in zip(gflat, rflat, shapes, ks, flags)]
         delivered = jax.tree.unflatten(treedef, [d for d, _ in pairs])
         new_res = jax.tree.unflatten(treedef,
                                      [nr[None, None] for _, nr in pairs])
@@ -571,32 +601,17 @@ def _wire2d_impl(grads_stacked: Any, residual: Any, mesh, kind: str
                          grads_stacked, residual)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def ef_wire_pmean_2d(grads_stacked: Any, residual: Any, mesh,
-                     kind: str = "int8") -> Tuple[Any, Any]:
-    """2D-sliced compressed mean all-reduce with error feedback.
-
-    ``grads_stacked`` is a pytree whose leaves carry a leading
-    ``[n_data]`` shard axis (each data shard's local gradient — NOT
-    pre-added with the residual: the add happens on the slice, inside the
-    collective); ``residual`` the matching ``[n_data, n_model, C]`` tree
-    from :func:`ef_wire2d_init`.  Returns ``(delivered, new_residual)``:
-    the int8/bf16-wire mean gradient, replicated, plus the sliced residual
-    for the next step.
-
-    The custom VJP passes the ``delivered`` cotangent through as the
-    transpose of an uncompressed shard mean (``ct / n_data`` per shard);
-    residual cotangents are dropped (state, not value).
-    """
-    _check_kind(kind)
-    return _wire2d_impl(grads_stacked, residual, mesh, kind)
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _wire2d_cv(grads_stacked: Any, residual: Any, mesh, kind: str,
+               flags: Tuple[bool, ...]) -> Tuple[Any, Any]:
+    return _wire2d_impl(grads_stacked, residual, mesh, kind, flags)
 
 
-def _wire2d_fwd(grads_stacked, residual, mesh, kind):
-    return ef_wire_pmean_2d(grads_stacked, residual, mesh, kind), None
+def _wire2d_fwd(grads_stacked, residual, mesh, kind, flags):
+    return _wire2d_cv(grads_stacked, residual, mesh, kind, flags), None
 
 
-def _wire2d_bwd(mesh, kind, _res, cts):
+def _wire2d_bwd(mesh, kind, flags, _res, cts):
     ct_delivered, ct_residual = cts
     n = data_axis_size(mesh)
     ct_g = jax.tree.map(
@@ -606,11 +621,35 @@ def _wire2d_bwd(mesh, kind, _res, cts):
     return (ct_g, ct_r)
 
 
-ef_wire_pmean_2d.defvjp(_wire2d_fwd, _wire2d_bwd)
+_wire2d_cv.defvjp(_wire2d_fwd, _wire2d_bwd)
+
+
+def ef_wire_pmean_2d(grads_stacked: Any, residual: Any, mesh,
+                     kind: str = "int8", stacked: Any = None
+                     ) -> Tuple[Any, Any]:
+    """2D-sliced compressed mean all-reduce with error feedback.
+
+    ``grads_stacked`` is a pytree whose leaves carry a leading
+    ``[n_data]`` shard axis (each data shard's local gradient — NOT
+    pre-added with the residual: the add happens on the slice, inside the
+    collective); ``residual`` the matching ``[n_data, n_model, C]`` tree
+    from :func:`ef_wire2d_init`.  Returns ``(delivered, new_residual)``:
+    the int8/bf16-wire mean gradient, replicated, plus the sliced residual
+    for the next step.  ``stacked`` optionally marks stacked-layer leaves
+    (default: derived from the tree paths, like ``dist.ef_compress``).
+
+    The custom VJP passes the ``delivered`` cotangent through as the
+    transpose of an uncompressed shard mean (``ct / n_data`` per shard);
+    residual cotangents are dropped (state, not value).
+    """
+    _check_kind(kind)
+    return _wire2d_cv(grads_stacked, residual, mesh, kind,
+                      _stacked_flags(grads_stacked, stacked))
 
 
 def simulate_wire_pmean_2d(grads_stacked: Any, residual: Any, n_model: int,
-                           kind: str = "int8") -> Tuple[Any, Any]:
+                           kind: str = "int8", stacked: Any = None
+                           ) -> Tuple[Any, Any]:
     """Collective-free reference of :func:`ef_wire_pmean_2d` on a stacked
     ``[n_data, ...]`` gradient tree plus its ``[n_data, n_model, C]``
     residual: same slicing, same grids, same chunking, same two-phase
@@ -618,14 +657,15 @@ def simulate_wire_pmean_2d(grads_stacked: Any, residual: Any, n_model: int,
     shard_map path matches this bit-for-bit on 2x4 and 4x2 meshes."""
     _check_kind(kind)
     from .sharding import model_axis_for
+    flags = _stacked_flags(grads_stacked, stacked)
 
-    def leaf(es, res):
+    def leaf(es, res, stk):
         D = es.shape[0]
         M = n_model
         S = tuple(es.shape[1:])
         dtype = es.dtype
         T = _prod(S)
-        L, Prow_full = _wire2d_rows(S)
+        L, Prow_full = _wire2d_rows(S, stk)
         k = model_axis_for(S, M)
         Cp = res.shape[-1]
         C = Cp // D
@@ -711,16 +751,18 @@ def simulate_wire_pmean_2d(grads_stacked: Any, residual: Any, n_model: int,
 
     gflat, treedef = jax.tree.flatten(grads_stacked)
     rflat, _ = jax.tree.flatten(residual)
-    pairs = [leaf(g, r) for g, r in zip(gflat, rflat)]
+    pairs = [leaf(g, r, st) for g, r, st in zip(gflat, rflat, flags)]
     return (jax.tree.unflatten(treedef, [d for d, _ in pairs]),
             jax.tree.unflatten(treedef, [r for _, r in pairs]))
 
 
-def wire2d_leaf_bytes(shape, n_data: int, n_model: int, kind: str) -> float:
+def wire2d_leaf_bytes(shape, n_data: int, n_model: int, kind: str,
+                      stacked: bool = False) -> float:
     """Analytic per-device wire bytes of one 2D-sliced mean-reduce of a
     leaf (matches :class:`record_wire_bytes` on the traced ops): data
     all_to_all + all_gather on the 1/M slice, the int8 model-axis
-    all_gather, and the per-row scale pmax over all D*M devices."""
+    all_gather, and the per-row scale pmax over all D*M devices.
+    ``stacked`` marks a stacked-layer leaf (per-layer scale rows)."""
     _check_kind(kind)
     item = 1 if kind == "int8" else 2
     Cp = wire2d_slice_len(shape, n_data, n_model)
@@ -728,7 +770,7 @@ def wire2d_leaf_bytes(shape, n_data: int, n_model: int, kind: str) -> float:
     a2a = (n_data - 1) / n_data * Cp * item if n_data > 1 else 0.0
     ag = (n_data - 1) * C * item if n_data > 1 else 0.0
     ag_model = (n_model - 1) * Cp * item if n_model > 1 else 0.0
-    L, _ = _wire2d_rows(shape)
+    L, _ = _wire2d_rows(shape, stacked)
     scales = (_ring_allreduce_bytes(L * 4, n_data * n_model)
               if kind == "int8" else 0.0)
     return a2a + ag + ag_model + scales
@@ -746,25 +788,27 @@ def tp_replication_bytes(shape, n_model: int) -> float:
     return (n_model - 1) * (_prod(shape) / n_model) * 4.0
 
 
-def simulate_wire_pmean(e_stacked: Any, kind: str = "int8"
-                        ) -> Tuple[Any, Any]:
+def simulate_wire_pmean(e_stacked: Any, kind: str = "int8",
+                        stacked: Any = None) -> Tuple[Any, Any]:
     """Collective-free reference of :func:`ef_wire_pmean` on a stacked
     ``[n, ...]`` tree: same grids, same chunking, same two-phase errors —
     usable on one device (tests, notebooks).  The 8-device CI job asserts
-    the shard_map path matches this bit-for-bit."""
+    the shard_map path matches this bit-for-bit.  ``stacked`` optionally
+    marks stacked-layer leaves (default: derived from the tree paths)."""
     _check_kind(kind)
+    flags = _stacked_flags(e_stacked, stacked)
 
-    def leaf(es):
+    def leaf(es, stk):
         n = es.shape[0]
         dtype = es.dtype
         shape = es.shape[1:]
-        rows0 = _layer_rows(es[0])
+        rows0 = _layer_rows(es[0], stk)
         L, Pn = rows0.shape
         amax = jnp.max(jnp.abs(jnp.asarray(es, jnp.float32)
                                .reshape(n, L, -1)), axis=(0, 2))
         payloads, residuals, scale = [], [], None
         for i in range(n):
-            p, scale, r = _phase1_quantize(es[i], amax, kind)
+            p, scale, r = _phase1_quantize(es[i], amax, kind, stk)
             payloads.append(p.reshape(-1))
             residuals.append(r)
         T = payloads[0].shape[0]
@@ -794,7 +838,7 @@ def simulate_wire_pmean(e_stacked: Any, kind: str = "int8"
         return delivered, new_res
 
     flat, treedef = jax.tree.flatten(e_stacked)
-    pairs = [leaf(x) for x in flat]
+    pairs = [leaf(x, st) for x, st in zip(flat, flags)]
     return (jax.tree.unflatten(treedef, [d for d, _ in pairs]),
             jax.tree.unflatten(treedef, [r for _, r in pairs]))
 

@@ -1,9 +1,13 @@
 """Serving/throughput knobs: compute-dtype casting and HGQ int8 packing.
 
-Compute dtype: the launchers opt a run into bf16 compute with
-:func:`set_compute_dtype`; layers call :func:`cast_for_matmul` on matmul
-operands so fp32-master FSDP gathers and TP partial-sum all-reduces move
-bf16 bytes (half the collective volume).  Default (``None``) is a no-op.
+Compute dtype: layers call :func:`cast_for_matmul` on matmul operands so
+fp32-master FSDP gathers and TP partial-sum all-reduces move bf16 bytes
+(half the collective volume) when a run opts in.  The dtype a trace sees
+is *scoped*: ``repro.api.RunContext`` activates its ``PrecisionSpec``
+around every trace (:func:`compute_dtype_scope`), so two contexts with
+different precisions coexist in one process.  The unscoped default is
+``None`` (no cast); ``set_compute_dtype`` survives one release as a
+deprecated shim that rebinds that default.
 
 Packing: :func:`pack_params_for_serving` rewrites every matmul weight dict
 ``{'w', 'f'}`` into ``{'w_int8', 'scale', 'f'}`` — int8 mantissas plus a
@@ -14,76 +18,108 @@ consuming matmul, mirroring ``kernels/qmatmul``.  Halves decode HBM
 traffic vs bf16.  The transform is shape-preserving and traceable, so the
 dry-run can ``jax.eval_shape`` it over abstract params.
 
-Both knobs are read at *trace* time: set the compute dtype (and the axis
-registry in :mod:`repro.dist.axes`) before jitting — a jitted executable
-keeps whatever was set when it traced, and later ``set_compute_dtype``
-calls do not retrace it.
+All knobs here are read at *trace* time: a jitted executable keeps
+whatever was in scope when it traced, and later scope changes do not
+retrace it.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-_COMPUTE_DTYPE: Optional[Any] = None
+from .scope import Scoped
+
+_COMPUTE: Scoped[Optional[Any]] = Scoped("repro.dist.compute_dtype", None)
+_PACKED: Scoped[bool] = Scoped("repro.dist.packed_matmul", False)
+
+
+def compute_dtype_scope(dtype):
+    """Context manager: trace the enclosed computation with ``dtype`` as
+    the matmul compute dtype (``None`` = no cast); restores on exit."""
+    return _COMPUTE.scope(dtype)
 
 
 def set_compute_dtype(dtype) -> None:
-    """Set (or clear, with ``None``) the matmul compute dtype."""
-    global _COMPUTE_DTYPE
-    _COMPUTE_DTYPE = dtype
+    """Deprecated: rebind the *default* matmul compute dtype.
+
+    Put the dtype in ``repro.api.RunSpec.precision.compute_dtype`` and
+    trace under ``RunContext.activate()`` (or
+    :func:`compute_dtype_scope`) instead.
+    """
+    warnings.warn(
+        "set_compute_dtype is deprecated: put the dtype in "
+        "repro.api.RunSpec.precision and trace under "
+        "RunContext.activate() (or dist.perf.compute_dtype_scope)",
+        DeprecationWarning, stacklevel=2)
+    _COMPUTE.set_default(dtype)
+
+
+def reset_precision() -> None:
+    """Back to the no-cast / unpacked defaults (tests)."""
+    _COMPUTE.reset_default()
+    _PACKED.reset_default()
 
 
 def get_compute_dtype():
-    return _COMPUTE_DTYPE
+    return _COMPUTE.get()
 
 
 def cast_for_matmul(x: jax.Array) -> jax.Array:
     """Cast a floating matmul operand to the compute dtype, if one is set."""
-    if _COMPUTE_DTYPE is None:
+    dtype = _COMPUTE.get()
+    if dtype is None:
         return x
     if not jnp.issubdtype(x.dtype, jnp.floating):
         return x
-    return x.astype(_COMPUTE_DTYPE)
+    return x.astype(dtype)
 
 
 # ---------------------------------------------------------------------------
 # packed-matmul routing (serving/packed.py)
 # ---------------------------------------------------------------------------
 
-_PACKED_MATMUL = False
-
-
 def set_packed_matmul(on: bool) -> None:
-    """Route dense projections over int8-packed kernels onto the Pallas
-    ``kernels.qmatmul.qmatmul_any`` path (read at trace time, like the
-    compute dtype).  Off: packed kernels dequantize and use ``jnp.matmul``
-    (XLA fuses the dequant)."""
-    global _PACKED_MATMUL
-    _PACKED_MATMUL = bool(on)
+    """Deprecated: rebind the *default* packed-kernel routing flag.
+
+    Put the flag in ``repro.api.RunSpec.precision.packed_matmul`` (the
+    ``Engine`` activates it per trace) or use the :class:`packed_matmul`
+    context manager.
+    """
+    warnings.warn(
+        "set_packed_matmul is deprecated: put the flag in "
+        "repro.api.RunSpec.precision or use the packed_matmul context "
+        "manager", DeprecationWarning, stacklevel=2)
+    _PACKED.set_default(bool(on))
 
 
 def get_packed_matmul() -> bool:
-    return _PACKED_MATMUL
+    return _PACKED.get()
 
 
 class packed_matmul:
     """Context manager: trace/run the enclosed computation with the packed
-    qmatmul routing set to ``on`` (restores the previous value on exit)."""
+    qmatmul routing set to ``on`` (restores the previous value on exit).
+
+    On: dense projections over int8-packed kernels route onto the Pallas
+    ``kernels.qmatmul.qmatmul_any`` path (read at trace time, like the
+    compute dtype).  Off: packed kernels dequantize and use ``jnp.matmul``
+    (XLA fuses the dequant)."""
 
     def __init__(self, on: bool = True):
-        self.on = on
-        self.prev = None
+        self.on = bool(on)
+        self._cm = None
 
     def __enter__(self):
-        self.prev = _PACKED_MATMUL
-        set_packed_matmul(self.on)
+        self._cm = _PACKED.scope(self.on)
+        self._cm.__enter__()
         return self
 
     def __exit__(self, *exc):
-        set_packed_matmul(self.prev)
-        return False
+        cm, self._cm = self._cm, None
+        return cm.__exit__(*exc)
 
 
 # ---------------------------------------------------------------------------
@@ -140,6 +176,7 @@ def pack_params_for_serving(params: Any) -> Any:
 def unpack_weight(p: Dict[str, Any]) -> jax.Array:
     """Dequantize a packed weight dict; fuses into the consuming matmul."""
     w = p["w_int8"].astype(jnp.float32) * p["scale"].astype(jnp.float32)
-    if _COMPUTE_DTYPE is not None:
-        w = w.astype(_COMPUTE_DTYPE)
+    dtype = _COMPUTE.get()
+    if dtype is not None:
+        w = w.astype(dtype)
     return w

@@ -1,0 +1,66 @@
+"""Per-trace dynamic scope: the replacement for module-level mutable
+trace-time state.
+
+Trace-time knobs (the logical-axis registry, the matmul compute dtype, the
+packed-kernel routing flag, the wire-bytes recorder) used to live in plain
+module globals mutated by ``set_*`` functions.  That made every jitted
+program depend on hidden ambient state: two configurations could not
+coexist in one process, and the config a trace actually saw was whatever
+the last caller left behind.
+
+:class:`Scoped` keeps one *immutable default* plus a
+``contextvars``-backed stack of overrides:
+
+* ``get()`` returns the innermost active override, else the default —
+  this is what ``constrain`` / ``cast_for_matmul`` read at trace time;
+* ``scope(value)`` is a re-entrant context manager pushing an override
+  for the dynamic extent of a trace — how :class:`repro.api.RunContext`
+  activates its configuration, and how two contexts with different
+  precision/axes coexist in one process without touching each other;
+* ``set_default(value)`` rebinds the process default — reserved for the
+  deprecated ``set_axes`` / ``set_compute_dtype`` shims, which delegate
+  the old global-mutation behavior to the default slot for one release.
+
+``ContextVar`` (rather than a bare global) makes overrides task- and
+thread-local, and ``tools/check_no_globals.py`` gates the repo so no new
+``global``-statement trace state appears outside this mechanism.
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from typing import Generic, Iterator, Tuple, TypeVar
+
+T = TypeVar("T")
+
+
+class Scoped(Generic[T]):
+    """One trace-time knob: an immutable default + a scoped override stack."""
+
+    def __init__(self, name: str, default: T):
+        self._var: ContextVar[Tuple[T, ...]] = ContextVar(name, default=())
+        self._initial = default
+        # one-element list, not a module global: rebound only through
+        # set_default (the deprecated-shim delegation point)
+        self._default = [default]
+
+    def get(self) -> T:
+        stack = self._var.get()
+        return stack[-1] if stack else self._default[0]
+
+    def set_default(self, value: T) -> None:
+        """Rebind the process-wide default (deprecated shims only)."""
+        self._default[0] = value
+
+    def reset_default(self) -> None:
+        """Back to the construction-time default (tests)."""
+        self._default[0] = self._initial
+
+    @contextlib.contextmanager
+    def scope(self, value: T) -> Iterator[T]:
+        """Push ``value`` for the dynamic extent of the block (re-entrant)."""
+        token = self._var.set(self._var.get() + (value,))
+        try:
+            yield value
+        finally:
+            self._var.reset(token)

@@ -51,6 +51,35 @@ def _key_name(k: Any) -> str:
     return str(k)
 
 
+# tree containers whose children carry a leading stacked-layer axis: the
+# vmap-initialized / lax.scan'd layer stacks and the MoE expert stacks.
+# Stackedness used to be sniffed from rank (ndim >= 3), which silently
+# treated any genuinely 3-D weight (e.g. a per-head attention tensor) as
+# a layer stack — per-slice quantization grids where one per-tensor grid
+# was meant.  The tree path is the ground truth: a leaf is stacked iff it
+# lives under one of these containers.
+STACKED_CONTAINERS = frozenset({
+    "layers", "units", "blocks", "dec_layers", "enc_layers",
+    "down", "gate", "up",  # HMoE per-expert [E, ...] weight stacks (moe.py)
+})
+
+
+def is_stacked_path(path: Sequence[Any]) -> bool:
+    """True when a tree path passes through a stacked-layer container —
+    i.e. the leaf's leading axis is a scan'd layer (or expert) axis, not a
+    tensor dimension.  ``path`` is a ``tree_flatten_with_path`` key path."""
+    return any(_key_name(k) in STACKED_CONTAINERS for k in path)
+
+
+def stacked_tree(tree: Any) -> Any:
+    """Map :func:`is_stacked_path` over a pytree: a matching tree of bools
+    marking which leaves carry a leading stacked-layer axis.  The explicit
+    per-leaf metadata ``dist.ef_compress`` and the wire collectives use to
+    pick per-layer vs per-tensor quantization grids."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, _: is_stacked_path(path), tree)
+
+
 def model_axis_for(shape: Sequence[int], model_size: int) -> Optional[int]:
     """The (absolute) tensor axis the ``model`` mesh axis shards, or
     ``None`` when the leaf replicates over ``model``.

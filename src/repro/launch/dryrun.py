@@ -23,6 +23,7 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
+from ..api import MeshSpec, PrecisionSpec, RunSpec, build
 from ..configs import ARCHS, SHAPES, ShapeSpec, get
 from ..core import hgq
 from ..dist.sharding import (batch_sharding, cache_sharding, replicated,
@@ -31,7 +32,6 @@ from ..models import (GriffinCaches, ModelConfig, RWKVCaches,
                       WhisperCaches, model_for)
 from ..nn.attention import KVCache
 from ..train import TrainConfig, lm_loss, make_train_step
-from .mesh import make_production_mesh
 from .roofline import mfu
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -98,39 +98,48 @@ def cache_shardings(caches, mesh, cfg: ModelConfig):
 # cell builders
 # --------------------------------------------------------------------------
 
+def cell_spec(arch: str, shape_name: str, multi_pod: bool,
+              variant: str) -> RunSpec:
+    """The declarative config of one dry-run cell — the same RunSpec
+    surface the training launcher parses, so a dry-run cell and a real
+    run describe their mesh/precision identically."""
+    return RunSpec(
+        arch=arch, full=True,
+        mesh=MeshSpec.production(multi_pod=multi_pod),
+        precision=PrecisionSpec(
+            # bf16 compute-cast everywhere: fp32-master FSDP gathers and
+            # the TP partial-sum all-reduces run on bf16 values
+            compute_dtype="bfloat16" if variant == "opt" else None,
+            packed_serving=(variant == "opt"
+                            and SHAPES[shape_name].kind == "decode"),
+            # the compile-only dry-run keeps packed weights on the
+            # XLA-fused dequant path (no Pallas kernel in the lowering)
+            packed_matmul=False))
+
+
 def build_cell(arch: str, shape_name: str, multi_pod: bool = False,
                variant: str = "base") -> Dict[str, Any]:
     """variant='opt' enables the beyond-paper knobs (dist.perf):
     train -> bf16 compute-cast (halves FSDP gather volume);
     decode -> HGQ-packed int8 weights + int8 KV cache."""
     shape = SHAPES[shape_name]
-    cfg = get(arch)
-    if shape.kind != "train":
-        cfg = dataclasses.replace(cfg, dtype="bfloat16", remat=False)
-    if shape_name == "long_500k" and not cfg.sub_quadratic:
+    # applicability check BEFORE building the context: a skipped cell
+    # must not pay the 256/512-device mesh construction
+    if shape_name == "long_500k" and not get(arch).sub_quadratic:
         return {"arch": arch, "shape": shape_name, "status": "skipped",
                 "reason": "full quadratic attention at 524288 tokens "
                           "(see DESIGN.md SS4 Arch-applicability)"}
+    ctx = build(cell_spec(arch, shape_name, multi_pod, variant))
+    cfg = ctx.cfg
+    if shape.kind != "train":
+        cfg = dataclasses.replace(cfg, dtype="bfloat16", remat=False)
     M = model_for(cfg)
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = ctx.mesh
     chips = mesh.devices.size
-    # activation-sharding annotations (repro.dist.axes)
-    from ..dist.axes import set_axes
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    daxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
-    dsize = 1
-    for a in daxes:
-        dsize *= sizes[a]
-    set_axes(daxes, "model", data_size=dsize, model_size=sizes["model"])
     params_abs, qstate_abs = abstract_model_state(M, cfg)
-    from ..dist.perf import pack_params_for_serving, set_compute_dtype
-    set_compute_dtype(None)
-    if variant == "opt":
-        # bf16 compute-cast everywhere: fp32-master FSDP gathers and the TP
-        # partial-sum all-reduces run on bf16 values
-        set_compute_dtype(jnp.bfloat16)
-        if shape.kind == "decode":
-            params_abs = jax.eval_shape(pack_params_for_serving, params_abs)
+    if ctx.spec.precision.packed_serving:
+        from ..dist.perf import pack_params_for_serving
+        params_abs = jax.eval_shape(pack_params_for_serving, params_abs)
     batch_abs = input_specs(cfg, shape)
     mode = "train" if shape.kind == "train" else "serve"
     params_sh = shard_tree(params_abs, mesh, mode)
@@ -146,9 +155,9 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool = False,
                                mu=shard_tree(opt_abs.mu, mesh, "train"),
                                nu=shard_tree(opt_abs.nu, mesh, "train"))
         fwd = lambda p, q, b, mode: M.forward(p, q, b, cfg, mode)
-        step_fn = make_train_step(fwd, lambda out, b: lm_loss(out,
-                                                              b["tokens"]),
-                                  TrainConfig(steps=1000))
+        step_fn = ctx.wrap(make_train_step(
+            fwd, lambda out, b: lm_loss(out, b["tokens"]),
+            TrainConfig(steps=1000)))
         with mesh:
             jitted = jax.jit(step_fn,
                              in_shardings=(params_sh, qstate_sh, opt_sh,
@@ -158,6 +167,7 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool = False,
                                    jax.ShapeDtypeStruct((), jnp.int32))
             compiled = lowered.compile()
     elif shape.kind == "prefill":
+        @ctx.wrap
         def prefill(p, q, b):
             logits, _, _ = M.forward(p, q, b, cfg, mode=hgq.EVAL)
             return logits
@@ -176,6 +186,7 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool = False,
             caches_abs = abstract_cache(M, cfg, shape.global_batch, max_len)
         caches_sh = cache_shardings(caches_abs, mesh, cfg)
 
+        @ctx.wrap
         def serve_step(p, q, c, tokens, pos):
             return M.decode_step(p, q, c, tokens, pos, cfg)
 
@@ -192,7 +203,6 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool = False,
                                        (shape.global_batch,), jnp.int32))
             compiled = lowered.compile()
 
-    set_compute_dtype(None)
     compile_s = time.time() - t0
     hlo = compiled.as_text()
     from .analytic import analytic_flops_total, hbm_bytes_per_chip

@@ -1,13 +1,15 @@
-"""Production mesh builders.
+"""Mesh builders — thin wrappers over ``repro.api``'s declarative
+:class:`MeshSpec` (the one place mesh topology is described as data).
 
-A FUNCTION (not a module-level constant) so importing this module never
+FUNCTIONS (not module-level constants) so importing this module never
 touches jax device state — the dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
 init, smoke tests keep 1 device.
 """
 from __future__ import annotations
 
-import jax
+from ..api.spec import MeshSpec
+from ..api.context import build_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,14 +18,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     ``pod`` is an outer data axis: the gradient all-reduce crosses the
     (slower) inter-pod links once per step; TP traffic stays inside a pod.
     """
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return build_mesh(MeshSpec.production(multi_pod=multi_pod))
 
 
-def make_host_mesh():
-    """Single-device mesh for CPU smoke tests/examples."""
-    return jax.make_mesh((1, 1), ("data", "model"))
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Host ``data x model`` mesh (default 1x1 for CPU smoke tests)."""
+    return build_mesh(MeshSpec.host(data, model))
 
 
 def data_axes(mesh) -> tuple:

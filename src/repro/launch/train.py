@@ -1,194 +1,55 @@
 """Pod-scale LM training launcher: pjit'd train step under the production
 mesh with the full sharding rules.
 
-On this CPU container it runs the smoke config on a 1x1 mesh; on hardware,
-``--multi-pod`` builds the (2, 16, 16) mesh and the same code paths shard
-per repro.dist.sharding (exactly what launch/dryrun.py proves compiles).
+The launcher is a thin shell over ``repro.api``: CLI flags (or a
+``--spec run.json`` file — see ``examples/specs/``) parse into one
+declarative :class:`repro.api.RunSpec`, and :func:`repro.api.build`
+constructs the mesh, axis registry, shardings, compressed train step,
+and checkpoint/resume flow from the spec alone — the exact config that
+ran is reprintable as JSON, and no module-level globals are touched.
+
+On this CPU container it runs the smoke config on a 1x1 mesh; on
+hardware, ``--multi-pod`` builds the (2, 16, 16) mesh and the same code
+paths shard per repro.dist.sharding (exactly what launch/dryrun.py
+proves compiles).
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
         --steps 20 --batch 4 --seq 32
+    PYTHONPATH=src python -m repro.launch.train \
+        --spec examples/specs/host_2x4_int8wire2d.json
 """
 from __future__ import annotations
 
-import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-
-from ..configs import get
-from ..data import DataSpec, make_pipeline
-from ..dist import EFState, ef_compress, ef_init
-from ..dist import collectives
-from ..dist.axes import set_axes
-from ..dist.sharding import (batch_sharding, ef_residual_sharding,
-                             replicated, shard_tree)
-from ..models import model_for
-from ..optim import adamw_init
-from ..train import TrainConfig, lm_loss, make_train_step
-from ..train import checkpoint as ckpt_lib
-from .mesh import make_host_mesh, make_production_mesh
+from ..api import RunSpec, build
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--steps", type=int, default=20)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--seq", type=int, default=32)
-    ap.add_argument("--production-mesh", action="store_true")
-    ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--mesh", default="",
-                    help="host mesh DATAxMODEL (e.g. 4x2) for multi-device "
-                         "smoke runs; needs XLA_FLAGS="
-                         "--xla_force_host_platform_device_count>=D*M")
-    ap.add_argument("--ckpt-dir", default="")
-    ap.add_argument("--ckpt-every", type=int, default=200,
-                    help="checkpoint every N steps (makes the EF-residual "
-                         "resume path drivable in short runs)")
-    ap.add_argument("--grad-compression",
-                    choices=["none", "bf16", "int8", "int8-wire",
-                             "int8-wire-2d"],
-                    default="none",
-                    help="bf16/int8 quantize the synchronized gradient "
-                         "(post-reduce); int8-wire compresses inside the "
-                         "reduction — int8 bytes on the wire via "
-                         "dist.collectives; int8-wire-2d additionally "
-                         "slices the exchange over the model (TP) axis — "
-                         "auto-selected for int8-wire when --mesh DxM has "
-                         "M>1 (single-device runs fall back to the "
-                         "post-reduce int8 path)")
-    args = ap.parse_args()
-
-    cfg = get(args.arch, smoke=not args.full)
-    M = model_for(cfg)
-    if args.production_mesh or args.multi_pod:
-        mesh = make_production_mesh(multi_pod=args.multi_pod)
-        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-        daxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
-        dsize = 1
-        for a in daxes:
-            dsize *= sizes[a]
-        set_axes(daxes, "model", data_size=dsize, model_size=sizes["model"])
-    elif args.mesh:
-        d, m = (int(v) for v in args.mesh.lower().split("x"))
-        mesh = jax.make_mesh((d, m), ("data", "model"))
-        set_axes(("data",), "model", data_size=d, model_size=m)
-    else:
-        mesh = make_host_mesh()
-
-    params, qstate = M.init(jax.random.PRNGKey(0), cfg)
-    opt = adamw_init(params)
-    pipe = make_pipeline(DataSpec(kind="lm", batch=args.batch, seq=args.seq,
-                                  vocab=cfg.vocab))
-    tcfg = TrainConfig(steps=args.steps, lr=1e-3, beta0=1e-9, beta1=1e-7,
-                       ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
-    fwd = lambda p, q, b, mode: M.forward(p, q, b, cfg, mode)
-    # int8/bf16 error-feedback quantization of the gradient (the residual
-    # carries the quantization error so the time-averaged update stays
-    # unbiased).  bf16/int8 quantize the *synchronized* gradient — they
-    # bound update noise but fp32 still crosses the wire; int8-wire moves
-    # the compression inside the reduction (dist.collectives: shard_map
-    # two-phase int8 exchange, custom-vjp psum), so the gradient collective
-    # itself is ~4x smaller.
-    dsize = collectives.data_axis_size(mesh)
-    msize = collectives.model_axis_size(mesh)
-    wire_kinds = ("int8-wire", "int8-wire-2d")
-    # the 2D sliced exchange is strictly better whenever the mesh has a
-    # model axis (int8 instead of fp32 crosses it) — auto-upgrade int8-wire
-    wire_layout = ("2d" if (args.grad_compression == "int8-wire-2d"
-                            or msize > 1) else "1d")
-    wire = (args.grad_compression in wire_kinds
-            and (dsize > 1 or (wire_layout == "2d" and msize > 1)))
-    if args.grad_compression == "int8-wire" and wire and wire_layout == "2d":
-        print(f"mesh has model axis of size {msize}: upgrading int8-wire "
-              f"to the 2D-sliced exchange (int8-wire-2d)")
-    grad_tx = None
-    ef_state = None
-    if args.grad_compression in wire_kinds:
-        if wire and wire_layout == "2d":
-            ef_state = EFState(
-                residual=collectives.ef_wire2d_init(params, dsize, msize))
-        elif wire:
-            ef_state = EFState(
-                residual=collectives.ef_wire_init(params, dsize))
-        else:
-            # single device: the wire is a no-op — post-reduce int8 EF IS
-            # the compressed path here, token-for-token
-            grad_tx = lambda g, s: ef_compress(g, s, kind="int8")
-            ef_state = ef_init(params)
-    elif args.grad_compression != "none":
-        grad_tx = lambda g, s: ef_compress(g, s, kind=args.grad_compression)
-        ef_state = ef_init(params)
-    step_fn = make_train_step(fwd, lambda out, b: lm_loss(out, b["tokens"]),
-                              tcfg, grad_tx=grad_tx,
-                              reduce="compressed" if wire else "full",
-                              mesh=mesh if wire else None,
-                              wire_layout=wire_layout if wire else "auto")
-    with mesh:
-        in_shardings = (shard_tree(params, mesh, "train"),
-                        shard_tree(qstate, mesh, "train"),
-                        type(opt)(step=replicated(mesh),
-                                  mu=shard_tree(opt.mu, mesh, "train"),
-                                  nu=shard_tree(opt.nu, mesh, "train")),
-                        {"tokens": batch_sharding(mesh, args.batch, 2)},
-                        replicated(mesh))
-        donate = (0, 2)
-        if ef_state is not None:
-            res_sh = (ef_residual_sharding(ef_state.residual, mesh,
-                                           layout=wire_layout) if wire
-                      else shard_tree(ef_state.residual, mesh, "train"))
-            in_shardings += (EFState(residual=res_sh),)
-            donate += (5,)  # the residual threads step-to-step like opt
-        jitted = jax.jit(step_fn, in_shardings=in_shardings,
-                         donate_argnums=donate)
-        start = 0
-        if args.ckpt_dir:
-            last = ckpt_lib.latest_step(args.ckpt_dir)
-            if last is not None:
-                tmpl = {"params": params, "qstate": qstate, "opt": opt}
-                start, trees = ckpt_lib.restore(args.ckpt_dir, last, tmpl)
-                params, qstate, opt = (trees["params"], trees["qstate"],
-                                       trees["opt"])
-                # EF residual resumes rather than resetting — but only when
-                # the checkpoint has a shape-compatible one (a run may turn
-                # compression on mid-stream, change kind, or rescale the
-                # mesh: the 1D wire residual is [n_data, ...] and the 2D
-                # one [n_data, n_model, C], so a rescale — or a 1d<->2d
-                # layout switch — cannot re-chunk it: warn, restart it at
-                # zero, and eat one biased window instead of dying)
-                if ef_state is not None and ckpt_lib.has_tree(
-                        args.ckpt_dir, last, "ef"):
-                    try:
-                        _, eft = ckpt_lib.restore(args.ckpt_dir, last,
-                                                  {"ef": ef_state})
-                        ef_state = eft["ef"]
-                    except (AssertionError, KeyError):
-                        print("warning: checkpointed EF residual does not "
-                              "match the current mesh/compression kind; "
-                              "restarting it at zero")
-                print(f"resumed from step {start}")
+    spec = RunSpec.from_args()
+    ctx = build(spec)
+    comp = ctx.grad_compression()
+    if (spec.compression.kind == "int8-wire" and comp.wire
+            and comp.wire_layout == "2d"):
+        print(f"mesh has model axis of size {ctx.n_model}: upgrading "
+              f"int8-wire to the 2D-sliced exchange (int8-wire-2d)")
+    setup = ctx.init_training()
+    tcfg = spec.train
+    with ctx.mesh:
+        if tcfg.ckpt_dir and setup.maybe_resume():
+            print(f"resumed from step {setup.start_step}")
+        start = setup.start_step
         t0 = time.time()
-        for step in range(start, args.steps):
-            if ef_state is not None:
-                params, qstate, opt, m, ef_state = jitted(
-                    params, qstate, opt, pipe(step), jnp.int32(step),
-                    ef_state)
-            else:
-                params, qstate, opt, m = jitted(params, qstate, opt,
-                                                pipe(step), jnp.int32(step))
-            if step % max(args.steps // 10, 1) == 0:
+        for step in range(start, tcfg.steps):
+            m = setup.step(step)
+            if step % max(tcfg.steps // 10, 1) == 0:
                 print(f"step {step}: loss={float(m['loss']):.4f} "
                       f"ebops={float(m['ebops']):.3g}")
-            if args.ckpt_dir and step and step % tcfg.ckpt_every == 0:
-                trees = {"params": params, "qstate": qstate, "opt": opt}
-                if ef_state is not None:
-                    trees["ef"] = ef_state
-                # label = steps applied = next step to run; labelling with
-                # `step` would replay an already-applied batch on resume
-                ckpt_lib.save(args.ckpt_dir, step + 1, trees)
-        print(f"done: {args.steps - start} steps in {time.time()-t0:.1f}s")
+            if tcfg.ckpt_dir and step and step % tcfg.ckpt_every == 0:
+                # label = steps applied = next step to run; labelling
+                # with `step` would replay an already-applied batch
+                setup.checkpoint(step + 1)
+        print(f"done: {tcfg.steps - start} steps in {time.time()-t0:.1f}s")
 
 
 if __name__ == "__main__":

@@ -36,7 +36,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..dist.perf import packed_matmul
+from ..dist.axes import axis_scope, get_axes
+from ..dist.perf import (compute_dtype_scope, get_compute_dtype,
+                         packed_matmul)
 from ..models.config import ModelConfig
 from ..nn.attention import NEG_INF
 
@@ -94,6 +96,13 @@ class Engine:
         self.model = model
         self.cfg = cfg
         self.packed = packed
+        # snapshot the trace-time configuration in scope at construction
+        # (a RunContext's activate(), or the process defaults): every
+        # trace this engine owns re-binds exactly this snapshot, so
+        # engines built under different contexts — two precisions, two
+        # meshes, one process — never read each other's flags
+        self._axes = get_axes()
+        self._compute_dtype = get_compute_dtype()
         if packed:
             from .packed import pack_for_serving
             params, qstate = pack_for_serving(params, qstate)
@@ -147,9 +156,13 @@ class Engine:
         self._sample1 = jax.jit(_sample, static_argnums=(4,))
 
     def _run(self, fn, *args):
-        """Call a jitted function under this engine's packed-matmul routing
-        (the flag is read at trace time; jit caches per engine tree)."""
-        with packed_matmul(self.packed):
+        """Call a jitted function under this engine's trace-time snapshot
+        (axis registry + compute dtype captured at construction) plus its
+        packed-matmul routing (all read at trace time; jit caches per
+        engine tree)."""
+        with axis_scope(self._axes), \
+                compute_dtype_scope(self._compute_dtype), \
+                packed_matmul(self.packed):
             return fn(*args)
 
     # ------------------------------------------------------------------

@@ -25,10 +25,11 @@ multidevice = pytest.mark.skipif(
 
 
 def _stacked(key, n=4):
-    """A per-shard tree with a stacked [L, ...] leaf, a flat leaf, and a
-    scalar leaf."""
+    """A per-shard tree with a stacked [L, ...] leaf (under the
+    ``layers`` container, which marks it stacked by path), a flat leaf,
+    and a scalar leaf."""
     ks = jax.random.split(key, 3)
-    return {"stack": jax.random.normal(ks[0], (n, 3, 8, 5)),
+    return {"layers": jax.random.normal(ks[0], (n, 3, 8, 5)),
             "vec": jax.random.normal(ks[1], (n, 17)),
             "scalar": jax.random.normal(ks[2], (n,))}
 
@@ -52,7 +53,8 @@ def test_simulate_stacked_leaf_per_layer_grids():
     bounded by its OWN grid step, not the outlier's."""
     e = jnp.ones((2, 3, 8, 5)) * 1e-3
     e = e.at[:, 1].mul(1e4)  # layer 1 is a 10.0-scale outlier
-    delivered, _ = simulate_wire_pmean({"w": e}, "int8")
+    delivered, _ = simulate_wire_pmean({"w": e}, "int8",
+                                       stacked={"w": True})
     err = np.abs(np.asarray(delivered["w"]) - np.mean(np.asarray(e), axis=0))
     for layer in range(3):
         own_grid = float(np.max(np.abs(np.asarray(e[:, layer])))) / 127

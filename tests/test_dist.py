@@ -11,12 +11,12 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.dist import EFState, ef_compress, ef_init
-from repro.dist.axes import (constrain, get_model_size, reset_axes,
-                             set_axes)
-from repro.dist.perf import (cast_for_matmul, get_compute_dtype,
-                             pack_params_for_serving, set_compute_dtype,
-                             unpack_weight)
-from repro.dist.sharding import spec_for_param, shard_tree
+from repro.dist.axes import (AxisRegistry, axis_scope, constrain,
+                             get_model_size, reset_axes, set_axes)
+from repro.dist.perf import (cast_for_matmul, compute_dtype_scope,
+                             get_compute_dtype, pack_params_for_serving,
+                             set_compute_dtype, unpack_weight)
+from repro.dist.sharding import spec_for_param, shard_tree, stacked_tree
 
 
 class _FakeMesh:
@@ -44,11 +44,27 @@ def test_constrain_pattern_validation():
         constrain(x, "bx")         # unknown axis char
 
 
-def test_axes_registry_roundtrip():
+def test_axes_scope_roundtrip():
+    """axis_scope binds the registry for the dynamic extent only — and
+    nests (inner scope wins, outer restored)."""
     assert get_model_size() == 1
-    set_axes(("pod", "data"), "model", data_size=32, model_size=16)
+    with axis_scope(AxisRegistry(("pod", "data"), "model", 32, 16)):
+        assert get_model_size() == 16
+        with axis_scope(AxisRegistry(("data",), "model", 2, 4)):
+            assert get_model_size() == 4
+        assert get_model_size() == 16
+    assert get_model_size() == 1
+
+
+def test_set_axes_shim_warns_and_delegates():
+    """The deprecated global-mutation shim still works for one release:
+    it rebinds the *default* registry (scoped overrides still win)."""
+    with pytest.warns(DeprecationWarning, match="set_axes is deprecated"):
+        set_axes(("pod", "data"), "model", data_size=32, model_size=16)
     try:
         assert get_model_size() == 16
+        with axis_scope(AxisRegistry()):
+            assert get_model_size() == 1   # scope beats the default
     finally:
         reset_axes()
     assert get_model_size() == 1
@@ -127,12 +143,24 @@ def test_compute_dtype_cast():
     x = jnp.ones((3, 3), jnp.float32)
     ids = jnp.ones((3,), jnp.int32)
     assert cast_for_matmul(x).dtype == jnp.float32
-    set_compute_dtype(jnp.bfloat16)
-    try:
+    with compute_dtype_scope(jnp.bfloat16):
         assert cast_for_matmul(x).dtype == jnp.bfloat16
         assert cast_for_matmul(ids).dtype == jnp.int32  # ints untouched
+    assert cast_for_matmul(x).dtype == jnp.float32
+
+
+def test_set_compute_dtype_shim_warns_and_delegates():
+    from repro.dist.perf import reset_precision
+    with pytest.warns(DeprecationWarning,
+                      match="set_compute_dtype is deprecated"):
+        set_compute_dtype(jnp.bfloat16)
+    try:
+        assert get_compute_dtype() == jnp.bfloat16
+        with compute_dtype_scope(None):    # scope beats the default
+            assert get_compute_dtype() is None
     finally:
-        set_compute_dtype(None)
+        reset_precision()
+    assert get_compute_dtype() is None
 
 
 def test_pack_unpack_roundtrip_on_grid():
@@ -229,13 +257,14 @@ def test_ef_int8_stacked_leaf_per_layer_grid():
     """Regression: a stacked [L, ...] leaf used ONE per-tensor int8 grid,
     so a single outlier layer crushed quantization resolution for all L
     layers.  The grid must be per leading (layer) axis: each layer's
-    max-abs error stays within one step of its OWN grid."""
+    max-abs error stays within one step of its OWN grid.  Stackedness is
+    marked by the tree path (the scan'd ``layers`` container here)."""
     key = jax.random.PRNGKey(3)
     g = jax.random.normal(key, (4, 8, 6)) * 1e-3
     g = g.at[2].mul(1e4)                     # layer 2 is a 10-scale outlier
-    grads = {"w": g}
+    grads = {"layers": {"w": g}}
     sent, st = ef_compress(grads, ef_init(grads), kind="int8")
-    err = np.abs(np.asarray(sent["w"] - g))
+    err = np.abs(np.asarray(sent["layers"]["w"] - g))
     for layer in range(4):
         own_grid = float(jnp.max(jnp.abs(g[layer]))) / 127.0
         assert err[layer].max() <= own_grid, (
@@ -248,6 +277,44 @@ def test_ef_int8_stacked_leaf_per_layer_grid():
     s2, _ = ef_compress(flat, ef_init(flat), kind="int8")
     m = np.asarray(s2["w"]) * 127.0
     np.testing.assert_allclose(m, np.round(m), atol=1e-4)
+
+
+def test_ef_int8_genuine_3d_weight_one_grid():
+    """Regression (rank-sniffing bug): a genuinely 3-D weight — e.g. a
+    per-head attention tensor NOT under a stacked-layer container — must
+    get ONE per-tensor grid, not a silent per-slice grid along axis 0.
+    Every sent value lies on the single global max|e|/127 grid."""
+    key = jax.random.PRNGKey(4)
+    g = jax.random.normal(key, (4, 8, 6))      # [heads, d, d] — one tensor
+    g = g.at[2].mul(100.0)                     # head 2 dominates the amax
+    grads = {"attn_heads": {"w": g}}
+    assert jax.tree.leaves(stacked_tree(grads)) == [False]
+    sent, _ = ef_compress(grads, ef_init(grads), kind="int8")
+    scale = float(jnp.max(jnp.abs(g))) / 127.0
+    m = np.asarray(sent["attn_heads"]["w"]) / scale
+    # on one global grid every mantissa is an integer; per-slice grids
+    # (the old rank>=3 sniff) would put slices 0/1/3 on much finer grids
+    np.testing.assert_allclose(m, np.round(m), atol=1e-3)
+    # explicit override: the same tree CAN be marked stacked by metadata
+    sent2, _ = ef_compress(grads, ef_init(grads), kind="int8",
+                           stacked={"attn_heads": {"w": True}})
+    err2 = np.abs(np.asarray(sent2["attn_heads"]["w"] - g))
+    own_grid = float(jnp.max(jnp.abs(g[0]))) / 127.0
+    assert err2[0].max() <= own_grid
+
+
+def test_stacked_tree_path_rule():
+    """stacked_tree marks exactly the leaves under stacked containers
+    (scan'd layer stacks, MoE expert stacks) — param metadata, not rank."""
+    tree = {"layers": {"attn": {"wq": {"kernel": {"w": jnp.zeros((2, 4, 4))}}}},
+            "units": {"mlp": {"w": jnp.zeros((1, 4, 8))}},
+            "head": {"kernel": {"w": jnp.zeros((4, 4))}},
+            "attn_heads": {"w": jnp.zeros((4, 4, 4))}}
+    marks = stacked_tree(tree)
+    assert marks["layers"]["attn"]["wq"]["kernel"]["w"] is True
+    assert marks["units"]["mlp"]["w"] is True
+    assert marks["head"]["kernel"]["w"] is False
+    assert marks["attn_heads"]["w"] is False
 
 
 def test_ef_state_is_jit_compatible():

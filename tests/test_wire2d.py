@@ -38,10 +38,11 @@ multidevice = pytest.mark.skipif(
 
 def _stacked(key, n=2):
     """A per-shard tree with a model-shardable matrix, a stacked [L, ...]
-    leaf, a flat (model-replicated) vector, and a scalar."""
+    leaf (under the ``layers`` container, which marks it stacked by
+    path), a flat (model-replicated) vector, and a scalar."""
     ks = jax.random.split(key, 4)
     return {"w": jax.random.normal(ks[0], (n, 6, 8)),
-            "stack": jax.random.normal(ks[1], (n, 3, 8, 6)),
+            "layers": jax.random.normal(ks[1], (n, 3, 8, 6)),
             "vec": jax.random.normal(ks[2], (n, 17)),
             "scalar": jax.random.normal(ks[3], (n,))}
 
@@ -98,16 +99,38 @@ def test_simulate_2d_delivers_near_mean(D, M):
 
 def test_simulate_2d_stacked_leaf_per_layer_grids():
     """The per-layer grid survives the model slicing: an outlier layer in
-    a stacked [L, ...] leaf must not crush the other layers."""
+    a stacked [L, ...] leaf must not crush the other layers.  The leaf is
+    marked stacked explicitly (the metadata override; a ``layers`` path
+    would derive the same)."""
     e = jnp.ones((2, 3, 8, 6)) * 1e-3
     e = e.at[:, 1].mul(1e4)
     delivered, _ = simulate_wire_pmean_2d(
-        {"w": e}, ef_wire2d_init({"w": e[0]}, 2, 2), 2, "int8")
+        {"w": e}, ef_wire2d_init({"w": e[0]}, 2, 2), 2, "int8",
+        stacked={"w": True})
     err = np.abs(np.asarray(delivered["w"]) - np.mean(np.asarray(e), axis=0))
     for layer in range(3):
         own_grid = float(np.max(np.abs(np.asarray(e[:, layer])))) / 127
         assert err[layer].max() <= 2.5 * own_grid, layer
     assert err[0].max() < 1e-4
+
+
+def test_simulate_2d_unmarked_3d_leaf_single_grid():
+    """Regression (rank-sniffing bug): a rank-3 leaf NOT under a stacked
+    container gets ONE quantization grid in the wire path too — the
+    delivered mean of a uniform-magnitude tensor with one dominant slice
+    lands on the single global grid."""
+    e = jnp.ones((2, 3, 8, 6)) * 1e-3
+    e = e.at[:, 1].mul(1e4)
+    delivered, _ = simulate_wire_pmean_2d(
+        {"w": e}, ef_wire2d_init({"w": e[0]}, 2, 2), 2, "int8")
+    # one global grid (step ~ amax/127 ~ 0.08): the 1e-3 slices floor to
+    # exactly 0 on the first step (their EF residual recovers them over
+    # time); the old per-slice grids delivered them at fine resolution
+    # immediately, which is the bug for a genuine 3-D tensor
+    got = np.asarray(delivered["w"])
+    assert np.all(got[0] == 0.0) and np.all(got[2] == 0.0), got
+    step = float(np.max(np.abs(np.asarray(e)))) / 127.0
+    np.testing.assert_allclose(got[1], 10.0, atol=2 * step)
 
 
 def test_simulate_2d_bad_kind_raises():

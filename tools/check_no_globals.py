@@ -1,0 +1,118 @@
+"""CI gate: no new module-level mutable trace-time state in src/repro.
+
+The RunSpec/RunContext redesign removed the hidden trace-time globals
+(``set_axes``/``set_compute_dtype`` module state) in favor of the scoped
+mechanism in ``repro/dist/scope.py``.  This checker keeps them out:
+
+* any ``global`` statement in ``src/repro`` fails — mutating module
+  state from a function is exactly the pattern that made jitted programs
+  depend on ambient configuration (use ``dist.scope.Scoped`` instead);
+* any module-level binding of a *mutable* container literal
+  (``= []``, ``= {}``, ``= set()`` / ``dict()`` / ``list()``) fails —
+  module-level caches/registries accumulate cross-run state (bind them
+  inside a class or a ``Scoped`` default).
+
+Allowlist entries are ``path::name`` (for assignments) or ``path::*``
+(whole file), relative to the repo root.
+
+Usage (CI lint job):  python tools/check_no_globals.py
+Exit codes: 0 = clean, 1 = violations, 2 = bad invocation.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+from typing import List
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src", "repro")
+
+# path::name entries exempt from the module-level-mutable rule.  Keep
+# this list SHORT and justified; the deprecated set_* shims do not need
+# entries (they delegate to Scoped defaults, no module globals).
+ALLOWLIST = frozenset({
+    # import-time lookup tables, never mutated after module import:
+    "src/repro/api/context.py::_DTYPES",         # dtype-name resolution
+    "src/repro/configs/base.py::ALIASES",        # arch-id registry
+    "src/repro/configs/base.py::SHAPES",         # assigned shape grid
+    "src/repro/launch/roofline.py::_DTYPE_BYTES",
+})
+
+MUTABLE_CALLS = {"dict", "list", "set", "defaultdict", "OrderedDict",
+                 "deque", "Counter"}
+
+
+def _is_mutable_literal(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        fn = node.func
+        name = fn.id if isinstance(fn, ast.Name) else (
+            fn.attr if isinstance(fn, ast.Attribute) else "")
+        return name in MUTABLE_CALLS
+    return False
+
+
+def _targets(node: ast.AST) -> List[str]:
+    if isinstance(node, ast.Assign):
+        out = []
+        for t in node.targets:
+            if isinstance(t, ast.Name):
+                out.append(t.id)
+        return out
+    if isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+        return [node.target.id]
+    return []
+
+
+def check_file(path: str) -> List[str]:
+    rel = os.path.relpath(path, ROOT)
+    with open(path) as f:
+        tree = ast.parse(f.read(), filename=rel)
+    problems = []
+    if f"{rel}::*" in ALLOWLIST:
+        return problems
+    # rule 1: no `global` statements anywhere in the module
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Global):
+            problems.append(
+                f"{rel}:{node.lineno}: `global {', '.join(node.names)}` — "
+                f"module-level mutable trace-time state; use "
+                f"repro.dist.scope.Scoped")
+    # rule 2: no module-level mutable-container bindings
+    for node in tree.body:
+        if isinstance(node, (ast.Assign, ast.AnnAssign)):
+            value = node.value
+            if value is None or not _is_mutable_literal(value):
+                continue
+            for name in _targets(node):
+                if f"{rel}::{name}" in ALLOWLIST:
+                    continue
+                problems.append(
+                    f"{rel}:{node.lineno}: module-level mutable binding "
+                    f"`{name}` — bind it in a class or a Scoped default")
+    return problems
+
+
+def main() -> int:
+    if not os.path.isdir(SRC):
+        print(f"missing {SRC}", file=sys.stderr)
+        return 2
+    problems: List[str] = []
+    for dirpath, _, files in os.walk(SRC):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                problems += check_file(os.path.join(dirpath, fn))
+    for p in problems:
+        print(f"FAIL {p}", file=sys.stderr)
+    if problems:
+        return 1
+    print("check_no_globals: src/repro is free of module-level mutable "
+          "trace-time state")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
