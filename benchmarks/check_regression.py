@@ -5,9 +5,11 @@ a guarded metric regresses beyond tolerance.
 What is guarded (direction-aware — a metric only fails when it moves the
 *bad* way):
 
-* ``collectives``: ``bytes_per_element`` per mode (lower is better), the
-  2D-mesh ``total_bytes_per_element`` per mode, and the
-  ``reduction_vs_1d`` ratio of the 2D sliced exchange (higher is better);
+* ``collectives``: ``bytes_per_element`` AND ``step_ms`` per mode (both
+  lower is better), the 2D-mesh ``total_bytes_per_element`` /
+  ``step_ms`` per mode, the ``reduction_vs_1d`` ratio of the 2D sliced
+  exchange (higher is better), and the mixed-precision section's
+  ``bytes_per_element`` (lower) / ``reduction_vs_uniform`` (higher);
 * ``serving``: ``decode_tokens_per_sec`` / ``mixed_tokens_per_sec`` per
   mode (higher is better) and the ``hbm_saving_x`` packing ratio.
 
@@ -16,9 +18,10 @@ Usage (CI runs exactly this after the smoke benches):
     python benchmarks/check_regression.py BENCH_collectives.json \
         BENCH_serving.json
 
-    # throughput on shared runners is noisy — per-metric tolerance:
+    # wall-time on shared runners is noisy — per-metric tolerance:
     python benchmarks/check_regression.py BENCH_serving.json \
-        --override "serving.*tokens_per_sec=0.5"
+        --override "serving.*tokens_per_sec=0.5" \
+        --override "collectives*step_ms=1.0"
 
 Re-baselining (after an intentional change, run the benches and commit):
 
@@ -57,14 +60,27 @@ def extract_metrics(data: dict) -> Metrics:
         for row in data.get("runs", []):
             out[f"collectives.{row['mode']}.bytes_per_element"] = (
                 float(row["bytes_per_element"]), "lower")
+            if "step_ms" in row:
+                out[f"collectives.{row['mode']}.step_ms"] = (
+                    float(row["step_ms"]), "lower")
         for sec in data.get("mesh2d", []):
             for row in sec.get("runs", []):
                 name = f"collectives[{sec['mesh']}].{row['mode']}"
                 out[f"{name}.total_bytes_per_element"] = (
                     float(row["total_bytes_per_element"]), "lower")
+                if "step_ms" in row:
+                    out[f"{name}.step_ms"] = (float(row["step_ms"]),
+                                              "lower")
                 if "reduction_vs_1d" in row:
                     out[f"{name}.reduction_vs_1d"] = (
                         float(row["reduction_vs_1d"]), "higher")
+        for row in data.get("mixed_precision", {}).get("runs", []):
+            name = f"collectives[mixed].{row['mode']}"
+            out[f"{name}.bytes_per_element"] = (
+                float(row["bytes_per_element"]), "lower")
+            if "reduction_vs_uniform" in row:
+                out[f"{name}.reduction_vs_uniform"] = (
+                    float(row["reduction_vs_uniform"]), "higher")
     elif kind == "serving":
         for row in data.get("runs", []):
             for key in ("decode_tokens_per_sec", "mixed_tokens_per_sec"):

@@ -1,7 +1,9 @@
 """Gradient-collective benchmark: bytes on the wire and step time for the
 data-parallel mean-reduce, fp32 (ring all-reduce) vs bf16-wire vs
 int8-wire (``repro.dist.collectives`` two-phase exchange), plus the 2D
-(data x model) sliced exchange on DxM meshes.
+(data x model) sliced exchange on DxM meshes, plus a mixed-precision
+section where every packable matmul layer rides the int4 nibble wire
+(``core.plan.mixed_low_plan``) against the uniform int8 wire.
 
 Builds the real gradient-shaped tree of an architecture (every parameter
 leaf), stacks it per data shard, and runs each reduction jitted on an
@@ -132,6 +134,34 @@ def main() -> None:
                 "step_ms": round(ms, 2),
                 "reduction_vs_fp32": round(fp32_bytes / b, 2)})
 
+        # ---- mixed-precision section: every packable matmul layer on the
+        # int4 nibble wire (a learned PrecisionPlan's maximal mixed plan),
+        # everything else (biases, norms, activation f) at int8 — vs the
+        # uniform int8 wire above
+        from repro.core.plan import mixed_low_plan
+        plan = mixed_low_plan(params, low_bits=4)
+        widths = plan.wire_bits_tree(placed)
+        uniform_b = rows[-1]["bytes_on_wire_per_device"]   # int8-wire
+        fnm = jax.jit(lambda t: collectives.ef_wire_pmean(
+            t, mesh, "int8", widths=widths))
+        with collectives.record_wire_bytes() as recm:
+            fnm.lower(placed)
+        msm = time_reduce(fnm, placed)
+        bm = recm.total()
+        mixed = {
+            "plan_summary": plan.summary(),
+            "low_bits": 4,
+            "runs": [{
+                "mode": "int8-wire-uniform",
+                "bytes_on_wire_per_device": uniform_b,
+                "bytes_per_element": round(uniform_b / elements, 3)},
+                {"mode": "int8-wire-mixed-w4w8",
+                 "bytes_on_wire_per_device": bm,
+                 "bytes_per_element": round(bm / elements, 3),
+                 "step_ms": round(msm, 2),
+                 "reduction_vs_uniform": round(uniform_b / bm, 2)}],
+        }
+
     # ---- 2D (data x model) section: 1D vs 2D on DxM meshes of n devices
     mesh2d = []
     shapes_2d = [(n // m, m) for m in (4, 2)
@@ -191,6 +221,7 @@ def main() -> None:
             k: collectives.wire_bytes_model(elements, n, k, scale_rows)
             for k in collectives.WIRE_KINDS},
         "runs": rows,
+        "mixed_precision": mixed,
         "mesh2d": mesh2d,
     }
     for r in rows:
@@ -198,6 +229,11 @@ def main() -> None:
               f"{r['bytes_per_element']} B/elt on the wire, "
               f"{r['step_ms']} ms/reduce "
               f"({r['reduction_vs_fp32']}x vs fp32)")
+    for r in mixed["runs"]:
+        extra = (f" ({r['reduction_vs_uniform']}x vs uniform int8)"
+                 if "reduction_vs_uniform" in r else "")
+        print(f"collectives[mixed].{r['mode']}: "
+              f"{r['bytes_per_element']} B/elt on the wire{extra}")
     for sec in mesh2d:
         for r in sec["runs"]:
             extra = (f" ({r['reduction_vs_1d']}x vs 1d)"
@@ -212,6 +248,12 @@ def main() -> None:
     int8 = next(r for r in rows if r["mode"] == "int8-wire")
     if int8["reduction_vs_fp32"] < 3.0:
         print("FAIL: int8-wire byte reduction below 3x", file=sys.stderr)
+        sys.exit(1)
+    rmix = next(r for r in mixed["runs"]
+                if r["mode"] == "int8-wire-mixed-w4w8")
+    if rmix["bytes_per_element"] >= mixed["runs"][0]["bytes_per_element"]:
+        print("FAIL: mixed w4/w8 wire B/elt did not drop below the "
+              "uniform int8 wire", file=sys.stderr)
         sys.exit(1)
     for sec in mesh2d:
         r2d = next(r for r in sec["runs"] if r["mode"] == "int8-wire-2d")

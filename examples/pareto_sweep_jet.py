@@ -3,11 +3,22 @@ recovers the full accuracy/EBOPs Pareto front, then each front member is
 calibrated and its exact EBOPs + pruning fraction reported.
 
     PYTHONPATH=src python examples/pareto_sweep_jet.py
+
+With ``--emit-specs DIR`` every front point also carries the
+:class:`repro.core.plan.PrecisionPlan` derived from its params snapshot
+(per-layer wire/pack widths), and the sweep emits one ready-to-run
+RunSpec+plan JSON per point plus ``front.json`` into DIR:
+
+    PYTHONPATH=src python examples/pareto_sweep_jet.py --emit-specs out/
+    PYTHONPATH=src python -m repro.launch.train --spec out/pareto_00_*.json
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import hgq
+from repro.core.plan import plan_from_params
 from repro.core.quantizer import quantize_inference
 from repro.data import DataSpec, make_pipeline
 from repro.models import JetTagger
@@ -16,6 +27,12 @@ from repro.train import TrainConfig, Trainer, accuracy, softmax_xent
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--emit-specs", default=None, metavar="DIR",
+                    help="derive a PrecisionPlan per Pareto point and "
+                         "write ready-to-run RunSpec+plan JSONs there")
+    args = ap.parse_args()
+
     qcfg = HGQConfig(weight_gran="per_parameter", act_gran="per_parameter",
                      init_weight_f=2.0, init_act_f=2.0)
     params, qstate = JetTagger.init(jax.random.PRNGKey(0), qcfg)
@@ -25,7 +42,12 @@ def main():
     def eval_fn(p, q):
         b = pipe(10 ** 6)
         out, _, aux = JetTagger.forward(p, q, b, mode=hgq.EVAL)
-        return float(accuracy(out, b["y"])), float(aux.ebops)
+        metric, ebops = float(accuracy(out, b["y"])), float(aux.ebops)
+        if args.emit_specs:
+            # the point's payload: the width table its bit distribution
+            # supports right now — checkpointing the *plan*, not the params
+            return metric, ebops, plan_from_params(p)
+        return metric, ebops
 
     tcfg = TrainConfig(steps=800, lr=3e-3, beta0=1e-6, beta1=5e-3,
                        log_every=100, eval_every=50)
@@ -47,6 +69,14 @@ def main():
         total += w.size
     print(f"\nfinal model: {100 * pruned / total:.1f}% of weights pruned to "
           f"exactly 0 by bitwidth collapse (paper SSec. III.D.4)")
+
+    if args.emit_specs:
+        from repro.api import RunSpec, emit_pareto_specs
+        paths = emit_pareto_specs(tr.pareto, RunSpec(), args.emit_specs)
+        print(f"\nemitted {len(paths)} RunSpec+plan files -> "
+              f"{args.emit_specs} (plus front.json)")
+        for p in paths:
+            print(f"  {p}")
 
 
 if __name__ == "__main__":

@@ -15,7 +15,8 @@ module-level mutable state.
     with ctx.mesh:
         metrics = setup.step(0)
 """
+from ..core.plan import LayerPlan, PrecisionPlan  # noqa: F401
 from .spec import (CompressionSpec, GRAD_COMPRESSION_KINDS,  # noqa: F401
-                   MeshSpec, PrecisionSpec, RunSpec)
+                   MeshSpec, PrecisionSpec, RunSpec, emit_pareto_specs)
 from .context import (GradCompression, RunContext,  # noqa: F401
                       TrainSetup, build, build_mesh)

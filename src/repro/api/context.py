@@ -172,6 +172,12 @@ class RunContext:
         self.compute_dtype = _DTYPES[spec.precision.compute_dtype]
         self.n_data = collectives.data_axis_size(self.mesh)
         self.n_model = collectives.model_axis_size(self.mesh)
+        # effective precision plan: a missing plan and an explicit
+        # uniform-int8 plan both resolve to None, so every consumer takes
+        # the exact legacy (int8-everywhere) trace — spec files without
+        # a plan stay HLO-byte-identical (tests/test_api.py)
+        plan = spec.plan
+        self.plan = None if plan is None or plan.is_uniform_int8 else plan
 
     # --------------------------- activation ----------------------------
 
@@ -261,7 +267,8 @@ class RunContext:
             self.forward, loss_fn, self.spec.train, grad_tx=comp.grad_tx,
             reduce=comp.reduce, mesh=self.mesh if comp.wire else None,
             wire_kind=self.spec.compression.wire_kind,
-            wire_layout=comp.wire_layout if comp.wire else "auto")
+            wire_layout=comp.wire_layout if comp.wire else "auto",
+            wire_widths=self.plan)
         return self.wrap(step)
 
     def train_shardings(self, params, qstate, opt,
@@ -308,21 +315,30 @@ class RunContext:
     # --------------------------- serving -------------------------------
 
     def pack_params(self, params: Any) -> Any:
-        """The HGQ int8 serving tree (``serving/packed.py``), traced
-        under this context (safe on abstract trees via eval_shape)."""
+        """The HGQ packed serving tree (``serving/packed.py``), traced
+        under this context: int8 per layer by default, nibble-packed int4
+        where the spec's :class:`PrecisionPlan` says so (safe on abstract
+        trees via eval_shape)."""
         from ..serving.packed import pack_tree
         with self.activate():
-            return pack_tree(params)
+            return pack_tree(params, self.plan)
 
     def make_engine(self, params, qstate, **kwargs):
         """A continuous-batching ``serving.Engine`` serving this spec:
-        packing follows ``PrecisionSpec.packed_serving`` and the engine
-        snapshots this context's trace flags, so engines from different
-        contexts coexist in one process."""
+        packing follows ``PrecisionSpec.packed_serving`` plus the spec's
+        precision plan, and the engine snapshots this context's trace
+        flags, so engines from different contexts coexist in one
+        process."""
         from ..serving import Engine
         kwargs.setdefault("packed", self.spec.precision.packed_serving)
+        kwargs.setdefault("plan", self.plan)
         with self.activate(packed=False):
             return Engine(self.model, params, qstate, self.cfg, **kwargs)
+
+    def plan_summary(self) -> Optional[Dict[str, Any]]:
+        """Reporting view of the effective plan (None == uniform int8):
+        what dry-run cells and bench JSONs embed."""
+        return None if self.plan is None else self.plan.summary()
 
 
 def build(spec: RunSpec) -> RunContext:

@@ -31,8 +31,10 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-from typing import Any, Dict, Optional, Sequence, Tuple
+import os
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from ..core.plan import PrecisionPlan
 from ..data.synthetic import DataSpec
 from ..train.loop import TrainConfig
 
@@ -205,7 +207,8 @@ def _default_data() -> DataSpec:
 @dataclasses.dataclass(frozen=True)
 class RunSpec:
     """One run, fully specified: arch + mesh + precision + compression +
-    train/data config + seed.  See the module docstring."""
+    train/data config + seed + optional per-layer width plan.  See the
+    module docstring."""
     arch: str = "qwen2-0.5b"
     full: bool = False
     seed: int = 0
@@ -216,6 +219,11 @@ class RunSpec:
         default_factory=CompressionSpec)
     train: TrainConfig = dataclasses.field(default_factory=_default_train)
     data: DataSpec = dataclasses.field(default_factory=_default_data)
+    # learned per-layer precision (core.plan.PrecisionPlan): wire widths
+    # for the compressed gradient collective + pack widths for serving.
+    # None (and any uniform-int8 plan) is byte-identical to the pre-plan
+    # behavior — build() normalizes both to the exact legacy trace.
+    plan: Optional[PrecisionPlan] = None
 
     # ------------------------- serialization --------------------------
 
@@ -242,6 +250,10 @@ class RunSpec:
                        f"unknown {sub.__name__} fields: "
                        f"{sorted(sub_unknown)}")
                 d[name] = sub(**d[name])
+        if isinstance(d.get("plan"), dict):
+            # PrecisionPlan has its own strict loader (rejects unknown
+            # fields, validates widths) — reuse it
+            d["plan"] = PrecisionPlan.from_dict(d["plan"])
         return cls(**d)
 
     @classmethod
@@ -288,6 +300,11 @@ class RunSpec:
                         help="checkpoint every N steps (makes the "
                              "EF-residual resume path drivable in short "
                              "runs)")
+        ap.add_argument("--plan", default=None, metavar="PLAN_JSON",
+                        help="PrecisionPlan JSON file (core.plan): "
+                             "per-layer wire + pack widths learned from a "
+                             "trained HGQ run; omitted = uniform int8, "
+                             "byte-identical to not passing a plan")
         ap.add_argument("--compute-dtype", default=None,
                         choices=["none", "bfloat16", "float32"],
                         help="matmul compute dtype "
@@ -336,6 +353,8 @@ class RunSpec:
         elif args.mesh is not None:
             d, m = (int(v) for v in args.mesh.lower().split("x"))
             rep["mesh"] = MeshSpec.host(d, m)
+        if getattr(args, "plan", None) is not None:
+            rep["plan"] = PrecisionPlan.from_file(args.plan)
         if args.compute_dtype is not None:
             rep["precision"] = dataclasses.replace(
                 spec.precision,
@@ -363,3 +382,28 @@ class RunSpec:
         if da:
             rep["data"] = dataclasses.replace(spec.data, **da)
         return dataclasses.replace(spec, **rep) if rep else spec
+
+
+def emit_pareto_specs(front, base: RunSpec, out_dir: str) -> List[str]:
+    """Turn a trained run's Pareto front into ready-to-run spec files.
+
+    For every front point carrying a :class:`core.plan.PrecisionPlan`
+    payload (the sweep's per-point width tables), writes
+    ``out_dir/pareto_<i>_step<step>.json`` — ``base`` with that plan
+    embedded — plus ``out_dir/front.json`` (the serialized front, metric
+    vs EBOPs per point).  Each emitted spec is directly loadable with
+    ``--spec`` (or the plan alone with ``--plan`` after extracting it);
+    points without a plan payload are skipped.  Returns the spec paths,
+    cheapest point first."""
+    os.makedirs(out_dir, exist_ok=True)
+    paths: List[str] = []
+    for i, p in enumerate(front.points):
+        if not isinstance(p.payload, PrecisionPlan):
+            continue
+        spec = dataclasses.replace(base, plan=p.payload)
+        path = os.path.join(out_dir, f"pareto_{i:02d}_step{p.step}.json")
+        spec.save(path)
+        paths.append(path)
+    with open(os.path.join(out_dir, "front.json"), "w") as f:
+        f.write(front.to_json())
+    return paths

@@ -5,10 +5,16 @@ training run by checkpointing every epoch that lands on the running Pareto
 front of (validation metric, EBOPs).  This module implements that tracker.
 
 ``better_metric``: 'max' (accuracy) or 'min' (resolution / loss).
+
+Fronts serialize to JSON (``to_json``/``from_json``) so a sweep's
+accuracy/EBOPs curve — including per-point ``core.plan.PrecisionPlan``
+payloads — survives the run that produced it; ``api.spec`` turns such a
+front into ready-to-run RunSpec+plan files.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Any, List, Optional, Tuple
 
 
@@ -50,8 +56,56 @@ class ParetoFront:
         return [(p.metric, p.ebops, p.step) for p in self.points]
 
     def best(self, max_ebops: Optional[float] = None) -> Optional[ParetoPoint]:
+        """Best-metric point within the EBOPs budget; metric ties break
+        toward the cheaper (lower-EBOPs) point — the front is the set of
+        equally-accurate models, so under a resource metric the cheapest
+        one is the right checkpoint to deploy."""
         elig = [p for p in self.points
                 if max_ebops is None or p.ebops <= max_ebops]
         if not elig:
             return None
-        return max(elig, key=lambda p: self.sign * p.metric)
+        return max(elig, key=lambda p: (self.sign * p.metric, -p.ebops))
+
+    # --------------------------- serialization ---------------------------
+
+    def to_dict(self) -> dict:
+        """JSON view.  Payloads serialize when they are a
+        ``core.plan.PrecisionPlan`` (the sweep's per-point width tables)
+        or already JSON-native; anything else drops to ``None`` (a live
+        params snapshot is not a checkpointable artifact)."""
+        from .plan import PrecisionPlan
+
+        def payload(p: Any) -> Any:
+            if isinstance(p, PrecisionPlan):
+                return {"plan": p.to_dict()}
+            if p is None or isinstance(p, (str, int, float, bool)):
+                return p
+            return None
+
+        return {
+            "better_metric": "max" if self.sign > 0 else "min",
+            "points": [{"metric": p.metric, "ebops": p.ebops,
+                        "step": p.step, "payload": payload(p.payload)}
+                       for p in self.points],
+        }
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True) + "\n"
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ParetoFront":
+        from .plan import PrecisionPlan
+        front = cls(d["better_metric"])
+        for row in d["points"]:
+            pay = row.get("payload")
+            if isinstance(pay, dict) and set(pay) == {"plan"}:
+                pay = PrecisionPlan.from_dict(pay["plan"])
+            front.points.append(ParetoPoint(
+                float(row["metric"]), float(row["ebops"]),
+                int(row["step"]), pay))
+        front.points.sort(key=lambda p: p.ebops)
+        return front
+
+    @classmethod
+    def from_json(cls, s: str) -> "ParetoFront":
+        return cls.from_dict(json.loads(s))

@@ -1,0 +1,254 @@
+"""PrecisionPlan: the learned per-layer width table the whole stack reads.
+
+HGQ trains a fractional bit-width ``f`` per weight (core/hgq.py); EBOPs
+(core/ebops.py) turn those bits into the resource axis of the Pareto
+front (core/pareto.py).  This module closes the loop for the distributed
+and serving layers: a :class:`PrecisionPlan` is a frozen, JSON-exact
+per-layer table of
+
+* ``wire_bits``  — payload width of the in-reduction gradient collective
+  (``dist.collectives``; 4..8, sub-5-bit leaves ride nibble-packed
+  int4 chunks);
+* ``pack_bits``  — storage width of the serving weight pack
+  (``serving/packed.py`` / ``dist.perf``; <= 4 nibble-packs two
+  mantissas per byte);
+* ``scale_exp``  — the layer's calibrated grid exponent (2^-f), recorded
+  for reporting (dry-run cells, plan summaries) — consumers recompute
+  their own exact grids.
+
+``plan_from_params`` derives a plan from a trained params tree: per layer,
+the occupied mantissa bits under the capped per-channel grid of
+``kernels.qmatmul.channel_bits`` decide the width class.  The everywhere-
+default plan (``PrecisionPlan()``) is uniform int8 — byte-identical to
+the pre-plan behavior, which is what lets ``RunSpec.plan=None`` stay
+HLO-exact (tests/test_plan.py).
+
+Like ``api/spec.py`` this module is importable without jax: derivation
+helpers import jax lazily, so the plan dataclasses stay pure config.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+MIN_BITS, MAX_BITS = 4, 8
+NIBBLE_BITS = 4     # widths <= this pack two mantissas per stored byte
+
+
+def _check(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ValueError(msg)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """Widths of one layer (a params-tree prefix, e.g. ``d0/kernel``)."""
+    wire_bits: int = 8
+    pack_bits: int = 8
+    scale_exp: Optional[float] = None
+
+    def __post_init__(self):
+        for name in ("wire_bits", "pack_bits"):
+            v = getattr(self, name)
+            _check(MIN_BITS <= v <= MAX_BITS,
+                   f"LayerPlan.{name} must be in "
+                   f"[{MIN_BITS}, {MAX_BITS}], got {v!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPlan:
+    """Frozen per-layer width table; ``default`` covers unlisted leaves.
+
+    ``layers`` keys are ``/``-joined params-tree paths (the same keys
+    :func:`iter_packable` yields); an entry applies to every leaf at or
+    under its path, deepest match winning.  ``PrecisionPlan()`` is the
+    uniform-int8 plan — exactly the pre-plan behavior."""
+    default: LayerPlan = dataclasses.field(default_factory=LayerPlan)
+    layers: Dict[str, LayerPlan] = dataclasses.field(default_factory=dict)
+
+    # ------------------------------ lookup -----------------------------
+
+    def entry_for(self, key: str) -> LayerPlan:
+        """The deepest ``layers`` entry whose path is ``key`` or a
+        ``/``-prefix of it; ``default`` otherwise."""
+        best, best_len = self.default, -1
+        for k, entry in self.layers.items():
+            if (key == k or key.startswith(k + "/")) and len(k) > best_len:
+                best, best_len = entry, len(k)
+        return best
+
+    @property
+    def is_uniform_int8(self) -> bool:
+        """True when every leaf resolves to 8-bit wire and pack — the
+        plan is a no-op and consumers take the exact legacy code path."""
+        entries = [self.default, *self.layers.values()]
+        return all(e.wire_bits == 8 and e.pack_bits == 8 for e in entries)
+
+    def wire_bits_tree(self, tree: Any) -> Any:
+        """Matching tree of per-leaf wire widths (plain ints) for a
+        params/grads pytree — what ``dist.collectives`` consumes."""
+        import jax
+        return jax.tree_util.tree_map_with_path(
+            lambda path, _: self.entry_for(path_key(path)).wire_bits, tree)
+
+    def summary(self) -> Dict[str, Any]:
+        """Reporting view (dry-run cells, bench JSONs): the default plus
+        every non-default layer's widths."""
+        return {
+            "default": {"wire_bits": self.default.wire_bits,
+                        "pack_bits": self.default.pack_bits},
+            "layers": {k: {"wire_bits": e.wire_bits,
+                           "pack_bits": e.pack_bits}
+                       for k, e in sorted(self.layers.items())},
+        }
+
+    # --------------------------- serialization -------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True) + "\n"
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "PrecisionPlan":
+        d = dict(d)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        _check(not unknown, f"unknown PrecisionPlan fields: "
+                            f"{sorted(unknown)}")
+        entry_known = {f.name for f in dataclasses.fields(LayerPlan)}
+
+        def entry(e: Dict[str, Any]) -> LayerPlan:
+            bad = set(e) - entry_known
+            _check(not bad, f"unknown LayerPlan fields: {sorted(bad)}")
+            return LayerPlan(**e)
+
+        if isinstance(d.get("default"), dict):
+            d["default"] = entry(d["default"])
+        if isinstance(d.get("layers"), dict):
+            d["layers"] = {k: entry(v) for k, v in d["layers"].items()}
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "PrecisionPlan":
+        return cls.from_dict(json.loads(s))
+
+    @classmethod
+    def from_file(cls, path: str) -> "PrecisionPlan":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+
+def path_key(path) -> str:
+    """``tree_flatten_with_path`` key path -> the ``/``-joined plan key
+    (``d0/kernel/w``); list indices stringify to their position."""
+    from ..dist.sharding import _key_name
+    return "/".join(_key_name(k) for k in path)
+
+
+def packable_weight(name: str, w) -> bool:
+    """The one packable-matmul-weight rule, shared with the serving
+    walker (``dist.perf``): rank >= 2 floating weights that are not
+    biases and not conv kernels."""
+    if not hasattr(w, "ndim") or w.ndim < 2:
+        return False          # biases, norm gains, scalars
+    import jax.numpy as jnp   # lazy: keeps the plan dataclasses jax-free
+    if not hasattr(w, "dtype") or not jnp.issubdtype(w.dtype, jnp.floating):
+        return False
+    if name == "bias":
+        return False          # stacked biases are [L, d] but not matmuls
+    if name == "kernel" and w.ndim >= 4:
+        return False          # conv kernels: HConv2D reads 'w' directly
+    return True
+
+
+def iter_packable(params: Any) -> Iterator[Tuple[str, Dict[str, Any]]]:
+    """Yield ``(plan_key, weight_dict)`` for every packable matmul weight
+    dict ``{'w', 'f'?}`` in a params tree, in walk order.  The keys are
+    exactly the paths :meth:`PrecisionPlan.entry_for` matches against."""
+    def walk(obj, prefix: Tuple[str, ...]):
+        if isinstance(obj, dict):
+            name = prefix[-1] if prefix else ""
+            if "w" in obj and packable_weight(name, obj["w"]):
+                yield "/".join(prefix), obj
+                return
+            for k, v in obj.items():
+                yield from walk(v, prefix + (str(k),))
+        elif isinstance(obj, list):
+            for i, v in enumerate(obj):
+                yield from walk(v, prefix + (str(i),))
+    yield from walk(params, ())
+
+
+# ---------------------------------------------------------------------------
+# derivation from a trained model
+# ---------------------------------------------------------------------------
+
+def layer_occupied_bits(w, f=None) -> int:
+    """Mantissa bits one layer actually occupies on the capped per-channel
+    grid of ``kernels.qmatmul.channel_bits``: the widest channel's
+    ``|mantissa|`` plus the sign bit.  An int in [1, 8]."""
+    import jax.numpy as jnp
+    from ..kernels.qmatmul.ops import channel_bits
+    w32 = jnp.asarray(w, jnp.float32)
+    fi = channel_bits(w32, None if f is None else jnp.asarray(f))
+    amax = jnp.max(jnp.abs(w32), axis=-2)
+    m = int(jnp.max(jnp.floor(amax * jnp.exp2(fi) + 0.5)))
+    return max(int(m).bit_length() + 1, 1)
+
+
+def plan_from_params(params: Any, *, low_bits: int = 4,
+                     threshold: Optional[int] = None) -> PrecisionPlan:
+    """Derive a :class:`PrecisionPlan` from a trained params tree.
+
+    Per packable layer: the occupied bits under the trained (HGQ ``f``)
+    grid decide the width class — at or below ``threshold`` (default
+    ``low_bits``) the layer gets ``low_bits`` wire AND pack width,
+    everything else stays int8.  ``scale_exp`` records the layer's max
+    per-channel grid exponent for reporting.  Unlisted leaves (biases,
+    norms, activation ``f``) keep the 8-bit default."""
+    import jax.numpy as jnp
+    from ..kernels.qmatmul.ops import channel_bits
+    _check(MIN_BITS <= low_bits <= MAX_BITS,
+           f"low_bits must be in [{MIN_BITS}, {MAX_BITS}], got {low_bits!r}")
+    thr = low_bits if threshold is None else threshold
+    layers: Dict[str, LayerPlan] = {}
+    for key, p in iter_packable(params):
+        w = jnp.asarray(p["w"], jnp.float32)
+        f = p.get("f")
+        b = layer_occupied_bits(w, f)
+        fi = channel_bits(w, None if f is None else jnp.asarray(f))
+        exp = float(jnp.max(fi))
+        bits = low_bits if b <= thr else 8
+        layers[key] = LayerPlan(wire_bits=bits, pack_bits=bits,
+                                scale_exp=exp)
+    return PrecisionPlan(layers=layers)
+
+
+def mixed_low_plan(params: Any, low_bits: int = 4) -> PrecisionPlan:
+    """Every packable matmul layer at ``low_bits``, everything else at the
+    8-bit default — the maximal mixed plan a params tree supports (used
+    by the mixed-precision bench section and the golden example plan)."""
+    layers = {key: LayerPlan(wire_bits=low_bits, pack_bits=low_bits)
+              for key, _ in iter_packable(params)}
+    return PrecisionPlan(layers=layers)
+
+
+def sweep_plans(front, payload_plan=lambda p: p
+                ) -> List[Tuple[float, float, int, Optional[PrecisionPlan]]]:
+    """Flatten a ``core.pareto.ParetoFront`` into
+    ``(metric, ebops, step, plan)`` rows, extracting each point's plan
+    payload (``payload_plan`` maps a payload to its plan, identity by
+    default; non-plan payloads yield ``None``)."""
+    rows = []
+    for p in front.points:
+        plan = payload_plan(p.payload)
+        rows.append((p.metric, p.ebops, p.step,
+                     plan if isinstance(plan, PrecisionPlan) else None))
+    return rows

@@ -58,6 +58,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from ..core.plan import NIBBLE_BITS
 from .scope import Scoped
 
 WIRE_KINDS = ("int8", "bf16")
@@ -130,6 +131,26 @@ def _stacked_flags(tree: Any, stacked: Any) -> Tuple[bool, ...]:
     return tuple(bool(m) for m in jax.tree.leaves(marks))
 
 
+def _width_flags(tree: Any, widths: Any) -> Tuple[int, ...]:
+    """Per-leaf wire widths (static python ints) in ``jax.tree.flatten``
+    order.  ``widths`` is an optional matching tree of ints — what
+    ``core.plan.PrecisionPlan.wire_bits_tree`` produces; ``None`` means
+    uniform int8, the exact legacy trace."""
+    if widths is None:
+        return tuple(8 for _ in jax.tree.leaves(tree))
+    vals = tuple(int(w) for w in jax.tree.leaves(widths))
+    for w in vals:
+        if not 2 <= w <= 8:
+            raise ValueError(f"wire width must be in [2, 8], got {w!r}")
+    return vals
+
+
+def _nibble_wire(kind: str, bits: int) -> bool:
+    """True when this leaf's payload rides nibble-packed int4 bytes.
+    Static (python bool), so bits == 8 traces the identical legacy graph."""
+    return kind == "int8" and bits <= NIBBLE_BITS
+
+
 def _layer_rows(e: jax.Array, stacked: bool) -> jax.Array:
     """Flatten a leaf to [L, P] rows — one quantization grid per leading
     (stacked-layer) axis entry for stacked rank >= 3 leaves, one per
@@ -140,15 +161,18 @@ def _layer_rows(e: jax.Array, stacked: bool) -> jax.Array:
 
 
 def _phase1_quantize(e: jax.Array, amax_rows: jax.Array, kind: str,
-                     stacked: bool
+                     stacked: bool, bits: int = 8
                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Quantize one leaf for the wire.
 
     Returns ``(payload_rows, scale_rows, residual)``: the wire payload as
-    [L, P] (int8 mantissas, or bf16 values with a dummy unit scale), the
-    per-row grid step, and the local quantization error ``e - dequant``.
-    ``amax_rows`` is the *global* per-row amax (``pmax`` over shards), so
-    every shard lands on the same grid and int32 chunk sums are exact.
+    [L, P] (``bits``-wide mantissas in int8 storage, or bf16 values with a
+    dummy unit scale), the per-row grid step, and the local quantization
+    error ``e - dequant``.  ``amax_rows`` is the *global* per-row amax
+    (``pmax`` over shards), so every shard lands on the same grid and
+    int32 chunk sums are exact.  ``bits`` comes from the leaf's
+    PrecisionPlan entry (8 = legacy int8 grid; <= 4 rides nibble-packed
+    bytes on the wire) and is ignored for bf16.
     """
     rows = _layer_rows(e, stacked)
     if kind == "bf16":
@@ -158,10 +182,11 @@ def _phase1_quantize(e: jax.Array, amax_rows: jax.Array, kind: str,
     else:
         from ..kernels.qmatmul.ops import grid_exponent
         from ..core.quantizer import _exp2i
-        f = grid_exponent(amax_rows)
+        f = grid_exponent(amax_rows, bits)
         scale = _exp2i(-f)
+        qmax = 2 ** (bits - 1) - 1
         payload = jnp.clip(jnp.round(rows / scale[:, None]),
-                           -127, 127).astype(jnp.int8)
+                           -qmax, qmax).astype(jnp.int8)
         deq = payload.astype(jnp.float32) * scale[:, None]
     residual = (jnp.asarray(e, jnp.float32)
                 - deq.astype(jnp.float32).reshape(e.shape))
@@ -188,7 +213,14 @@ def _phase2_requantize(chunk_sum: jax.Array, n: int, kind: str
 
 def _phase2_shift(n: int) -> int:
     """The decode side multiplies by exactly this power of two — keep the
-    encode/decode shift one definition."""
+    encode/decode shift one definition.
+
+    Width-independent by construction: with ``k = ceil(log2 n)`` the
+    requantized sum satisfies ``|round(sum / 2^k)| <= round(n * qmax /
+    2^k) <= qmax`` for ANY phase-1 grid width (``2^k >= n``), so mixed
+    int4/int8 leaves share this one shift and phase-2 payloads always fit
+    back into their phase-1 width (tests/test_collectives.py pins this
+    for w=4)."""
     return max((n - 1).bit_length(), 0)
 
 
@@ -197,11 +229,15 @@ def _phase2_shift(n: int) -> int:
 # ---------------------------------------------------------------------------
 
 def _wire_leaf(e: jax.Array, axes: Tuple[str, ...], n: int, kind: str,
-               stacked: bool) -> Tuple[jax.Array, jax.Array]:
+               stacked: bool, bits: int = 8
+               ) -> Tuple[jax.Array, jax.Array]:
     """Compressed mean-reduce of one per-shard leaf inside shard_map.
 
     ``e`` is this shard's ``grad + residual`` (leading shard axis of size 1
     already squeezed).  Returns ``(delivered_mean, new_residual)``.
+    ``bits`` is the leaf's plan wire width; <= 4 nibble-packs the payload
+    around each collective (chunk length, scales, and residual layout are
+    untouched — only the bytes on the wire halve).
     """
     dtype = e.dtype
     rows = _layer_rows(e, stacked)
@@ -210,7 +246,8 @@ def _wire_leaf(e: jax.Array, axes: Tuple[str, ...], n: int, kind: str,
     if kind != "bf16":     # bf16 payloads carry their own exponents
         amax = jax.lax.pmax(jnp.max(jnp.abs(rows), axis=1), axes)
         _record("pmax.scale", _ring_allreduce_bytes(L * 4, n))
-    payload, scale, residual = _phase1_quantize(e, amax, kind, stacked)
+    payload, scale, residual = _phase1_quantize(e, amax, kind, stacked,
+                                                bits)
 
     flat = payload.reshape(-1)
     T = flat.shape[0]
@@ -220,17 +257,39 @@ def _wire_leaf(e: jax.Array, axes: Tuple[str, ...], n: int, kind: str,
     s_flat = jnp.pad(jnp.broadcast_to(scale[:, None], (L, Pn)).reshape(-1),
                      (0, n * C - T), constant_values=1.0)
 
+    nib = _nibble_wire(kind, bits)
+    wtag = "int4" if nib else kind
+
     # phase 1: reduce-scatter as all_to_all of the compressed chunks
-    _record(f"all_to_all.{kind}",
-            (n - 1) / n * (n * C) * flat.dtype.itemsize)
-    ex = jax.lax.all_to_all(flat.reshape(n, C), axes, 0, 0, tiled=False)
+    # (nibble wires pack two mantissas per byte around the collective;
+    # each chunk packs independently so nibbles never straddle chunks)
+    if nib:
+        from ..kernels.qmatmul.ops import pack_nibbles, unpack_nibbles
+        pk = pack_nibbles(flat.reshape(n, C), axis=-1)
+        _record(f"all_to_all.{wtag}",
+                (n - 1) / n * (n * pk.shape[-1]) * pk.dtype.itemsize)
+        ex = unpack_nibbles(
+            jax.lax.all_to_all(pk, axes, 0, 0, tiled=False), C, axis=-1)
+    else:
+        _record(f"all_to_all.{wtag}",
+                (n - 1) / n * (n * C) * flat.dtype.itemsize)
+        ex = jax.lax.all_to_all(flat.reshape(n, C), axes, 0, 0, tiled=False)
     chunk_sum = jnp.sum(ex.astype(jnp.float32 if kind == "bf16"
                                   else jnp.int32), axis=0)
 
-    # phase 2: requantize the sum, gather, decode once
+    # phase 2: requantize the sum, gather, decode once (the shift keeps
+    # phase-2 mantissas inside the phase-1 width — see _phase2_shift)
     q2, err2 = _phase2_requantize(chunk_sum, n, kind)
-    _record(f"all_gather.{kind}", (n - 1) * C * q2.dtype.itemsize)
-    full = jax.lax.all_gather(q2, axes, axis=0, tiled=False).reshape(-1)
+    if nib:
+        q2p = pack_nibbles(q2, axis=-1)
+        _record(f"all_gather.{wtag}",
+                (n - 1) * q2p.shape[0] * q2p.dtype.itemsize)
+        full = unpack_nibbles(
+            jax.lax.all_gather(q2p, axes, axis=0, tiled=False),
+            C, axis=-1).reshape(-1)
+    else:
+        _record(f"all_gather.{wtag}", (n - 1) * C * q2.dtype.itemsize)
+        full = jax.lax.all_gather(q2, axes, axis=0, tiled=False).reshape(-1)
     if kind == "bf16":
         delivered_flat = full.astype(jnp.float32) / n
         err2_val = err2  # value domain; carried in full so delivery /n
@@ -275,14 +334,15 @@ def _check_kind(kind: str) -> None:
 
 
 def _wire_pmean_impl(e_stacked: Any, mesh, kind: str,
-                     flags: Tuple[bool, ...]) -> Tuple[Any, Any]:
+                     flags: Tuple[bool, ...],
+                     widths: Tuple[int, ...]) -> Tuple[Any, Any]:
     axes = data_axis_names(mesh)
     n = data_axis_size(mesh)
 
     def body(tree):
         flat, treedef = jax.tree.flatten(tree)
-        pairs = [_wire_leaf(leaf[0], axes, n, kind, st)
-                 for leaf, st in zip(flat, flags)]
+        pairs = [_wire_leaf(leaf[0], axes, n, kind, st, b)
+                 for leaf, st, b in zip(flat, flags, widths)]
         delivered = jax.tree.unflatten(treedef, [d for d, _ in pairs])
         residual = jax.tree.unflatten(treedef, [r[None] for _, r in pairs])
         return delivered, residual
@@ -296,17 +356,18 @@ def _wire_pmean_impl(e_stacked: Any, mesh, kind: str,
                      check_rep=False)(e_stacked)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
 def _ef_wire_pmean_cv(e_stacked: Any, mesh, kind: str,
-                      flags: Tuple[bool, ...]) -> Tuple[Any, Any]:
-    return _wire_pmean_impl(e_stacked, mesh, kind, flags)
+                      flags: Tuple[bool, ...],
+                      widths: Tuple[int, ...]) -> Tuple[Any, Any]:
+    return _wire_pmean_impl(e_stacked, mesh, kind, flags, widths)
 
 
-def _ef_wire_fwd(e_stacked, mesh, kind, flags):
-    return _ef_wire_pmean_cv(e_stacked, mesh, kind, flags), None
+def _ef_wire_fwd(e_stacked, mesh, kind, flags, widths):
+    return _ef_wire_pmean_cv(e_stacked, mesh, kind, flags, widths), None
 
 
-def _ef_wire_bwd(mesh, kind, flags, _res, cts):
+def _ef_wire_bwd(mesh, kind, flags, widths, _res, cts):
     ct_delivered, _ct_residual = cts
     n = data_axis_size(mesh)
     ct_e = jax.tree.map(
@@ -319,7 +380,8 @@ _ef_wire_pmean_cv.defvjp(_ef_wire_fwd, _ef_wire_bwd)
 
 
 def ef_wire_pmean(e_stacked: Any, mesh, kind: str = "int8",
-                  stacked: Any = None) -> Tuple[Any, Any]:
+                  stacked: Any = None, widths: Any = None
+                  ) -> Tuple[Any, Any]:
     """Compressed mean all-reduce with error feedback, inside the wire.
 
     ``e_stacked`` is a pytree whose leaves carry a leading ``[n_data]``
@@ -330,7 +392,10 @@ def ef_wire_pmean(e_stacked: Any, mesh, kind: str = "int8",
 
     ``stacked`` optionally marks stacked-layer leaves (a matching bool
     tree) for per-layer quantization grids; default derives it from the
-    tree paths, like ``dist.ef_compress``.
+    tree paths, like ``dist.ef_compress``.  ``widths`` optionally carries
+    per-leaf wire widths (a matching int tree, e.g. from
+    ``core.plan.PrecisionPlan.wire_bits_tree``); ``None`` is uniform int8
+    — the exact legacy trace.  Widths <= 4 ride nibble-packed int4 bytes.
 
     The custom VJP passes the ``delivered`` cotangent through as the
     transpose of an uncompressed shard mean, so the backward of a loss
@@ -339,7 +404,8 @@ def ef_wire_pmean(e_stacked: Any, mesh, kind: str = "int8",
     """
     _check_kind(kind)
     return _ef_wire_pmean_cv(e_stacked, mesh, kind,
-                             _stacked_flags(e_stacked, stacked))
+                             _stacked_flags(e_stacked, stacked),
+                             _width_flags(e_stacked, widths))
 
 
 # ---------------------------------------------------------------------------
@@ -431,14 +497,16 @@ def _wire2d_rows(shape, stacked: bool) -> Tuple[int, int]:
 
 def _wire2d_leaf(g: jax.Array, r: jax.Array, S: Tuple[int, ...],
                  k: Optional[int], daxes: Tuple[str, ...], maxes:
-                 Tuple[str, ...], D: int, M: int, kind: str, stacked: bool
-                 ) -> Tuple[jax.Array, jax.Array]:
+                 Tuple[str, ...], D: int, M: int, kind: str, stacked: bool,
+                 bits: int = 8) -> Tuple[jax.Array, jax.Array]:
     """Sliced compressed mean-reduce of one leaf inside shard_map.
 
     ``g`` is this device's gradient block (data axis squeezed; the model
     block when ``k`` names the model-sharded tensor axis, else the full
     leaf), ``r`` its ``[C]`` flat residual slice.  Returns
-    ``(delivered_full, new_residual_slice)``.
+    ``(delivered_full, new_residual_slice)``.  ``bits`` is the leaf's
+    plan wire width; <= 4 nibble-packs every payload (all three
+    collectives) while slice/residual layouts stay unchanged.
     """
     dtype = g.dtype
     axes2d = tuple(daxes) + tuple(maxes)
@@ -477,19 +545,34 @@ def _wire2d_leaf(g: jax.Array, r: jax.Array, S: Tuple[int, ...],
         _record("pmax.scale", _ring_allreduce_bytes(L * 4, D * M))
         from ..core.quantizer import _exp2i
         from ..kernels.qmatmul.ops import grid_exponent
-        scale = _exp2i(-grid_exponent(amax))            # [L]
+        scale = _exp2i(-grid_exponent(amax, bits))      # [L]
         s_sl = scale[row_of]
-        payload = jnp.clip(jnp.round(e / s_sl), -127, 127).astype(jnp.int8)
+        qmax = 2 ** (bits - 1) - 1
+        payload = jnp.clip(jnp.round(e / s_sl), -qmax,
+                           qmax).astype(jnp.int8)
         deq = payload.astype(jnp.float32) * s_sl
     res1 = e - deq
+
+    nib = _nibble_wire(kind, bits)
+    wtag = "int4" if nib else kind
+    if nib:
+        from ..kernels.qmatmul.ops import pack_nibbles, unpack_nibbles
 
     # phase 1: reduce-scatter the slice over data as all_to_all
     acc_t = jnp.float32 if kind == "bf16" else jnp.int32
     if D > 1:
-        _record(f"all_to_all.{kind}",
-                (D - 1) / D * Cp * payload.dtype.itemsize)
-        ex = jax.lax.all_to_all(payload.reshape(D, C), daxes, 0, 0,
-                                tiled=False)
+        if nib:
+            pk = pack_nibbles(payload.reshape(D, C), axis=-1)
+            _record(f"all_to_all.{wtag}",
+                    (D - 1) / D * (D * pk.shape[-1]) * pk.dtype.itemsize)
+            ex = unpack_nibbles(
+                jax.lax.all_to_all(pk, daxes, 0, 0, tiled=False),
+                C, axis=-1)
+        else:
+            _record(f"all_to_all.{wtag}",
+                    (D - 1) / D * Cp * payload.dtype.itemsize)
+            ex = jax.lax.all_to_all(payload.reshape(D, C), daxes, 0, 0,
+                                    tiled=False)
         chunk_sum = jnp.sum(ex.astype(acc_t), axis=0)
     else:
         chunk_sum = payload.astype(acc_t)
@@ -497,18 +580,34 @@ def _wire2d_leaf(g: jax.Array, r: jax.Array, S: Tuple[int, ...],
     # phase 2: requantize the owned chunk, gather the slice over data
     q2, err2 = _phase2_requantize(chunk_sum, D, kind)
     if D > 1:
-        _record(f"all_gather.{kind}", (D - 1) * C * q2.dtype.itemsize)
-        sl_q = jax.lax.all_gather(q2, daxes, axis=0, tiled=False
-                                  ).reshape(Cp)
+        if nib:
+            q2p = pack_nibbles(q2, axis=-1)
+            _record(f"all_gather.{wtag}",
+                    (D - 1) * q2p.shape[0] * q2p.dtype.itemsize)
+            sl_q = unpack_nibbles(
+                jax.lax.all_gather(q2p, daxes, axis=0, tiled=False),
+                C, axis=-1).reshape(Cp)
+        else:
+            _record(f"all_gather.{wtag}", (D - 1) * C * q2.dtype.itemsize)
+            sl_q = jax.lax.all_gather(q2, daxes, axis=0, tiled=False
+                                      ).reshape(Cp)
     else:
         sl_q = q2.reshape(Cp)
 
-    # phase 3: rematerialize over model — the int8 sums cross the model
-    # axis, not fp32; decode once after the gather
+    # phase 3: rematerialize over model — the quantized sums cross the
+    # model axis, not fp32; decode once after the gather
     if maxes and M > 1:
-        _record(f"all_gather.{kind}.model",
-                (M - 1) * Cp * sl_q.dtype.itemsize)
-        gath = jax.lax.all_gather(sl_q, maxes, axis=0, tiled=False)
+        if nib:
+            slp = pack_nibbles(sl_q, axis=-1)
+            _record(f"all_gather.{wtag}.model",
+                    (M - 1) * slp.shape[0] * slp.dtype.itemsize)
+            gath = unpack_nibbles(
+                jax.lax.all_gather(slp, maxes, axis=0, tiled=False),
+                Cp, axis=-1)
+        else:
+            _record(f"all_gather.{wtag}.model",
+                    (M - 1) * Cp * sl_q.dtype.itemsize)
+            gath = jax.lax.all_gather(sl_q, maxes, axis=0, tiled=False)
     else:
         gath = sl_q[None]
 
@@ -574,7 +673,8 @@ def _wire2d_specs(grads_stacked: Any, mesh):
 
 
 def _wire2d_impl(grads_stacked: Any, residual: Any, mesh, kind: str,
-                 flags: Tuple[bool, ...]) -> Tuple[Any, Any]:
+                 flags: Tuple[bool, ...],
+                 widths: Tuple[int, ...]) -> Tuple[Any, Any]:
     from .sharding import model_axis_for
     daxes = data_axis_names(mesh)
     maxes = _wire2d_model_axes(mesh)
@@ -588,8 +688,10 @@ def _wire2d_impl(grads_stacked: Any, residual: Any, mesh, kind: str,
         gflat, treedef = jax.tree.flatten(gtree)
         rflat, _ = jax.tree.flatten(rtree)
         pairs = [
-            _wire2d_leaf(g[0], r[0, 0], S, kk, daxes, maxes, D, M, kind, st)
-            for g, r, S, kk, st in zip(gflat, rflat, shapes, ks, flags)]
+            _wire2d_leaf(g[0], r[0, 0], S, kk, daxes, maxes, D, M, kind,
+                         st, b)
+            for g, r, S, kk, st, b in zip(gflat, rflat, shapes, ks, flags,
+                                          widths)]
         delivered = jax.tree.unflatten(treedef, [d for d, _ in pairs])
         new_res = jax.tree.unflatten(treedef,
                                      [nr[None, None] for _, nr in pairs])
@@ -601,17 +703,19 @@ def _wire2d_impl(grads_stacked: Any, residual: Any, mesh, kind: str,
                          grads_stacked, residual)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
 def _wire2d_cv(grads_stacked: Any, residual: Any, mesh, kind: str,
-               flags: Tuple[bool, ...]) -> Tuple[Any, Any]:
-    return _wire2d_impl(grads_stacked, residual, mesh, kind, flags)
+               flags: Tuple[bool, ...],
+               widths: Tuple[int, ...]) -> Tuple[Any, Any]:
+    return _wire2d_impl(grads_stacked, residual, mesh, kind, flags, widths)
 
 
-def _wire2d_fwd(grads_stacked, residual, mesh, kind, flags):
-    return _wire2d_cv(grads_stacked, residual, mesh, kind, flags), None
+def _wire2d_fwd(grads_stacked, residual, mesh, kind, flags, widths):
+    return _wire2d_cv(grads_stacked, residual, mesh, kind, flags,
+                      widths), None
 
 
-def _wire2d_bwd(mesh, kind, flags, _res, cts):
+def _wire2d_bwd(mesh, kind, flags, widths, _res, cts):
     ct_delivered, ct_residual = cts
     n = data_axis_size(mesh)
     ct_g = jax.tree.map(
@@ -625,8 +729,8 @@ _wire2d_cv.defvjp(_wire2d_fwd, _wire2d_bwd)
 
 
 def ef_wire_pmean_2d(grads_stacked: Any, residual: Any, mesh,
-                     kind: str = "int8", stacked: Any = None
-                     ) -> Tuple[Any, Any]:
+                     kind: str = "int8", stacked: Any = None,
+                     widths: Any = None) -> Tuple[Any, Any]:
     """2D-sliced compressed mean all-reduce with error feedback.
 
     ``grads_stacked`` is a pytree whose leaves carry a leading
@@ -637,6 +741,8 @@ def ef_wire_pmean_2d(grads_stacked: Any, residual: Any, mesh,
     the int8/bf16-wire mean gradient, replicated, plus the sliced residual
     for the next step.  ``stacked`` optionally marks stacked-layer leaves
     (default: derived from the tree paths, like ``dist.ef_compress``).
+    ``widths`` optionally carries per-leaf wire widths (matching int
+    tree); ``None`` is uniform int8 — the exact legacy trace.
 
     The custom VJP passes the ``delivered`` cotangent through as the
     transpose of an uncompressed shard mean (``ct / n_data`` per shard);
@@ -644,22 +750,26 @@ def ef_wire_pmean_2d(grads_stacked: Any, residual: Any, mesh,
     """
     _check_kind(kind)
     return _wire2d_cv(grads_stacked, residual, mesh, kind,
-                      _stacked_flags(grads_stacked, stacked))
+                      _stacked_flags(grads_stacked, stacked),
+                      _width_flags(grads_stacked, widths))
 
 
 def simulate_wire_pmean_2d(grads_stacked: Any, residual: Any, n_model: int,
-                           kind: str = "int8", stacked: Any = None
-                           ) -> Tuple[Any, Any]:
+                           kind: str = "int8", stacked: Any = None,
+                           widths: Any = None) -> Tuple[Any, Any]:
     """Collective-free reference of :func:`ef_wire_pmean_2d` on a stacked
     ``[n_data, ...]`` gradient tree plus its ``[n_data, n_model, C]``
     residual: same slicing, same grids, same chunking, same two-phase
     errors — usable on one device.  The 8-device CI job asserts the
-    shard_map path matches this bit-for-bit on 2x4 and 4x2 meshes."""
+    shard_map path matches this bit-for-bit on 2x4 and 4x2 meshes (mixed
+    widths included: nibble pack/unpack is the identity on in-range
+    mantissas, so the simulator never needs to model the packing)."""
     _check_kind(kind)
     from .sharding import model_axis_for
     flags = _stacked_flags(grads_stacked, stacked)
+    wflags = _width_flags(grads_stacked, widths)
 
-    def leaf(es, res, stk):
+    def leaf(es, res, stk, bits):
         D = es.shape[0]
         M = n_model
         S = tuple(es.shape[1:])
@@ -701,7 +811,8 @@ def simulate_wire_pmean_2d(grads_stacked: Any, residual: Any, n_model: int,
             amax = jnp.max(jnp.stack(local), axis=0)
             from ..core.quantizer import _exp2i
             from ..kernels.qmatmul.ops import grid_exponent
-            scale = _exp2i(-grid_exponent(amax))
+            scale = _exp2i(-grid_exponent(amax, bits))
+            qmax = 2 ** (bits - 1) - 1
 
         delivered_slices = [None] * M
         new_res = [[None] * M for _ in range(D)]
@@ -713,8 +824,9 @@ def simulate_wire_pmean_2d(grads_stacked: Any, residual: Any, n_model: int,
                 deqs = [p.astype(jnp.float32) for p in payloads]
             else:
                 s_sl = scale[rows[m]]
-                payloads = [jnp.clip(jnp.round(es_sl[d][m] / s_sl), -127,
-                                     127).astype(jnp.int8) for d in range(D)]
+                payloads = [jnp.clip(jnp.round(es_sl[d][m] / s_sl), -qmax,
+                                     qmax).astype(jnp.int8)
+                            for d in range(D)]
                 deqs = [p.astype(jnp.float32) * s_sl for p in payloads]
             res1 = [es_sl[d][m] - deqs[d] for d in range(D)]
             acc_t = jnp.float32 if kind == "bf16" else jnp.int32
@@ -751,25 +863,33 @@ def simulate_wire_pmean_2d(grads_stacked: Any, residual: Any, n_model: int,
 
     gflat, treedef = jax.tree.flatten(grads_stacked)
     rflat, _ = jax.tree.flatten(residual)
-    pairs = [leaf(g, r, st) for g, r, st in zip(gflat, rflat, flags)]
+    pairs = [leaf(g, r, st, b)
+             for g, r, st, b in zip(gflat, rflat, flags, wflags)]
     return (jax.tree.unflatten(treedef, [d for d, _ in pairs]),
             jax.tree.unflatten(treedef, [r for _, r in pairs]))
 
 
 def wire2d_leaf_bytes(shape, n_data: int, n_model: int, kind: str,
-                      stacked: bool = False) -> float:
+                      stacked: bool = False, bits: int = 8) -> float:
     """Analytic per-device wire bytes of one 2D-sliced mean-reduce of a
-    leaf (matches :class:`record_wire_bytes` on the traced ops): data
-    all_to_all + all_gather on the 1/M slice, the int8 model-axis
-    all_gather, and the per-row scale pmax over all D*M devices.
-    ``stacked`` marks a stacked-layer leaf (per-layer scale rows)."""
+    leaf (matches :class:`record_wire_bytes` on the traced ops, at the
+    leaf's ACTUAL wire width): data all_to_all + all_gather on the 1/M
+    slice, the quantized model-axis all_gather, and the per-row scale
+    pmax over all D*M devices.  ``stacked`` marks a stacked-layer leaf
+    (per-layer scale rows); ``bits`` <= 4 counts nibble-packed chunk
+    bytes.  tests/test_wire2d.py pins this against measured trace bytes
+    per leaf for int8, bf16, and mixed widths."""
     _check_kind(kind)
     item = 1 if kind == "int8" else 2
     Cp = wire2d_slice_len(shape, n_data, n_model)
     C = Cp // n_data
-    a2a = (n_data - 1) / n_data * Cp * item if n_data > 1 else 0.0
-    ag = (n_data - 1) * C * item if n_data > 1 else 0.0
-    ag_model = (n_model - 1) * Cp * item if n_model > 1 else 0.0
+    if _nibble_wire(kind, bits):
+        chunk_b, slice_b = float(-(-C // 2)), float(-(-Cp // 2))
+    else:
+        chunk_b, slice_b = C * item, Cp * item
+    a2a = (n_data - 1) * chunk_b if n_data > 1 else 0.0
+    ag = (n_data - 1) * chunk_b if n_data > 1 else 0.0
+    ag_model = (n_model - 1) * slice_b if n_model > 1 else 0.0
     L, _ = _wire2d_rows(shape, stacked)
     scales = (_ring_allreduce_bytes(L * 4, n_data * n_model)
               if kind == "int8" else 0.0)
@@ -789,16 +909,21 @@ def tp_replication_bytes(shape, n_model: int) -> float:
 
 
 def simulate_wire_pmean(e_stacked: Any, kind: str = "int8",
-                        stacked: Any = None) -> Tuple[Any, Any]:
+                        stacked: Any = None,
+                        widths: Any = None) -> Tuple[Any, Any]:
     """Collective-free reference of :func:`ef_wire_pmean` on a stacked
     ``[n, ...]`` tree: same grids, same chunking, same two-phase errors —
     usable on one device (tests, notebooks).  The 8-device CI job asserts
-    the shard_map path matches this bit-for-bit.  ``stacked`` optionally
-    marks stacked-layer leaves (default: derived from the tree paths)."""
+    the shard_map path matches this bit-for-bit (mixed widths included —
+    nibble pack/unpack is the identity on in-range mantissas, so the
+    simulator never models the packing).  ``stacked`` optionally marks
+    stacked-layer leaves (default: derived from the tree paths);
+    ``widths`` optionally carries per-leaf wire widths."""
     _check_kind(kind)
     flags = _stacked_flags(e_stacked, stacked)
+    wflags = _width_flags(e_stacked, widths)
 
-    def leaf(es, stk):
+    def leaf(es, stk, bits):
         n = es.shape[0]
         dtype = es.dtype
         shape = es.shape[1:]
@@ -808,7 +933,7 @@ def simulate_wire_pmean(e_stacked: Any, kind: str = "int8",
                                .reshape(n, L, -1)), axis=(0, 2))
         payloads, residuals, scale = [], [], None
         for i in range(n):
-            p, scale, r = _phase1_quantize(es[i], amax, kind, stk)
+            p, scale, r = _phase1_quantize(es[i], amax, kind, stk, bits)
             payloads.append(p.reshape(-1))
             residuals.append(r)
         T = payloads[0].shape[0]
@@ -838,22 +963,24 @@ def simulate_wire_pmean(e_stacked: Any, kind: str = "int8",
         return delivered, new_res
 
     flat, treedef = jax.tree.flatten(e_stacked)
-    pairs = [leaf(x, st) for x, st in zip(flat, flags)]
+    pairs = [leaf(x, st, b) for x, st, b in zip(flat, flags, wflags)]
     return (jax.tree.unflatten(treedef, [d for d, _ in pairs]),
             jax.tree.unflatten(treedef, [r for _, r in pairs]))
 
 
 def wire_bytes_model(n_elements: int, n: int, kind: str,
-                     n_scale_rows: int = 1) -> float:
+                     n_scale_rows: int = 1, bits: int = 8) -> float:
     """Analytic per-device bytes-on-wire of one compressed mean-reduce
     (matches what :class:`record_wire_bytes` measures on the traced ops):
-    all_to_all + all_gather of 1-byte (int8) / 2-byte (bf16) payloads plus
-    the per-row fp32 scale pmax."""
+    all_to_all + all_gather of 1-byte (int8) / 2-byte (bf16) / half-byte
+    (nibble-packed, ``bits <= 4``) payloads plus the per-row fp32 scale
+    pmax."""
     _check_kind(kind)
     item = 1 if kind == "int8" else 2
     C = -(-n_elements // n)
-    a2a = (n - 1) / n * (n * C) * item
-    ag = (n - 1) * C * item
+    chunk_b = float(-(-C // 2)) if _nibble_wire(kind, bits) else C * item
+    a2a = (n - 1) / n * (n * chunk_b)
+    ag = (n - 1) * chunk_b
     # bf16 payloads carry their own exponents — no scale pmax on that path
     scales = (_ring_allreduce_bytes(n_scale_rows * 4, n)
               if kind == "int8" else 0.0)

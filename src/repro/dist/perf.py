@@ -138,44 +138,81 @@ def _packable(name: str, w) -> bool:
     return True
 
 
-def _pack_one(p: Dict[str, Any]) -> Dict[str, Any]:
-    """One matmul-weight dict {'w', 'f'?} -> {'w_int8', 'scale', 'f'?}.
+def _pack_one(p: Dict[str, Any], bits: int = 8) -> Dict[str, Any]:
+    """One matmul-weight dict {'w', 'f'?} -> {'w_int8', 'scale', 'f'?}
+    (or {'w_nib', ...} for sub-5-bit plan layers).
 
     The per-output-channel power-of-two grid (2^-f at the trained bits,
-    capped so the channel amax fits +-127; with no 'f' the cap alone) and
-    the int8 mantissas come from the single shared leaf packer
-    ``kernels.qmatmul.pack_linear`` — the same representation the fused
-    dequant-matmul kernel consumes.  Scale keeps a broadcastable
-    ``[..., 1, N]`` shape for ``unpack_weight``."""
-    from ..kernels.qmatmul.ops import pack_linear
-    m, scale = pack_linear(p["w"], p.get("f"))
-    out = {"w_int8": m, "scale": scale[..., None, :].astype(jnp.float32)}
+    capped so the channel amax fits the ``bits``-wide mantissa; with no
+    'f' the cap alone) and the mantissas come from the single shared leaf
+    packer ``kernels.qmatmul.pack_linear`` — the same representation the
+    fused dequant-matmul kernel consumes.  Scale keeps a broadcastable
+    ``[..., 1, N]`` shape for ``unpack_weight``.  ``bits <= 4`` with an
+    even K axis nibble-packs two mantissas per stored byte along K
+    (``w_nib [..., K/2, N]``; K recovers as ``2 * w_nib.shape[-2]``, no
+    side metadata); odd-K layers keep int8 storage on the narrow grid."""
+    from ..core.plan import NIBBLE_BITS
+    from ..kernels.qmatmul.ops import pack_linear, pack_nibbles
+    m, scale = pack_linear(p["w"], p.get("f"), bits)
+    out: Dict[str, Any] = {
+        "scale": scale[..., None, :].astype(jnp.float32)}
+    if bits <= NIBBLE_BITS and m.shape[-2] % 2 == 0:
+        out["w_nib"] = pack_nibbles(m, axis=-2)
+    else:
+        out["w_int8"] = m
     if p.get("f") is not None:
         out["f"] = p["f"]
     return out
 
 
-def pack_params_for_serving(params: Any) -> Any:
-    """Rewrite matmul weights to int8 + per-channel scale (see module doc).
+def pack_params_for_serving(params: Any, plan=None) -> Any:
+    """Rewrite matmul weights to quantized mantissas + per-channel scale
+    (see module doc), at each layer's ``plan`` pack width (uniform int8
+    when ``plan`` is ``None``).
 
     Structure-preserving everywhere else (including list-of-layer nodes,
     e.g. Griffin remainder blocks); safe to call on abstract
-    (``ShapeDtypeStruct``) trees under ``jax.eval_shape``.
+    (``ShapeDtypeStruct``) trees under ``jax.eval_shape``.  Layer keys
+    are the ``/``-joined tree paths ``core.plan.iter_packable`` yields,
+    so a plan derived from this params tree addresses exactly these
+    weights.
     """
-    def walk(obj, name=""):
+    def walk(obj, name="", prefix=()):
         if isinstance(obj, dict):
             if "w" in obj and _packable(name, obj["w"]):
-                return _pack_one(obj)
-            return {k: walk(v, k) for k, v in obj.items()}
+                bits = 8 if plan is None else \
+                    plan.entry_for("/".join(prefix)).pack_bits
+                return _pack_one(obj, bits)
+            return {k: walk(v, k, prefix + (str(k),))
+                    for k, v in obj.items()}
         if isinstance(obj, list):
-            return [walk(v, name) for v in obj]
+            return [walk(v, name, prefix + (str(i),))
+                    for i, v in enumerate(obj)]
         return obj
     return walk(params)
 
 
+def packed_mantissas(p: Dict[str, Any]) -> jax.Array:
+    """Full-width int8 mantissas ``[..., K, N]`` of a packed weight dict,
+    whichever storage it uses (``w_int8`` as-is; ``w_nib`` sign-extend
+    unpacked along K).  The one accessor packed-kernel call sites route
+    through."""
+    if "w_nib" in p:
+        from ..kernels.qmatmul.ops import unpack_nibbles
+        nib = p["w_nib"]
+        return unpack_nibbles(nib, 2 * nib.shape[-2], axis=-2)
+    return p["w_int8"]
+
+
+def is_packed(p: Any) -> bool:
+    """True for a serving-packed weight dict (either storage format)."""
+    return isinstance(p, dict) and ("w_int8" in p or "w_nib" in p)
+
+
 def unpack_weight(p: Dict[str, Any]) -> jax.Array:
     """Dequantize a packed weight dict; fuses into the consuming matmul."""
-    w = p["w_int8"].astype(jnp.float32) * p["scale"].astype(jnp.float32)
+    w = (packed_mantissas(p).astype(jnp.float32)
+         * p["scale"].astype(jnp.float32))
     dtype = _COMPUTE.get()
     if dtype is not None:
         w = w.astype(dtype)

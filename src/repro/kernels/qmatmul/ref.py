@@ -15,11 +15,15 @@ def qmatmul_ref(x: jnp.ndarray, w_int: jnp.ndarray,
     return jnp.dot(x.astype(jnp.float32), w).astype(x.dtype)
 
 
-def pack_ref(w: jnp.ndarray, f: jnp.ndarray):
-    """Quantize fp weights [K, N] to int8 + per-channel scale from the HGQ
-    fractional bits f [N] (scale = 2^-f)."""
+def pack_ref(w: jnp.ndarray, f: jnp.ndarray, bits: int = 8):
+    """Quantize fp weights [K, N] to ``bits``-wide mantissas (int8 storage)
+    + per-channel scale from the HGQ fractional bits f [N] (scale = 2^-f).
+    Sub-8-bit grids clip symmetrically to +-(2^(b-1)-1) so nibble packing
+    and error feedback never see the asymmetric minimum."""
     fi = jnp.floor(f.astype(jnp.float32) + 0.5)
     scale = _exp2i(-fi)
+    lo, hi = (-128, 127) if bits == 8 else \
+        (-(2 ** (bits - 1) - 1), 2 ** (bits - 1) - 1)
     m = jnp.clip(jnp.floor(w.astype(jnp.float32) / scale[None, :] + 0.5),
-                 -128, 127).astype(jnp.int8)
+                 lo, hi).astype(jnp.int8)
     return m, scale

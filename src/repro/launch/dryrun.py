@@ -99,12 +99,14 @@ def cache_shardings(caches, mesh, cfg: ModelConfig):
 # --------------------------------------------------------------------------
 
 def cell_spec(arch: str, shape_name: str, multi_pod: bool,
-              variant: str) -> RunSpec:
+              variant: str, plan=None) -> RunSpec:
     """The declarative config of one dry-run cell — the same RunSpec
     surface the training launcher parses, so a dry-run cell and a real
-    run describe their mesh/precision identically."""
+    run describe their mesh/precision identically.  ``plan`` embeds a
+    learned :class:`core.plan.PrecisionPlan` (per-layer wire/pack
+    widths); the cell then reports them under ``plan_widths``."""
     return RunSpec(
-        arch=arch, full=True,
+        arch=arch, full=True, plan=plan,
         mesh=MeshSpec.production(multi_pod=multi_pod),
         precision=PrecisionSpec(
             # bf16 compute-cast everywhere: fp32-master FSDP gathers and
@@ -118,7 +120,7 @@ def cell_spec(arch: str, shape_name: str, multi_pod: bool,
 
 
 def build_cell(arch: str, shape_name: str, multi_pod: bool = False,
-               variant: str = "base") -> Dict[str, Any]:
+               variant: str = "base", plan=None) -> Dict[str, Any]:
     """variant='opt' enables the beyond-paper knobs (dist.perf):
     train -> bf16 compute-cast (halves FSDP gather volume);
     decode -> HGQ-packed int8 weights + int8 KV cache."""
@@ -129,7 +131,7 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool = False,
         return {"arch": arch, "shape": shape_name, "status": "skipped",
                 "reason": "full quadratic attention at 524288 tokens "
                           "(see DESIGN.md SS4 Arch-applicability)"}
-    ctx = build(cell_spec(arch, shape_name, multi_pod, variant))
+    ctx = build(cell_spec(arch, shape_name, multi_pod, variant, plan))
     cfg = ctx.cfg
     if shape.kind != "train":
         cfg = dataclasses.replace(cfg, dtype="bfloat16", remat=False)
@@ -259,6 +261,9 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool = False,
         "model_flops_total": model_flops,
         "useful_flops_ratio": (model_flops / hlo_total) if hlo_total else 0.0,
         "roofline_fraction": mfu(model_flops, terms),
+        # per-layer wire/pack widths of the cell's precision plan
+        # (None == uniform int8, the plan-free default)
+        "plan_widths": ctx.plan_summary(),
     }
     return result
 

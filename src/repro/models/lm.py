@@ -168,9 +168,10 @@ class TransformerLM:
     @staticmethod
     def _logits(p, q, newq, h: QTensor, cfg: ModelConfig, mode, aux):
         if cfg.tie_embeddings:
-            from ..dist.perf import get_packed_matmul
+            from ..dist.perf import (get_packed_matmul, is_packed,
+                                     packed_mantissas)
             tbl = p["embed"]["table"]
-            if "w_int8" in tbl and get_packed_matmul():
+            if is_packed(tbl) and get_packed_matmul():
                 # tied head with a packed table: scales are per-embedding-
                 # column (axis d), so they fold into the activation —
                 # h @ (m * s[None]).T == (h * s) @ m.T — leaving a unit
@@ -178,7 +179,7 @@ class TransformerLM:
                 from ..kernels.qmatmul.ops import qmatmul_any
                 s_d = tbl["scale"].reshape(cfg.d_model)
                 logits = qmatmul_any(h.q.astype(jnp.float32) * s_d,
-                                     tbl["w_int8"].T,
+                                     packed_mantissas(tbl).T,
                                      jnp.ones((cfg.vocab,), jnp.float32))
                 return constrain(logits, "b.m")
             from ..nn.common import get_qw

@@ -56,20 +56,21 @@ class HDense:
     def apply(p, q, x: QTensor, *, mode: str, aux: Aux, act: str = ""
               ) -> Tuple[QTensor, Dict[str, Any]]:
         from ..dist.perf import (cast_for_matmul, get_compute_dtype,
-                                 get_packed_matmul)
-        if "w_int8" in p["kernel"] and get_packed_matmul():
-            # serving hot path (serving/packed.py): the int8 mantissas stream
-            # straight into the fused dequant-matmul Pallas kernel — the
+                                 get_packed_matmul, is_packed,
+                                 packed_mantissas)
+        if is_packed(p["kernel"]) and get_packed_matmul():
+            # serving hot path (serving/packed.py): the packed mantissas
+            # stream straight into the fused dequant-matmul Pallas kernel
+            # (nibble-stored layers sign-extend to int8 first) — the
             # weight bytes moved from HBM are the packed ones
             from ..kernels.qmatmul.ops import qmatmul_any
-            ki = p["kernel"]["w_int8"]
+            ki = packed_mantissas(p["kernel"])
             y = qmatmul_any(x.q.astype(jnp.float32), ki,
                             p["kernel"]["scale"].reshape(ki.shape[-1])
                             ).astype(x.q.dtype)
         else:
             wq = get_qw(p["kernel"], mode)
-            kern = p["kernel"].get("w", p["kernel"].get("w_int8"))
-            d_in, d_out = kern.shape
+            d_in, d_out = wq.q.shape
             xq = cast_for_matmul(x.q).astype(wq.q.dtype)
             # under bf16-compute the cross-shard partial-sum all-reduce runs
             # on the bf16 output (Megatron convention) — halves the TP

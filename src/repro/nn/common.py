@@ -78,7 +78,7 @@ def get_qw(p: Dict[str, Any], mode: str) -> QTensor:
     stored int8 + per-channel scale; dequantize at use — XLA fuses this into
     the consuming matmul, exactly the structure of kernels/qmatmul.
     """
-    if "w_int8" in p:
+    if "w_int8" in p or "w_nib" in p:
         from ..dist.perf import unpack_weight
         w = unpack_weight(p)
         return QTensor(w, None if p.get("f") is None else

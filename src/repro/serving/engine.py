@@ -92,10 +92,11 @@ class Engine:
     def __init__(self, model, params, qstate, cfg: ModelConfig, *,
                  batch_slots: int = 8, max_len: int = 512,
                  eos_id: Optional[int] = None, packed: bool = False,
-                 prefill_chunk: int = 16, seed: int = 0):
+                 plan=None, prefill_chunk: int = 16, seed: int = 0):
         self.model = model
         self.cfg = cfg
         self.packed = packed
+        self.plan = plan       # PrecisionPlan: per-layer pack widths
         # snapshot the trace-time configuration in scope at construction
         # (a RunContext's activate(), or the process defaults): every
         # trace this engine owns re-binds exactly this snapshot, so
@@ -105,7 +106,7 @@ class Engine:
         self._compute_dtype = get_compute_dtype()
         if packed:
             from .packed import pack_for_serving
-            params, qstate = pack_for_serving(params, qstate)
+            params, qstate = pack_for_serving(params, qstate, plan)
         self.p = params
         self.q = qstate
         self.slots = batch_slots
@@ -277,15 +278,16 @@ def _generate_decode_fn(model, cfg: ModelConfig):
 
 def generate(model, params, qstate, cfg: ModelConfig, prompt: jax.Array,
              max_new: int, *, cache_len: Optional[int] = None,
-             packed: bool = False) -> jax.Array:
+             packed: bool = False, plan=None) -> jax.Array:
     """Single-batch greedy generation — the per-request reference the
     engine is tested against.  ``cache_len`` pins the cache width (so
     engine/reference runs share identical masked-attention shapes);
-    ``packed=True`` serves from the int8-packed tree like the engine."""
+    ``packed=True`` serves from the quantized-packed tree like the
+    engine (``plan`` selects per-layer pack widths, ``None`` = int8)."""
     B, S = prompt.shape
     if packed:
         from .packed import pack_for_serving
-        params, qstate = pack_for_serving(params, qstate)
+        params, qstate = pack_for_serving(params, qstate, plan)
     if cache_len is not None and cfg.window is None \
             and cache_len < S + max_new:
         # a windowed ring wraps; a full cache does not — writes past

@@ -1,8 +1,9 @@
-"""HGQ int8-packed serving weights: the decode-time weight format.
+"""HGQ quantized-packed serving weights: the decode-time weight format.
 
 Converts a trained ``(params, qstate)`` tree into the serving tree — every
-matmul kernel ``{'w', 'f'}`` becomes ``{'w_int8', 'scale', 'f'}`` with int8
-mantissas and a per-output-channel ``2^-f`` scale — via
+matmul kernel ``{'w', 'f'}`` becomes ``{'w_int8', 'scale', 'f'}`` (or
+``{'w_nib', ...}``, two int4 mantissas per byte, for sub-5-bit
+PrecisionPlan layers) with a per-output-channel ``2^-f`` scale — via
 :func:`repro.kernels.qmatmul.pack_weights`, i.e. exactly the representation
 the fused dequant-matmul Pallas kernel consumes.  Under
 :func:`repro.dist.perf.packed_matmul` (the ``Engine(packed=True)`` flag)
@@ -11,10 +12,12 @@ the dense decode projections and the tied lm head run on
 token are the packed ones — the memory-roofline win the HGQ bitwidths buy
 at serving time (DESIGN.md SS2).
 
-The per-channel fractional bits are capped so the largest weight in the
-channel still fits an int8 mantissa (saturating the big weights corrupts
-the matmul far worse than flooring the small ones); with HGQ disabled
-(``f`` absent) the cap itself is the scale — a power-of-two amax fit.
+Per-layer widths come from a ``core.plan.PrecisionPlan`` (``plan=None`` is
+uniform int8, byte-identical to the pre-plan format).  The per-channel
+fractional bits are capped so the largest weight in the channel still fits
+the layer-width mantissa (saturating the big weights corrupts the matmul
+far worse than flooring the small ones); with HGQ disabled (``f`` absent)
+the cap itself is the scale — a power-of-two amax fit.
 """
 from __future__ import annotations
 
@@ -22,29 +25,50 @@ from typing import Any, Tuple
 
 import jax
 
-from ..dist.perf import packed_matmul, pack_params_for_serving  # noqa: F401
-from ..kernels.qmatmul.ops import channel_bits, pack_linear  # noqa: F401
+from ..dist.perf import (
+    pack_params_for_serving,
+    packed_matmul,
+    packed_mantissas,
+    unpack_weight,
+)
+from ..kernels.qmatmul.ops import channel_bits, pack_linear
+
+__all__ = [
+    "channel_bits",
+    "pack_for_serving",
+    "pack_linear",
+    "pack_params_for_serving",
+    "pack_tree",
+    "packed_mantissas",
+    "packed_matmul",
+    "packed_nbytes",
+    "unpack_weight",
+]
 
 
-def pack_tree(params: Any) -> Any:
-    """Rewrite every packable matmul weight in a params tree to the int8 +
-    per-channel-scale serving form; structure-preserving elsewhere.  One
-    shared walker + leaf packer (``dist.perf.pack_params_for_serving`` over
+def pack_tree(params: Any, plan=None) -> Any:
+    """Rewrite every packable matmul weight in a params tree to the
+    quantized + per-channel-scale serving form at its ``plan`` pack width
+    (uniform int8 when ``plan`` is ``None``); structure-preserving
+    elsewhere.  One shared walker + leaf packer
+    (``dist.perf.pack_params_for_serving`` over
     ``kernels.qmatmul.pack_linear``) serves both this module and the
     dry-run's abstract packing."""
-    return pack_params_for_serving(params)
+    return pack_params_for_serving(params, plan)
 
 
-def pack_for_serving(params: Any, qstate: Any) -> Tuple[Any, Any]:
+def pack_for_serving(params: Any, qstate: Any,
+                     plan=None) -> Tuple[Any, Any]:
     """Trained ``(params, qstate)`` -> the serving tree.  qstate (activation
     ranges) passes through unchanged: inference activation quantizers only
     read the trained ``f`` leaves, which packing preserves."""
-    return pack_tree(params), qstate
+    return pack_tree(params, plan), qstate
 
 
 def packed_nbytes(params: Any) -> int:
     """Total bytes of the weight leaves as stored (int8 mantissas count 1,
-    fp scales 4, everything else its own itemsize)."""
+    nibble-packed pairs half that, fp scales 4, everything else its own
+    itemsize)."""
     leaves = jax.tree_util.tree_leaves(params)
     return sum(x.size * x.dtype.itemsize for x in leaves
                if hasattr(x, "dtype"))

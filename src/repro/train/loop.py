@@ -60,7 +60,8 @@ def make_train_step(forward: Forward, loss_fn: LossFn, tcfg: TrainConfig,
                     lr_sched: Optional[Schedule] = None,
                     grad_tx: Optional[Callable] = None,
                     reduce: str = "full", mesh=None,
-                    wire_kind: str = "int8", wire_layout: str = "auto"):
+                    wire_kind: str = "int8", wire_layout: str = "auto",
+                    wire_widths: Optional[Any] = None):
     """Build the pure train step.
 
     With ``grad_tx`` (e.g. ``dist.ef_compress`` partial application: a
@@ -87,6 +88,12 @@ def make_train_step(forward: Forward, loss_fn: LossFn, tcfg: TrainConfig,
       ``sharding.ef_residual_sharding(..., layout="2d")``).
     * ``"auto"`` — ``"2d"`` when ``mesh`` has a model axis of size > 1,
       else ``"1d"``.
+
+    ``wire_widths`` (a ``core.plan.PrecisionPlan``) selects per-leaf wire
+    widths for the compressed reduction — its ``wire_bits_tree`` over the
+    gradient tree feeds the collective's ``widths`` argument.  ``None``
+    (or a uniform-int8 plan, which callers normalize to ``None``) traces
+    the exact legacy int8 wire.
 
     Global-norm clipping applies to the *delivered* mean gradient
     (post-reduce compression clips before — the true pre-reduce global
@@ -124,7 +131,7 @@ def make_train_step(forward: Forward, loss_fn: LossFn, tcfg: TrainConfig,
         else:
             return _make_compressed_step(forward, loss_fn, tcfg, beta_sched,
                                          lr_sched, mesh, wire_kind, n_data,
-                                         wire_layout)
+                                         wire_layout, wire_widths)
 
     def _step(params, qstate, opt: AdamWState, batch, step, tx_state):
         beta = beta_sched(step)
@@ -160,7 +167,8 @@ def make_train_step(forward: Forward, loss_fn: LossFn, tcfg: TrainConfig,
 def _make_compressed_step(forward: Forward, loss_fn: LossFn,
                           tcfg: TrainConfig, beta_sched, lr_sched,
                           mesh, wire_kind: str, n_data: int,
-                          wire_layout: str = "1d"):
+                          wire_layout: str = "1d",
+                          wire_widths: Optional[Any] = None):
     """The int8-on-the-wire train step (see ``make_train_step`` docstring).
 
     Per-shard gradients are materialized with a leading ``[n_data]`` axis
@@ -194,16 +202,20 @@ def _make_compressed_step(forward: Forward, loss_fn: LossFn,
             jax.value_and_grad(loss_slice, has_aux=True),
             in_axes=(None, 0))(params, sliced)
         newq = _merge_sliced_qstate(newqs)
+        # per-leaf wire widths from the PrecisionPlan (static ints keyed
+        # by the grads tree paths; None = uniform int8, the legacy trace)
+        widths = (None if wire_widths is None
+                  else wire_widths.wire_bits_tree(grads))
         if wire_layout == "2d":
             # the residual lives in the sliced [n_data, n_model, C] layout,
             # so the grad+residual add happens on the slice, inside the
             # collective — gradients go in raw
             delivered, residual = collectives.ef_wire_pmean_2d(
-                grads, tx_state.residual, mesh, wire_kind)
+                grads, tx_state.residual, mesh, wire_kind, widths=widths)
         else:
             err = jax.tree.map(jnp.add, grads, tx_state.residual)
-            delivered, residual = collectives.ef_wire_pmean(err, mesh,
-                                                            wire_kind)
+            delivered, residual = collectives.ef_wire_pmean(
+                err, mesh, wire_kind, widths=widths)
         delivered, gnorm = clip_by_global_norm(delivered, tcfg.clip_norm)
         params, opt = adamw_update(delivered, opt, params, lr=lr,
                                    weight_decay=tcfg.weight_decay)
@@ -318,8 +330,13 @@ class Trainer:
             # pinned checkpoint directories.
             saved_pareto = False
             if self.eval_fn and step and step % tcfg.eval_every == 0:
-                metric, ebops = self.eval_fn(self.params, self.qstate)
-                if self.pareto.offer(metric, ebops, step + 1):
+                out = self.eval_fn(self.params, self.qstate)
+                # eval_fn returns (metric, ebops) or (metric, ebops,
+                # payload) — e.g. a core.plan.PrecisionPlan snapshot, so
+                # every front point carries its deployable width table
+                metric, ebops = out[0], out[1]
+                payload = out[2] if len(out) > 2 else None
+                if self.pareto.offer(metric, ebops, step + 1, payload):
                     path = self.checkpoint(step + 1, pareto=True)
                     saved_pareto = True
             if (tcfg.ckpt_dir and step and step % tcfg.ckpt_every == 0

@@ -101,16 +101,26 @@ def test_cli_flags_equal_spec_file():
 
 
 def test_shipped_specs_roundtrip_exact():
-    """Every shipped spec file loads, round-trips exactly, and re-emits
-    byte-identically (the file IS the canonical serialization)."""
+    """Every shipped spec/plan file loads with its loader (plan_*.json
+    are bare PrecisionPlans, the rest full RunSpecs), round-trips
+    exactly, and re-emits byte-identically (the file IS the canonical
+    serialization) — the same contract tools/check_specs.py gates."""
     import glob
+    import os
+    from repro.core.plan import PrecisionPlan
     paths = sorted(glob.glob(f"{SPEC_DIR}/*.json"))
-    assert len(paths) >= 3, paths
+    assert len(paths) >= 4, paths
+    n_plans = 0
     for path in paths:
-        spec = RunSpec.from_file(path)
-        assert RunSpec.from_json(spec.to_json()) == spec, path
+        loader = (PrecisionPlan
+                  if os.path.basename(path).startswith("plan_")
+                  else RunSpec)
+        n_plans += loader is PrecisionPlan
+        obj = loader.from_file(path)
+        assert loader.from_json(obj.to_json()) == obj, path
         with open(path) as f:
-            assert spec.to_json() == f.read(), path
+            assert obj.to_json() == f.read(), path
+    assert n_plans >= 1    # the golden mixed w4/w8 plan ships
 
 
 def test_compression_layout_resolution():
@@ -340,6 +350,85 @@ def test_hlo_identity_wire2d(mesh_str):
                 "--grad-compression", "int8-wire-2d"]
     fresh = _spec_step_hlo(argv)
     assert _strip_metadata(fresh) == _strip_metadata(legacy)
+
+
+# --------------------------- precision plans -------------------------------
+
+def test_spec_plan_field_roundtrip():
+    """A RunSpec with an embedded PrecisionPlan round-trips exactly, and
+    a plan-free spec serializes with ``"plan": null``."""
+    from repro.core.plan import LayerPlan, PrecisionPlan
+    plan = PrecisionPlan(layers={
+        "layers/mlp/up/kernel": LayerPlan(wire_bits=4, pack_bits=4)})
+    s = RunSpec(plan=plan)
+    s2 = RunSpec.from_json(s.to_json())
+    assert s2 == s
+    assert s2.plan.entry_for("layers/mlp/up/kernel/w").wire_bits == 4
+    import json
+    assert json.loads(RunSpec().to_json())["plan"] is None
+
+
+def test_plan_flag_loads_plan_file():
+    """``--plan plan.json`` attaches the width table to the spec; the
+    shipped golden mixed plan is the fixture."""
+    s = RunSpec.from_args(["--plan", f"{SPEC_DIR}/plan_mixed_w4w8.json"])
+    assert s.plan is not None and not s.plan.is_uniform_int8
+    assert s.plan.entry_for("layers/mlp/down/kernel").wire_bits == 4
+    assert s.plan.entry_for("layers/attn/wq/kernel").wire_bits == 8
+    assert s.plan.entry_for("embed/table").wire_bits == 8   # default
+
+
+def test_uniform_plan_resolves_to_none():
+    """build() normalizes both a missing plan and an explicit uniform
+    int8 plan to None — consumers take the exact legacy trace."""
+    from repro.core.plan import LayerPlan, PrecisionPlan
+    assert build(RunSpec()).plan is None
+    assert build(RunSpec(plan=PrecisionPlan())).plan is None
+    mixed = PrecisionPlan(layers={"x": LayerPlan(wire_bits=4)})
+    ctx = build(RunSpec(plan=mixed))
+    assert ctx.plan is mixed
+    assert ctx.plan_summary() == mixed.summary()
+    assert build(RunSpec()).plan_summary() is None
+
+
+def test_hlo_identity_uniform_plan_1x1():
+    """Acceptance contract: a spec carrying the explicit uniform-int8
+    plan compiles the byte-identical train step to the plan-free spec."""
+    base = _spec_step_hlo(["--mesh", "1x1"])
+    import json
+    import tempfile
+    d = json.loads(RunSpec.from_args(["--mesh", "1x1"]).to_json())
+    d["plan"] = {"default": {"wire_bits": 8, "pack_bits": 8,
+                             "scale_exp": None}, "layers": {}}
+    with tempfile.NamedTemporaryFile("w", suffix=".json",
+                                     delete=False) as f:
+        json.dump(d, f)
+    with_plan = _spec_step_hlo(["--spec", f.name])
+    assert _strip_metadata(with_plan) == _strip_metadata(base)
+
+
+@multidevice
+def test_hlo_identity_uniform_plan_wire2d():
+    """Same contract on the 2x4 int8-wire-2d mesh: the uniform plan must
+    not perturb the compiled wire collective by a single instruction."""
+    import dataclasses as dc
+    from repro.core.plan import PrecisionPlan
+    spec = RunSpec.from_file(f"{SPEC_DIR}/host_2x4_int8wire2d.json")
+    base = _spec_hlo_from_spec(spec)
+    with_plan = _spec_hlo_from_spec(dc.replace(spec,
+                                               plan=PrecisionPlan()))
+    assert _strip_metadata(with_plan) == _strip_metadata(base)
+
+
+def _spec_hlo_from_spec(spec):
+    ctx = build(spec)
+    setup = ctx.init_training()
+    with ctx.mesh:
+        args = [setup.params, setup.qstate, setup.opt,
+                setup.pipeline(0), jnp.int32(0)]
+        if setup.ef_state is not None:
+            args.append(setup.ef_state)
+        return setup.jitted.lower(*args).compile().as_text()
 
 
 # --------------------------- serving contexts ------------------------------

@@ -84,6 +84,58 @@ def test_extract_serving_metrics():
     assert m["serving.hbm_saving_x"] == (3.7, "higher")
 
 
+def test_extract_step_ms_direction_lower():
+    m = gate.extract_metrics(COLLECTIVES)
+    assert m["collectives.int8-wire.step_ms"] == (80.0, "lower")
+    assert m["collectives[2x4].int8-wire-2d.step_ms"] == (70.0, "lower")
+
+
+def test_extract_mixed_precision_metrics():
+    data = copy.deepcopy(COLLECTIVES)
+    data["mixed_precision"] = {"plan_summary": {"n_layers": 8},
+                               "low_bits": 4, "runs": [
+        {"mode": "int8-wire-uniform", "bytes_per_element": 1.757},
+        {"mode": "int8-wire-mixed-w4w8", "bytes_per_element": 0.889,
+         "step_ms": 40.0, "reduction_vs_uniform": 1.98}]}
+    m = gate.extract_metrics(data)
+    assert m["collectives[mixed].int8-wire-mixed-w4w8.bytes_per_element"] \
+        == (0.889, "lower")
+    assert m["collectives[mixed].int8-wire-mixed-w4w8"
+             ".reduction_vs_uniform"] == (1.98, "higher")
+    assert "collectives[mixed].int8-wire-uniform.reduction_vs_uniform" \
+        not in m
+
+
+def test_gate_step_ms_direction_aware(gate_env):
+    """Wall-time gates only on the bad direction: a rise beyond tolerance
+    fails, the per-metric override loosens it, a drop always passes."""
+    tmp, base = gate_env
+    slow = copy.deepcopy(COLLECTIVES)
+    slow["runs"][1]["step_ms"] = 200.0            # 80 -> +150%
+    fresh = _write(tmp, "BENCH_collectives.json", slow)
+    assert gate.main([fresh, "--baseline-dir", base]) == 1
+    assert gate.main([fresh, "--baseline-dir", base,
+                      "--override", "collectives*step_ms=2.0"]) == 0
+    fast = copy.deepcopy(COLLECTIVES)
+    fast["runs"][1]["step_ms"] = 10.0
+    fresh = _write(tmp, "BENCH_collectives.json", fast)
+    assert gate.main([fresh, "--baseline-dir", base]) == 0
+
+
+def test_gate_fails_on_mixed_reduction_drop(gate_env, capsys):
+    tmp, base = gate_env
+    with_mixed = copy.deepcopy(COLLECTIVES)
+    with_mixed["mixed_precision"] = {"runs": [
+        {"mode": "int8-wire-mixed-w4w8", "bytes_per_element": 0.889,
+         "reduction_vs_uniform": 1.98}]}
+    _write(base, "BENCH_collectives.json", with_mixed)
+    bad = copy.deepcopy(with_mixed)
+    bad["mixed_precision"]["runs"][0]["reduction_vs_uniform"] = 1.0
+    fresh = _write(tmp, "BENCH_collectives.json", bad)
+    assert gate.main([fresh, "--baseline-dir", base]) == 1
+    assert "reduction_vs_uniform" in capsys.readouterr().err
+
+
 def test_unknown_bench_contributes_nothing():
     assert gate.extract_metrics({"bench": "mystery", "runs": [{"x": 1}]}) \
         == {}

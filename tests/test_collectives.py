@@ -196,6 +196,68 @@ def test_compressed_single_device_is_post_reduce_path():
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+# ----------------------------- mixed widths ---------------------------------
+
+def test_simulate_mixed_widths_grid_and_error():
+    """Per-leaf wire widths: a w4 leaf quantizes on the 2^(4-1)-1 = 7
+    grid (coarser error bound), w8 leaves are untouched — byte-for-byte
+    equal to the no-widths trace."""
+    tree = _stacked(jax.random.PRNGKey(5))
+    widths = {"layers": 4, "vec": 8, "scalar": 8}
+    d, r = simulate_wire_pmean(tree, "int8", widths=widths)
+    d8, r8 = simulate_wire_pmean(tree, "int8")
+    true = np.mean(np.asarray(tree["layers"]), axis=0)
+    grid4 = np.max(np.abs(np.asarray(tree["layers"]))) / 7 * 2
+    np.testing.assert_allclose(np.asarray(d["layers"]), true,
+                               atol=4 * grid4)
+    # w8 leaves must be bit-identical to the widths-free path
+    for k in ("vec", "scalar"):
+        np.testing.assert_array_equal(np.asarray(d[k]), np.asarray(d8[k]))
+        np.testing.assert_array_equal(np.asarray(r[k]), np.asarray(r8[k]))
+    # the w4 leaf genuinely moved to the coarser grid
+    assert not np.array_equal(np.asarray(d["layers"]),
+                              np.asarray(d8["layers"]))
+
+
+def test_width_flags_validation():
+    from repro.dist.collectives import _width_flags
+    tree = {"a": jnp.zeros((2, 3)), "b": jnp.zeros((2,))}
+    assert _width_flags(tree, None) == (8, 8)
+    assert _width_flags(tree, {"a": 4, "b": 8}) == (4, 8)
+    with pytest.raises(ValueError, match="wire width"):
+        _width_flags(tree, {"a": 1, "b": 8})
+
+
+@pytest.mark.parametrize("bits", [4, 5, 8])
+@pytest.mark.parametrize("n", [1, 2, 3, 4, 8])
+def test_phase2_shift_fits_every_width(bits, n):
+    """The phase-2 requantize is width-independent: with shift
+    k = ceil(log2 n), |round(sum / 2^k)| <= qmax for ANY payload width
+    (2^k >= n bounds the worst-case sum of n in-range mantissas) — so
+    phase-2/3 payloads always repack into the leaf's width."""
+    from repro.dist.collectives import _phase2_shift
+    qmax = 2 ** (bits - 1) - 1
+    k = _phase2_shift(n)
+    worst = n * qmax
+    assert round(worst / 2 ** k) <= qmax, (bits, n, k)
+    assert round(-worst / 2 ** k) >= -qmax
+
+
+def test_bytes_model_nibble_halves_payload():
+    """bits<=4 int8-wire chunks count nibble-packed (ceil(C/2)) bytes;
+    the scale sidecar is width-independent."""
+    n, elems, rows = 8, 500_000, 64
+    b8 = wire_bytes_model(elems, n, "int8", rows)
+    b4 = wire_bytes_model(elems, n, "int8", rows, bits=4)
+    b5 = wire_bytes_model(elems, n, "int8", rows, bits=5)
+    scales = wire_bytes_model(0, n, "int8", rows)
+    assert b5 == b8                       # only <=4 bits nibble-pack
+    np.testing.assert_allclose(b4 - scales, (b8 - scales) / 2, rtol=1e-3)
+    # bf16 ignores bits (payload carries its own exponents)
+    assert wire_bytes_model(elems, n, "bf16", rows, bits=4) \
+        == wire_bytes_model(elems, n, "bf16", rows)
+
+
 # --------------------------- multi-device path ------------------------------
 
 @multidevice
@@ -214,6 +276,52 @@ def test_shard_map_matches_simulate():
                                               np.asarray(ds[k]))
                 np.testing.assert_array_equal(np.asarray(r[k]),
                                               np.asarray(rs[k]))
+
+
+@multidevice
+def test_shard_map_matches_simulate_mixed_widths():
+    """Mixed per-leaf widths on the real 1D shard_map path: bit-for-bit
+    equal to the simulator (pack∘unpack is the identity on in-range int4
+    mantissas, so the packed wire changes no delivered value)."""
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    tree = _stacked(jax.random.PRNGKey(6))
+    widths = {"layers": 4, "vec": 8, "scalar": 8}
+    from repro.dist.sharding import ef_residual_sharding
+    with mesh:
+        placed = jax.device_put(tree, ef_residual_sharding(tree, mesh))
+        d, r = jax.jit(lambda t: ef_wire_pmean(
+            t, mesh, "int8", widths=widths))(placed)
+    ds, rs = simulate_wire_pmean(tree, "int8", widths=widths)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(d[k]), np.asarray(ds[k]))
+        np.testing.assert_array_equal(np.asarray(r[k]), np.asarray(rs[k]))
+
+
+@multidevice
+def test_wire_1d_bytes_model_pins_measured_trace():
+    """wire_bytes_model == the recorder's measured per-leaf totals, for
+    int8 at w8 and w4 (nibble chunks) and for bf16 — the byte model and
+    the traced collectives must not drift apart."""
+    from repro.dist.collectives import record_wire_bytes
+    from repro.dist.sharding import ef_residual_sharding
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    n = data_axis_size(mesh)
+    cases = [("layers", "int8", 8, 3), ("layers", "int8", 4, 3),
+             ("vec", "int8", 4, 1), ("vec", "bf16", 8, 1)]
+    full = _stacked(jax.random.PRNGKey(7))
+    with mesh:
+        for name, kind, bits, rows in cases:
+            tree = {name: full[name]}
+            placed = jax.device_put(tree,
+                                    ef_residual_sharding(tree, mesh))
+            fn = jax.jit(lambda t, k=kind, b=bits: ef_wire_pmean(
+                t, mesh, k, widths={name: b}))
+            with record_wire_bytes() as rec:
+                fn.lower(placed)
+            want = wire_bytes_model(full[name][0].size, n, kind,
+                                    n_scale_rows=rows, bits=bits)
+            assert rec.total() == want, (name, kind, bits,
+                                         rec.records, want)
 
 
 @multidevice

@@ -224,6 +224,93 @@ def test_packed_weights_flow_through_get_qw():
                                atol=1e-6)
 
 
+# ----------------------- plan-width serving packing ------------------------
+
+def _grid_params(shape=(32, 16), f=4.0):
+    """A matmul weight already on the 2^-f grid, small enough that no
+    width's channel cap saturates."""
+    key = jax.random.PRNGKey(5)
+    w = jnp.round(jnp.clip(jax.random.normal(key, shape) * 0.2, -0.9, 0.9)
+                  * 2.0 ** f) / 2.0 ** f
+    return {"kernel": {"w": w, "f": jnp.full(shape, f)}}
+
+
+def test_pack_with_plan_nibble_storage_and_roundtrip():
+    """A w4 plan layer stores two mantissas per byte along K; the accessor
+    recovers full-width int4-range mantissas and dequant stays within half
+    a step of the original weights."""
+    from repro.core.plan import LayerPlan, PrecisionPlan
+    from repro.dist.perf import is_packed, packed_mantissas
+    p = _grid_params()
+    plan = PrecisionPlan(layers={"kernel": LayerPlan(wire_bits=4,
+                                                     pack_bits=4)})
+    packed = pack_params_for_serving(p, plan)["kernel"]
+    assert "w_nib" in packed and "w_int8" not in packed
+    assert packed["w_nib"].shape == (16, 16)       # K halves
+    assert is_packed(packed)
+    m = packed_mantissas(packed)
+    assert m.shape == (32, 16)
+    assert int(jnp.max(jnp.abs(m))) <= 7
+    got = unpack_weight(packed)
+    err = np.abs(np.asarray(got) - np.asarray(p["kernel"]["w"]))
+    step = np.asarray(packed["scale"]).reshape(1, -1)
+    assert (err <= step / 2 + 1e-7).all()
+
+
+def test_packed_nbytes_nibble_halves_mantissa_bytes():
+    from repro.core.plan import LayerPlan, PrecisionPlan
+    from repro.serving.packed import packed_nbytes
+    p = _grid_params()
+    plan4 = PrecisionPlan(layers={"kernel": LayerPlan(wire_bits=4,
+                                                      pack_bits=4)})
+    p8 = pack_params_for_serving(p)
+    p4 = pack_params_for_serving(p, plan4)
+    assert p4["kernel"]["w_nib"].nbytes \
+        == p8["kernel"]["w_int8"].nbytes // 2
+    # scales and f pass through identically, so the tree totals differ
+    # by exactly the halved mantissa payload
+    assert packed_nbytes(p8) - packed_nbytes(p4) \
+        == p8["kernel"]["w_int8"].nbytes // 2
+
+
+def test_pack_plan_odd_k_falls_back_to_int8_storage():
+    """Odd-K layers keep int8 storage (no pad metadata on disk) but still
+    quantize on the narrow grid the plan asked for."""
+    from repro.core.plan import LayerPlan, PrecisionPlan
+    from repro.dist.perf import packed_mantissas
+    p = _grid_params(shape=(7, 4))
+    plan = PrecisionPlan(layers={"kernel": LayerPlan(wire_bits=4,
+                                                     pack_bits=4)})
+    packed = pack_params_for_serving(p, plan)["kernel"]
+    assert "w_int8" in packed and "w_nib" not in packed
+    assert int(jnp.max(jnp.abs(packed["w_int8"]))) <= 7
+    np.testing.assert_array_equal(np.asarray(packed_mantissas(packed)),
+                                  np.asarray(packed["w_int8"]))
+
+
+def test_plan_widths_address_tree_paths():
+    """Plan keys are the /-joined tree paths iter_packable yields: a
+    d0/kernel entry packs only that layer, siblings stay uniform int8."""
+    from repro.core.plan import LayerPlan, PrecisionPlan
+    params = {"d0": _grid_params(), "d1": _grid_params()}
+    plan = PrecisionPlan(layers={"d0/kernel": LayerPlan(wire_bits=4,
+                                                        pack_bits=4)})
+    packed = pack_params_for_serving(params, plan)
+    assert "w_nib" in packed["d0"]["kernel"]
+    assert "w_int8" in packed["d1"]["kernel"]
+
+
+def test_pack_with_plan_is_eval_shape_traceable():
+    from repro.core.plan import LayerPlan, PrecisionPlan
+    abs_p = {"kernel": {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32),
+                        "f": jax.ShapeDtypeStruct((1, 4), jnp.float32)}}
+    plan = PrecisionPlan(layers={"kernel": LayerPlan(wire_bits=4,
+                                                     pack_bits=4)})
+    out = jax.eval_shape(lambda t: pack_params_for_serving(t, plan), abs_p)
+    assert out["kernel"]["w_nib"].shape == (4, 4)
+    assert out["kernel"]["w_nib"].dtype == jnp.int8
+
+
 # --------------------------- error feedback --------------------------------
 
 def test_ef_unsupported_kind_raises():

@@ -81,6 +81,36 @@ def test_pack_per_parameter_uses_channel_max():
     assert float(s[1]) == 2.0 ** -1
 
 
+# --------------------------- sub-8-bit widths ------------------------------
+
+@pytest.mark.parametrize("bits", [4, 5, 8])
+def test_pack_ref_clips_to_width_grid(bits):
+    """Sub-8-bit grids clip symmetrically to +-(2^(b-1)-1) so nibble
+    packing and error feedback never see the asymmetric minimum; int8
+    keeps the full (-128, 127) range."""
+    w = jnp.linspace(-4.0, 4.0, 64).reshape(32, 2)
+    f = jnp.full((2,), 6.0)
+    m, s = pack_ref(w, f, bits)
+    lo, hi = (-128, 127) if bits == 8 else \
+        (-(2 ** (bits - 1) - 1), 2 ** (bits - 1) - 1)
+    assert m.dtype == jnp.int8
+    assert int(m.min()) == lo and int(m.max()) == hi
+
+
+@pytest.mark.parametrize("bits", [4, 6, 8])
+def test_pack_linear_caps_channel_to_width(bits):
+    """pack_linear never saturates at any width: the per-channel grid
+    cap shrinks 2^-f until the channel amax fits the b-wide mantissa,
+    so dequant error stays within half a step everywhere."""
+    from repro.kernels.qmatmul.ops import pack_linear
+    w = jax.random.normal(KEY, (32, 16))
+    m, s = pack_linear(w, None, bits)
+    qmax = 127 if bits == 8 else 2 ** (bits - 1) - 1
+    assert int(jnp.max(jnp.abs(m))) <= qmax
+    err = jnp.abs(m.astype(jnp.float32) * s[None, :] - w)
+    assert float(jnp.max(err - s[None, :] / 2)) <= 1e-6
+
+
 def test_qmatmul_batched():
     x = jax.random.normal(KEY, (2, 3, 256))
     w = jax.random.normal(KEY, (256, 128)) * 0.1

@@ -1,0 +1,106 @@
+"""core.pareto — front maintenance, budget queries, serialization.
+
+Covers: ``best(max_ebops)`` tie-breaking toward the cheaper point,
+``offer`` dominance and equal-point rejection, and the front's JSON
+round-trip — including per-point ``PrecisionPlan`` payloads (a
+hypothesis property test drives random offer sequences).
+"""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.pareto import ParetoFront
+from repro.core.plan import LayerPlan, PrecisionPlan
+
+
+# ------------------------------ best() -------------------------------------
+
+def test_best_tie_breaks_toward_cheaper_point():
+    fr = ParetoFront("max")
+    assert fr.best() is None
+    assert fr.offer(0.90, 100.0, 1)
+    assert fr.offer(0.95, 200.0, 2)
+    # equal metric, higher ebops: non-dominated (front keeps it) but
+    # best() must pick the cheaper of the metric-tied pair
+    fr.points.append(type(fr.points[0])(0.95, 300.0, 3))
+    b = fr.best()
+    assert (b.metric, b.ebops, b.step) == (0.95, 200.0, 2)
+    # budget excludes the winner -> cheaper, worse-metric point
+    assert fr.best(max_ebops=150.0).step == 1
+    assert fr.best(max_ebops=50.0) is None
+
+
+def test_best_tie_break_min_metric():
+    fr = ParetoFront("min")
+    fr.offer(0.10, 100.0, 1)
+    fr.points.append(type(fr.points[0])(0.10, 50.0, 2))
+    assert fr.best().step == 2            # same loss, cheaper model
+
+
+# ------------------------------ offer() ------------------------------------
+
+def test_offer_dominance_and_equal_points():
+    fr = ParetoFront("max")
+    assert fr.offer(0.90, 100.0, 1)
+    # exactly equal (metric, ebops): rejected, the incumbent stays
+    assert not fr.offer(0.90, 100.0, 2)
+    assert [p.step for p in fr.points] == [1]
+    # equal metric, strictly cheaper: dominates and replaces
+    assert fr.offer(0.90, 80.0, 3)
+    assert [p.step for p in fr.points] == [3]
+    # equal ebops, strictly better metric: dominates and replaces
+    assert fr.offer(0.92, 80.0, 4)
+    assert [p.step for p in fr.points] == [4]
+    # dominated on both axes: rejected
+    assert not fr.offer(0.91, 90.0, 5)
+    # incomparable: joins, sorted by ebops
+    assert fr.offer(0.80, 10.0, 6)
+    assert [p.step for p in fr.points] == [6, 4]
+
+
+# --------------------------- serialization ---------------------------------
+
+def test_front_json_roundtrip_with_plan_payloads():
+    plan = PrecisionPlan(layers={
+        "d0/kernel": LayerPlan(wire_bits=4, pack_bits=4, scale_exp=3.0)})
+    fr = ParetoFront("max")
+    fr.offer(0.90, 100.0, 1, payload=plan)
+    fr.offer(0.80, 50.0, 2, payload="ckpt/step2")
+    fr.offer(0.70, 20.0, 3, payload={"params": object()})  # not JSON-able
+    fr2 = ParetoFront.from_json(fr.to_json())
+    assert fr2.sign == fr.sign
+    assert [(p.metric, p.ebops, p.step) for p in fr2.points] \
+        == [(p.metric, p.ebops, p.step) for p in fr.points]
+    by_step = {p.step: p.payload for p in fr2.points}
+    assert by_step[1] == plan            # plan payload survives exactly
+    assert by_step[2] == "ckpt/step2"    # JSON-native scalar survives
+    assert by_step[3] is None            # live snapshot drops to None
+    # canonical JSON is stable through the round-trip
+    assert fr2.to_json() == fr.to_json()
+
+
+@settings(max_examples=25)
+@given(st.lists(st.floats(min_value=0.0, max_value=1.0, width=32),
+                min_size=1, max_size=12),
+       st.lists(st.floats(min_value=1.0, max_value=1e6, width=32),
+                min_size=1, max_size=12))
+def test_front_roundtrip_property(metrics, ebops):
+    """Any front built by a random offer sequence round-trips exactly
+    (points, order, direction)."""
+    fr = ParetoFront("max")
+    for i, (m, e) in enumerate(zip(metrics, ebops)):
+        fr.offer(m, e, i, payload=PrecisionPlan() if i % 2 else None)
+    fr2 = ParetoFront.from_json(fr.to_json())
+    assert [(p.metric, p.ebops, p.step, p.payload) for p in fr2.points] \
+        == [(p.metric, p.ebops, p.step, p.payload) for p in fr.points]
+    # front invariant survives: ebops strictly increasing, metric too
+    # (non-dominated set under max-metric)
+    es = [p.ebops for p in fr2.points]
+    ms = [p.metric for p in fr2.points]
+    assert es == sorted(es)
+    assert ms == sorted(ms)
+
+
+def test_front_rejects_bad_direction():
+    with pytest.raises(AssertionError):
+        ParetoFront("bigger")

@@ -1,0 +1,172 @@
+"""core.plan — the PrecisionPlan width table and its derivation.
+
+Covers: LayerPlan/PrecisionPlan validation, deepest-prefix entry lookup,
+the uniform-int8 no-op property, per-leaf wire-width trees, JSON
+round-trips (including a hypothesis property test over random plans),
+derivation from trained params (``plan_from_params`` /
+``mixed_low_plan``), and the nibble pack/unpack identity the sub-5-bit
+paths rely on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.plan import (LayerPlan, NIBBLE_BITS, PrecisionPlan,
+                             iter_packable, layer_occupied_bits,
+                             mixed_low_plan, packable_weight,
+                             plan_from_params)
+
+
+# ------------------------------ validation ---------------------------------
+
+def test_layer_plan_width_bounds():
+    LayerPlan(wire_bits=4, pack_bits=8)        # bounds are inclusive
+    with pytest.raises(ValueError, match="wire_bits"):
+        LayerPlan(wire_bits=3)
+    with pytest.raises(ValueError, match="pack_bits"):
+        LayerPlan(pack_bits=9)
+    with pytest.raises(ValueError, match="unknown PrecisionPlan fields"):
+        PrecisionPlan.from_dict({"defaults": {}})
+    with pytest.raises(ValueError, match="unknown LayerPlan fields"):
+        PrecisionPlan.from_dict({"layers": {"x": {"bits": 4}}})
+
+
+def test_entry_for_deepest_prefix_wins():
+    plan = PrecisionPlan(layers={
+        "layers": LayerPlan(wire_bits=5, pack_bits=5),
+        "layers/mlp/up/kernel": LayerPlan(wire_bits=4, pack_bits=4)})
+    assert plan.entry_for("layers/mlp/up/kernel").wire_bits == 4
+    # an entry covers the whole subtree under its path...
+    assert plan.entry_for("layers/mlp/up/kernel/w").wire_bits == 4
+    assert plan.entry_for("layers/attn/wq/kernel").wire_bits == 5
+    # ...but not sibling names that merely share a string prefix
+    assert plan.entry_for("layers2/x").wire_bits == 8
+    assert plan.entry_for("embed/table").wire_bits == 8
+
+
+def test_is_uniform_int8():
+    assert PrecisionPlan().is_uniform_int8
+    assert PrecisionPlan(layers={"x": LayerPlan()}).is_uniform_int8
+    assert not PrecisionPlan(
+        layers={"x": LayerPlan(wire_bits=4)}).is_uniform_int8
+    assert not PrecisionPlan(
+        default=LayerPlan(pack_bits=4)).is_uniform_int8
+
+
+def test_wire_bits_tree_matches_structure():
+    tree = {"a": {"w": jnp.zeros((4, 4)), "f": jnp.zeros((4, 4))},
+            "b": [jnp.zeros(3), jnp.zeros(2)]}
+    # a layer-level entry covers its whole subtree (w AND f grads)...
+    plan = PrecisionPlan(layers={"a": LayerPlan(wire_bits=4, pack_bits=4)})
+    assert plan.wire_bits_tree(tree) == {"a": {"w": 4, "f": 4},
+                                         "b": [8, 8]}
+    # ...while a leaf-level entry pins just that leaf
+    leafy = PrecisionPlan(layers={"a/w": LayerPlan(wire_bits=4,
+                                                   pack_bits=4)})
+    assert leafy.wire_bits_tree(tree) == {"a": {"w": 4, "f": 8},
+                                          "b": [8, 8]}
+
+
+# ----------------------------- serialization -------------------------------
+
+def test_plan_json_roundtrip_exact():
+    plan = PrecisionPlan(
+        default=LayerPlan(wire_bits=8, pack_bits=8, scale_exp=2.0),
+        layers={"d0/kernel": LayerPlan(wire_bits=4, pack_bits=4,
+                                       scale_exp=5.0)})
+    assert PrecisionPlan.from_json(plan.to_json()) == plan
+    assert PrecisionPlan.from_dict(plan.to_dict()) == plan
+    # canonical form is stable
+    assert PrecisionPlan.from_json(plan.to_json()).to_json() \
+        == plan.to_json()
+
+
+@settings(max_examples=25)
+@given(st.integers(min_value=4, max_value=8),
+       st.integers(min_value=4, max_value=8),
+       st.integers(min_value=0, max_value=6),
+       st.floats(min_value=-8.0, max_value=8.0, width=32))
+def test_plan_roundtrip_property(wire, pack, n_layers, exp):
+    """from_json(to_json(plan)) == plan for random width tables."""
+    layers = {f"l{i}/kernel": LayerPlan(
+        wire_bits=wire if i % 2 else 8,
+        pack_bits=pack, scale_exp=float(exp) if i % 3 else None)
+        for i in range(n_layers)}
+    plan = PrecisionPlan(layers=layers)
+    p2 = PrecisionPlan.from_json(plan.to_json())
+    assert p2 == plan
+    assert p2.to_json() == plan.to_json()
+
+
+# ------------------------------ derivation ---------------------------------
+
+def _toy_params():
+    k = jax.random.PRNGKey(0)
+    mk = lambda s, kk: jax.random.normal(kk, s, jnp.float32) * 0.1
+    k1, k2, k3 = jax.random.split(k, 3)
+    return {
+        "d0": {"kernel": {"w": mk((16, 8), k1),
+                          "f": jnp.full((16, 8), 2.0)},
+               "bias": {"w": mk((8,), k2)}},
+        "d1": {"kernel": {"w": mk((8, 4), k3),
+                          "f": jnp.full((8, 4), 6.0)}},
+    }
+
+
+def test_iter_packable_keys_and_rule():
+    keys = [k for k, _ in iter_packable(_toy_params())]
+    assert keys == ["d0/kernel", "d1/kernel"]
+    assert not packable_weight("bias", jnp.zeros((4, 4)))
+    assert not packable_weight("w", jnp.zeros(4))          # rank-1
+    assert not packable_weight("kernel", jnp.zeros((3, 3, 3, 3)))  # conv
+    assert packable_weight("table", jnp.zeros((16, 8), jnp.bfloat16))
+
+
+def test_plan_from_params_width_classes():
+    """A layer whose occupied bits fit in 4 goes w4; a wide one stays
+    int8; unlisted leaves keep the 8-bit default."""
+    params = _toy_params()
+    # d0: f=2 on |w|~0.1 -> tiny mantissas -> low occupied bits
+    occ0 = layer_occupied_bits(params["d0"]["kernel"]["w"],
+                               params["d0"]["kernel"]["f"])
+    occ1 = layer_occupied_bits(params["d1"]["kernel"]["w"],
+                               params["d1"]["kernel"]["f"])
+    assert 1 <= occ0 <= 8 and 1 <= occ1 <= 8
+    plan = plan_from_params(params, low_bits=4, threshold=occ0)
+    e0 = plan.entry_for("d0/kernel")
+    assert e0.wire_bits == 4 and e0.pack_bits == 4
+    assert e0.scale_exp is not None
+    if occ1 > occ0:
+        assert plan.entry_for("d1/kernel").wire_bits == 8
+    assert plan.entry_for("d0/bias").wire_bits == 8
+    with pytest.raises(ValueError, match="low_bits"):
+        plan_from_params(params, low_bits=3)
+
+
+def test_mixed_low_plan_covers_all_packable():
+    plan = mixed_low_plan(_toy_params(), low_bits=4)
+    assert set(plan.layers) == {"d0/kernel", "d1/kernel"}
+    assert all(e.wire_bits == 4 and e.pack_bits == 4
+               for e in plan.layers.values())
+    assert not plan.is_uniform_int8
+
+
+# --------------------------- nibble pack/unpack ----------------------------
+
+@pytest.mark.parametrize("n", [6, 7])          # even and odd lengths
+@pytest.mark.parametrize("axis", [-1, 0])
+def test_nibble_pack_unpack_identity(n, axis):
+    """pack∘unpack is the identity on in-range int4 mantissas — the
+    property that lets the wire simulators skip packing entirely."""
+    from repro.kernels.qmatmul.ops import pack_nibbles, unpack_nibbles
+    rng = np.random.default_rng(0)
+    qmax = 2 ** (NIBBLE_BITS - 1) - 1
+    m = rng.integers(-qmax, qmax + 1, size=(n, 5), dtype=np.int8)
+    m = np.swapaxes(m, -1, axis) if axis != -1 else m
+    packed = pack_nibbles(jnp.asarray(m), axis=axis)
+    assert packed.shape[axis] == (m.shape[axis] + 1) // 2
+    out = unpack_nibbles(packed, m.shape[axis], axis=axis)
+    np.testing.assert_array_equal(np.asarray(out), m)

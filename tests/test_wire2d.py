@@ -198,6 +198,50 @@ def test_property_1d_2d_same_time_averaged_mean(D, M, vals, rows):
                                atol=2 * tol)
 
 
+# ----------------------------- mixed widths ---------------------------------
+
+def test_simulate_2d_mixed_widths():
+    """Per-leaf widths through the 2D sliced path: the w4 leaf lands
+    within its int4 grid of the true mean, the w8 leaves stay
+    bit-identical to the widths-free trace."""
+    D, M = 2, 4
+    tree = _stacked(jax.random.PRNGKey(8), D)
+    widths = {"w": 4, "layers": 4, "vec": 8, "scalar": 8}
+    d, r = simulate_wire_pmean_2d(tree, _init_res(tree, D, M), M, "int8",
+                                  widths=widths)
+    d8, r8 = simulate_wire_pmean_2d(tree, _init_res(tree, D, M), M,
+                                    "int8")
+    for k in ("w", "layers"):
+        true = np.mean(np.asarray(tree[k]), axis=0)
+        grid4 = np.max(np.abs(np.asarray(tree[k]))) / 7 * 2
+        np.testing.assert_allclose(np.asarray(d[k]), true, atol=4 * grid4)
+        assert not np.array_equal(np.asarray(d[k]), np.asarray(d8[k]))
+    for k in ("vec", "scalar"):
+        np.testing.assert_array_equal(np.asarray(d[k]), np.asarray(d8[k]))
+        np.testing.assert_array_equal(np.asarray(r[k]), np.asarray(r8[k]))
+
+
+def test_ef2d_mixed_time_average_unbiased():
+    """EF still telescopes to the true mean when leaves ride different
+    widths — the w4 leaf just converges on its coarser grid."""
+    K, D, M = 14, 2, 4
+    tree = _stacked(jax.random.PRNGKey(9), D)
+    widths = {"w": 4, "layers": 8, "vec": 4, "scalar": 8}
+    res = _init_res(tree, D, M)
+    acc = {k: jnp.zeros(v.shape[1:]) for k, v in tree.items()}
+    for _ in range(K):
+        d, res = simulate_wire_pmean_2d(tree, res, M, "int8",
+                                        widths=widths)
+        acc = {k: acc[k] + d[k] for k in acc}
+    for k in tree:
+        true = np.mean(np.asarray(tree[k]), axis=0)
+        qmax = 7.0 if widths[k] <= 4 else 127.0
+        grid = max(float(np.max(np.abs(np.asarray(tree[k])))), 1e-30) \
+            / qmax * 2
+        np.testing.assert_allclose(np.asarray(acc[k]) / K, true,
+                                   atol=grid + 1e-7)
+
+
 # ------------------------------ byte model ----------------------------------
 
 def test_wire2d_bytes_beat_1d_with_tp_replication():
@@ -238,6 +282,54 @@ def test_wire2d_shard_map_matches_simulate(D, M):
                                               np.asarray(ds[k]))
                 np.testing.assert_array_equal(np.asarray(r[k]),
                                               np.asarray(rs[k]))
+
+
+@multidevice
+@pytest.mark.parametrize("D,M", [(2, 4), (4, 2)])
+def test_wire2d_shard_map_matches_simulate_mixed_widths(D, M):
+    """The acceptance contract for mixed widths: the real 2D shard_map
+    collective is bit-for-bit equal to its simulator when leaves ride
+    different wire widths."""
+    mesh = jax.make_mesh((D, M), ("data", "model"))
+    tree = _stacked(jax.random.PRNGKey(10), D)
+    widths = {"w": 4, "layers": 4, "vec": 8, "scalar": 8}
+    res = _init_res(tree, D, M)
+    with mesh:
+        res_p = jax.device_put(res, ef_residual_sharding(res, mesh, "2d"))
+        d, r = jax.jit(lambda t, rr: ef_wire_pmean_2d(
+            t, rr, mesh, "int8", widths=widths))(tree, res_p)
+    ds, rs = simulate_wire_pmean_2d(tree, res, M, "int8", widths=widths)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(d[k]), np.asarray(ds[k]))
+        np.testing.assert_array_equal(np.asarray(r[k]), np.asarray(rs[k]))
+
+
+@multidevice
+@pytest.mark.parametrize("kind,bits", [("int8", 8), ("int8", 4),
+                                       ("bf16", 8)])
+def test_wire2d_leaf_bytes_pins_measured_trace(kind, bits):
+    """wire2d_leaf_bytes == the recorder's measured per-leaf trace bytes
+    at the leaf's ACTUAL wire width — for int8 at w8, nibble-packed w4,
+    and bf16 (the satellite contract: the byte model may not drift from
+    the traced collectives)."""
+    D, M = 2, 4
+    mesh = jax.make_mesh((D, M), ("data", "model"))
+    full = _stacked(jax.random.PRNGKey(11), D)
+    with mesh:
+        for name in ("w", "layers", "vec", "scalar"):
+            tree = {name: full[name]}
+            res = _init_res(tree, D, M)
+            res_p = jax.device_put(res,
+                                   ef_residual_sharding(res, mesh, "2d"))
+            fn = jax.jit(lambda t, rr: ef_wire_pmean_2d(
+                t, rr, mesh, kind, widths={name: bits}))
+            with record_wire_bytes() as rec:
+                fn.lower(tree, res_p)
+            stacked = name == "layers"
+            want = wire2d_leaf_bytes(full[name].shape[1:], D, M, kind,
+                                     stacked=stacked, bits=bits)
+            assert rec.total() == want, (name, kind, bits,
+                                         rec.records, want)
 
 
 @multidevice

@@ -88,6 +88,8 @@ def check_file(path: str) -> List[str]:
             if value is None or not _is_mutable_literal(value):
                 continue
             for name in _targets(node):
+                if name.startswith("__") and name.endswith("__"):
+                    continue  # dunder module attrs (__all__) are constants
                 if f"{rel}::{name}" in ALLOWLIST:
                     continue
                 problems.append(

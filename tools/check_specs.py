@@ -1,0 +1,74 @@
+"""CI gate: every shipped spec/plan JSON round-trips byte-exactly.
+
+``examples/specs/*.json`` are the golden run configurations users copy
+from; the loaders (``repro.api.RunSpec``, ``repro.core.plan
+.PrecisionPlan``) reject unknown fields and emit canonical JSON
+(sorted keys, 2-space indent, trailing newline).  This checker pins both
+directions: each shipped file must parse with the right loader AND
+re-serialize to exactly the bytes on disk — so a schema change that
+silently reinterprets or drops a field, or a hand-edit that drifts from
+canonical form, fails CI instead of shipping.
+
+File routing: ``plan_*.json`` are bare :class:`PrecisionPlan` width
+tables (what ``--plan`` consumes); everything else is a full
+:class:`RunSpec` (what ``--spec`` consumes).
+
+Usage (CI lint job):  python tools/check_specs.py
+Exit codes: 0 = clean, 1 = violations, 2 = bad invocation.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import sys
+from typing import List
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SPECS = os.path.join(ROOT, "examples", "specs")
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+
+def check_file(path: str) -> List[str]:
+    from repro.api.spec import RunSpec
+    from repro.core.plan import PrecisionPlan
+
+    rel = os.path.relpath(path, ROOT)
+    is_plan = os.path.basename(path).startswith("plan_")
+    loader = PrecisionPlan if is_plan else RunSpec
+    with open(path) as f:
+        raw = f.read()
+    try:
+        obj = loader.from_json(raw)
+    except Exception as e:
+        return [f"{rel}: does not parse as {loader.__name__}: "
+                f"{type(e).__name__}: {e}"]
+    out = obj.to_json()
+    if out != raw:
+        return [f"{rel}: not canonical {loader.__name__} JSON — "
+                f"round-trip changes the bytes (regenerate with "
+                f"`{loader.__name__}.from_file(p).save(p)`)"]
+    return []
+
+
+def main() -> int:
+    if not os.path.isdir(SPECS):
+        print(f"missing {SPECS}", file=sys.stderr)
+        return 2
+    files = sorted(glob.glob(os.path.join(SPECS, "*.json")))
+    if not files:
+        print(f"no spec files under {SPECS}", file=sys.stderr)
+        return 2
+    problems: List[str] = []
+    for path in files:
+        problems += check_file(path)
+    for p in problems:
+        print(f"FAIL {p}", file=sys.stderr)
+    if problems:
+        return 1
+    print(f"check_specs: {len(files)} spec/plan files under examples/specs "
+          f"round-trip byte-exactly")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
