@@ -37,7 +37,6 @@ import argparse
 import json
 import os
 import sys
-import time
 
 
 def main() -> None:
@@ -51,10 +50,15 @@ def main() -> None:
                     help="host data-parallel device count (forced via "
                          "XLA_FLAGS before jax init)")
     ap.add_argument("--reps", type=int, default=10)
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="write a jax.profiler trace of the timed "
+                         "reductions to DIR (view with tensorboard or "
+                         "xprof)")
     ap.add_argument("--out", default="BENCH_collectives.json")
     args = ap.parse_args()
     if args.smoke:
-        args.reps = 3
+        args.reps = 9               # p50 of 9 — launch-latency noise on
+        #                             1-core hosts swamps a 3-rep median
 
     flag = f"--xla_force_host_platform_device_count={args.devices}"
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " "
@@ -63,6 +67,8 @@ def main() -> None:
     import jax.numpy as jnp
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    import common                   # noqa: E402 — benchmarks/ is sys.path[0]
 
     from repro.api import (CompressionSpec, MeshSpec, RunSpec, build,
                            build_mesh)
@@ -91,47 +97,57 @@ def main() -> None:
             (n,) + tuple(x.shape), jnp.float32) * 1e-3, params)
 
     def time_reduce(fn, tree):
-        out = jax.block_until_ready(fn(tree))       # compile + warm
-        t0 = time.perf_counter()
-        for _ in range(args.reps):
-            out = jax.block_until_ready(fn(tree))
-        del out
-        return (time.perf_counter() - t0) / args.reps * 1e3
+        """Gate-worthy timing: warmup discarded, p50/p90/mean over reps."""
+        return common.time_stats(fn, tree, warmup=2, reps=args.reps)
 
-    def fp32_pmean(tree):
-        spec = jax.tree.map(
-            lambda leaf: P(("data",), *([None] * (leaf.ndim - 1))), tree)
-        return shard_map(
-            lambda t: jax.tree.map(
-                lambda x: jax.lax.pmean(x[0], ("data",)), t),
-            mesh=mesh, in_specs=(spec,),
-            out_specs=jax.tree.map(
-                lambda leaf: P(*([None] * (leaf.ndim - 1))), tree),
-            check_rep=False)(tree)
+    def fp32_pmean_for(mesh_obj):
+        # the ring all-reduce baseline: pmean over the data axis only
+        def fp32_pmean(tree):
+            spec = jax.tree.map(
+                lambda leaf: P(("data",), *([None] * (leaf.ndim - 1))),
+                tree)
+            return shard_map(
+                lambda t: jax.tree.map(
+                    lambda x: jax.lax.pmean(x[0], ("data",)), t),
+                mesh=mesh_obj, in_specs=(spec,),
+                out_specs=jax.tree.map(
+                    lambda leaf: P(*([None] * (leaf.ndim - 1))), tree),
+                check_rep=False)(tree)
+        return fp32_pmean
+
+    if args.profile:
+        jax.profiler.start_trace(args.profile)
 
     rows = []
     with mesh:
         placed = jax.device_put(stacked,
                                 ef_residual_sharding(stacked, mesh))
         # fp32 baseline: the ring all-reduce the wire path replaces
-        ms = time_reduce(jax.jit(fp32_pmean), placed)
+        st = time_reduce(jax.jit(fp32_pmean_for(mesh)), placed)
+        fp32_ms = st["p50_ms"]
         fp32_bytes = sum(collectives.fp32_allreduce_bytes(x.size, n)
                          for x in leaves)
         rows.append({"mode": "fp32", "bytes_on_wire_per_device": fp32_bytes,
                      "bytes_per_element": round(fp32_bytes / elements, 3),
-                     "step_ms": round(ms, 2), "reduction_vs_fp32": 1.0})
+                     "step_ms": round(st["p50_ms"], 2),
+                     "p50_ms": round(st["p50_ms"], 2),
+                     "p90_ms": round(st["p90_ms"], 2),
+                     "reduction_vs_fp32": 1.0})
         for kind in ("bf16", "int8"):
             fn = jax.jit(lambda t, k=kind:
                          collectives.ef_wire_pmean(t, mesh, k))
             with collectives.record_wire_bytes() as rec:
                 fn.lower(placed)                    # trace -> record bytes
-            ms = time_reduce(fn, placed)
+            st = time_reduce(fn, placed)
             b = rec.total()
             rows.append({
                 "mode": f"{kind}-wire",
                 "bytes_on_wire_per_device": b,
                 "bytes_per_element": round(b / elements, 3),
-                "step_ms": round(ms, 2),
+                "step_ms": round(st["p50_ms"], 2),
+                "p50_ms": round(st["p50_ms"], 2),
+                "p90_ms": round(st["p90_ms"], 2),
+                "step_ratio_vs_fp32": round(st["p50_ms"] / fp32_ms, 3),
                 "reduction_vs_fp32": round(fp32_bytes / b, 2)})
 
         # ---- mixed-precision section: every packable matmul layer on the
@@ -146,7 +162,7 @@ def main() -> None:
             t, mesh, "int8", widths=widths))
         with collectives.record_wire_bytes() as recm:
             fnm.lower(placed)
-        msm = time_reduce(fnm, placed)
+        stm = time_reduce(fnm, placed)
         bm = recm.total()
         mixed = {
             "plan_summary": plan.summary(),
@@ -158,7 +174,10 @@ def main() -> None:
                 {"mode": "int8-wire-mixed-w4w8",
                  "bytes_on_wire_per_device": bm,
                  "bytes_per_element": round(bm / elements, 3),
-                 "step_ms": round(msm, 2),
+                 "step_ms": round(stm["p50_ms"], 2),
+                 "p50_ms": round(stm["p50_ms"], 2),
+                 "p90_ms": round(stm["p90_ms"], 2),
+                 "step_ratio_vs_fp32": round(stm["p50_ms"] / fp32_ms, 3),
                  "reduction_vs_uniform": round(uniform_b / bm, 2)}],
         }
 
@@ -184,33 +203,60 @@ def main() -> None:
                 stacked_dm, ef_residual_sharding(stacked_dm, mesh_dm))
             res_placed = jax.device_put(
                 res2d, ef_residual_sharding(res2d, mesh_dm, layout="2d"))
+            # fp32 baseline on THIS mesh: D-device ring all-reduce plus
+            # the fp32 model-axis replication a TP step pays either way
+            st0 = time_reduce(jax.jit(fp32_pmean_for(mesh_dm)), placed_dm)
+            fp32_dm_ms = st0["p50_ms"]
+            fp32_b_dm = sum(collectives.fp32_allreduce_bytes(x.size, D)
+                            for x in leaves)
+            dm_rows.append({
+                "mode": "fp32",
+                "bytes_on_wire_per_device": fp32_b_dm,
+                "tp_replication_bytes": tp_repl,
+                "total_bytes_per_element": round(
+                    (fp32_b_dm + tp_repl) / elements, 3),
+                "step_ms": round(st0["p50_ms"], 2),
+                "p50_ms": round(st0["p50_ms"], 2),
+                "p90_ms": round(st0["p90_ms"], 2)})
             fn1 = jax.jit(lambda t: collectives.ef_wire_pmean(
                 t, mesh_dm, "int8"))
             with collectives.record_wire_bytes() as rec1:
                 fn1.lower(placed_dm)
-            ms1 = time_reduce(fn1, placed_dm)
+            st1 = time_reduce(fn1, placed_dm)
             total1 = rec1.total() + tp_repl
             dm_rows.append({
                 "mode": "int8-wire",
                 "bytes_on_wire_per_device": rec1.total(),
                 "tp_replication_bytes": tp_repl,
                 "total_bytes_per_element": round(total1 / elements, 3),
-                "step_ms": round(ms1, 2)})
+                "step_ms": round(st1["p50_ms"], 2),
+                "p50_ms": round(st1["p50_ms"], 2),
+                "p90_ms": round(st1["p90_ms"], 2),
+                "step_ratio_vs_fp32": round(
+                    st1["p50_ms"] / fp32_dm_ms, 3)})
             fn2 = jax.jit(lambda t, r: collectives.ef_wire_pmean_2d(
                 t, r, mesh_dm, "int8"))
             with collectives.record_wire_bytes() as rec2:
                 fn2.lower(placed_dm, res_placed)
-            ms2 = time_reduce(lambda _: fn2(placed_dm, res_placed), None)
+            st2 = time_reduce(lambda _: fn2(placed_dm, res_placed), None)
             total2 = rec2.total()
             dm_rows.append({
                 "mode": "int8-wire-2d",
                 "bytes_on_wire_per_device": rec2.total(),
                 "tp_replication_bytes": 0.0,
                 "total_bytes_per_element": round(total2 / elements, 3),
-                "step_ms": round(ms2, 2),
+                "step_ms": round(st2["p50_ms"], 2),
+                "p50_ms": round(st2["p50_ms"], 2),
+                "p90_ms": round(st2["p90_ms"], 2),
+                "step_ratio_vs_fp32": round(
+                    st2["p50_ms"] / fp32_dm_ms, 3),
                 "reduction_vs_1d": round(total1 / total2, 2)})
         mesh2d.append({"mesh": f"{D}x{M}", "spec": spec_2d.to_dict(),
                        "runs": dm_rows})
+
+    if args.profile:
+        jax.profiler.stop_trace()
+        print(f"profiler trace written to {args.profile}")
 
     result = {
         "bench": "collectives", "arch": cfg.name,

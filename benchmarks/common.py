@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Dict
 
 import jax
 
@@ -18,6 +18,27 @@ def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
         ts.append(time.perf_counter() - t0)
     ts.sort()
     return ts[len(ts) // 2] * 1e6
+
+
+def time_stats(fn: Callable, *args, warmup: int = 2,
+               reps: int = 10) -> Dict[str, float]:
+    """Gate-worthy wall-clock stats per call, in milliseconds.
+
+    ``warmup`` calls are discarded (the first one compiles), then
+    ``reps`` timed calls yield ``{"p50_ms", "p90_ms", "mean_ms"}`` —
+    medians, not means, so one scheduler hiccup cannot flip a CI
+    regression gate.  Blocks on jax results."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e3)
+    ts.sort()
+    p90 = ts[min(int(0.9 * (len(ts) - 1) + 0.5), len(ts) - 1)]
+    return {"p50_ms": ts[len(ts) // 2], "p90_ms": p90,
+            "mean_ms": sum(ts) / len(ts)}
 
 
 def emit(name: str, us_per_call: float, derived: str) -> str:

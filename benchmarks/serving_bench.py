@@ -84,6 +84,9 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--batch-slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="write a jax.profiler trace of the timed serving "
+                         "runs to DIR (view with tensorboard or xprof)")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
     if args.smoke:
@@ -103,6 +106,8 @@ def main() -> None:
         for packed in (False, True)]
     params, qstate = ctxs[0].init_state()
 
+    if args.profile:
+        jax.profiler.start_trace(args.profile)
     rows = []
     for ctx in ctxs:
         row = bench_engine(ctx, params, qstate,
@@ -114,6 +119,9 @@ def main() -> None:
               f"{row['decode_tokens_per_sec']} tok/s, mixed "
               f"{row['mixed_tokens_per_sec']} tok/s "
               f"({row['mixed_tokens']} tokens / {row['mixed_wall_s']}s)")
+    if args.profile:
+        jax.profiler.stop_trace()
+        print(f"profiler trace written to {args.profile}")
 
     fp_b, q_b = packed_nbytes(params), packed_nbytes(pack_tree(params))
     result = {

@@ -268,7 +268,8 @@ class RunContext:
             reduce=comp.reduce, mesh=self.mesh if comp.wire else None,
             wire_kind=self.spec.compression.wire_kind,
             wire_layout=comp.wire_layout if comp.wire else "auto",
-            wire_widths=self.plan)
+            wire_widths=self.plan,
+            wire_fused=self.spec.compression.fused)
         return self.wrap(step)
 
     def train_shardings(self, params, qstate, opt,

@@ -148,16 +148,23 @@ class CompressionSpec:
     * ``residual_layout`` — error-feedback residual placement;
       ``auto`` follows the resolved wire layout (``sharding
       .ef_residual_sharding``'s ``[n_data, ...]`` stack vs the sliced
-      ``[n_data, n_model, C]`` tree).
+      ``[n_data, n_model, C]`` tree);
+    * ``fused`` — the wire fast path: quantize/pack through the
+      ``kernels.wire_pack`` fused kernels with leaves exchanged in
+      size-bucketed pipelined buffers (bit-for-bit the per-leaf trace;
+      ``False`` keeps the one-collective-set-per-leaf reference).
     """
     kind: str = "none"
     wire_layout: str = "auto"
     residual_layout: str = "auto"
+    fused: bool = True
 
     def __post_init__(self):
         _check(self.kind in GRAD_COMPRESSION_KINDS,
                f"CompressionSpec.kind must be one of "
                f"{GRAD_COMPRESSION_KINDS}, got {self.kind!r}")
+        _check(isinstance(self.fused, bool),
+               f"CompressionSpec.fused must be a bool, got {self.fused!r}")
         _check(self.wire_layout in WIRE_LAYOUTS,
                f"CompressionSpec.wire_layout must be one of "
                f"{WIRE_LAYOUTS}, got {self.wire_layout!r}")

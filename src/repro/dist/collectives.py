@@ -42,6 +42,23 @@ per-shard math on a stacked ``[n, ...]`` tree, used by single-device
 tests and by the property tests; the 8-device CI job checks the
 ``shard_map`` path agrees with it bit-for-bit.
 
+Two execution strategies share this math (``fused=True`` default):
+
+fused / pipelined (the wall-clock fast path)
+    One amax ``pmax`` for the whole tree, quantize/pack/decode routed
+    through the ``kernels.wire_pack`` fused kernels, and the leaves
+    exchanged in size-bucketed column-concatenated buffers — bucket k+1
+    compresses while bucket k is in ``all_to_all`` (double-buffered
+    program order), collapsing ~3 collectives *per leaf* into ~3 per
+    bucket.  Bit-for-bit the per-leaf path: ``pmax`` is elementwise, so
+    pmax(concat) == concat(pmax); the collectives act on axis 0, so
+    column concatenation commutes with them; decode and residual math
+    never change.
+
+per-leaf (``fused=False``)
+    The original one-collective-set-per-leaf trace, kept as the
+    executable reference the fused path is tested against.
+
 :func:`ef_wire_pmean_2d` (below) is the 2D generalization: the exchange
 is additionally sliced over the tensor-parallel ``model`` axis, so each
 (data, model) device reduces only its 1/(D*M) slice and the model-axis
@@ -62,6 +79,13 @@ from ..core.plan import NIBBLE_BITS
 from .scope import Scoped
 
 WIRE_KINDS = ("int8", "bf16")
+
+# fused-path bucket budget: wire payload bytes per pipelined exchange
+# buffer.  Big enough that a smoke-scale tree rides one buffer (minimum
+# launch count), small enough that real models get >= 2 buckets and the
+# compress/exchange overlap; tests force tiny budgets to exercise the
+# multi-bucket pipeline.
+_WIRE_BUCKET_BYTES = 1 << 20
 
 # trace-time recorder for bytes-on-wire accounting (collectives_bench):
 # shapes are static, so appending (op, per-device bytes) while tracing
@@ -179,18 +203,13 @@ def _phase1_quantize(e: jax.Array, amax_rows: jax.Array, kind: str,
         payload = rows.astype(jnp.bfloat16)
         deq = payload.astype(jnp.float32)
         scale = jnp.ones((rows.shape[0],), jnp.float32)
-    else:
-        from ..kernels.qmatmul.ops import grid_exponent
-        from ..core.quantizer import _exp2i
-        f = grid_exponent(amax_rows, bits)
-        scale = _exp2i(-f)
-        qmax = 2 ** (bits - 1) - 1
-        payload = jnp.clip(jnp.round(rows / scale[:, None]),
-                           -qmax, qmax).astype(jnp.int8)
-        deq = payload.astype(jnp.float32) * scale[:, None]
-    residual = (jnp.asarray(e, jnp.float32)
-                - deq.astype(jnp.float32).reshape(e.shape))
-    return payload, scale, residual
+        residual = (jnp.asarray(e, jnp.float32)
+                    - deq.astype(jnp.float32).reshape(e.shape))
+        return payload, scale, residual
+    from ..kernels import wire_pack
+    payload, scale, res_rows = wire_pack.quantize_leaf(rows, amax_rows,
+                                                       bits)
+    return payload, scale, res_rows.reshape(e.shape)
 
 
 def _phase2_requantize(chunk_sum: jax.Array, n: int, kind: str
@@ -316,6 +335,219 @@ def _wire_leaf(e: jax.Array, axes: Tuple[str, ...], n: int, kind: str,
 
 
 # ---------------------------------------------------------------------------
+# fused / pipelined tree-level exchange
+# ---------------------------------------------------------------------------
+
+def _bucket_leaves(byte_sizes, bucket_bytes: int):
+    """Greedy size-bucketed partition of leaf indices, largest first:
+    each bucket's wire payload stays under ``bucket_bytes`` (a single
+    oversized leaf gets its own bucket).  Deterministic in the leaf
+    order, so the fused trace is stable across runs."""
+    order = sorted(range(len(byte_sizes)),
+                   key=lambda i: (-byte_sizes[i], i))
+    buckets, cur, acc = [], [], 0.0
+    for i in order:
+        if cur and acc + byte_sizes[i] > bucket_bytes:
+            buckets.append(cur)
+            cur, acc = [], 0.0
+        cur.append(i)
+        acc += byte_sizes[i]
+    if cur:
+        buckets.append(cur)
+    return buckets
+
+
+def _pipelined_collective(buckets, build, collective):
+    """Double-buffered bucket pipeline: bucket k's collective is issued
+    BEFORE bucket k+1's payload is built, so program order lets an async
+    backend overlap compression with the bytes in flight (and even a
+    synchronous backend pays ~#buckets collective launches instead of
+    one per leaf)."""
+    if not buckets:
+        return []
+    outs = [None] * len(buckets)
+    pending = build(0)
+    for b in range(len(buckets)):
+        inflight = collective(pending)
+        if b + 1 < len(buckets):
+            pending = build(b + 1)
+        outs[b] = inflight
+    return outs
+
+
+def _split_cols(buf, idxs, cols, axis):
+    """Undo a column concatenation: static per-leaf slices of ``buf``."""
+    out = {}
+    off = 0
+    for i in idxs:
+        out[i] = jax.lax.slice_in_dim(buf, off, off + cols[i], axis=axis)
+        off += cols[i]
+    return out
+
+
+def _wire_tree_fused(flat: List[jax.Array], axes: Tuple[str, ...], n: int,
+                     kind: str, flags: Tuple[bool, ...],
+                     widths: Tuple[int, ...], bucket_bytes: int
+                     ) -> List[Tuple[jax.Array, jax.Array]]:
+    """Fused/pipelined twin of mapping :func:`_wire_leaf` over a tree.
+
+    One amax ``pmax`` covers every leaf (pmax is elementwise, so the
+    pmax of the concatenated amax rows equals the concatenation of the
+    per-leaf pmaxes), quantize/pack/decode run through the
+    ``kernels.wire_pack`` fused kernels, and both exchange phases move
+    size-bucketed buffers of column-concatenated leaf chunks — the
+    collectives act on axis 0, so splitting columns after the exchange
+    reproduces every per-leaf result exactly.  Byte records keep the
+    per-leaf legacy tags and values: their totals ARE the fused
+    buffers' bytes (tests pin both the equality with the per-leaf path
+    and the recorded totals).
+    """
+    from ..kernels import wire_pack as wp
+    from ..kernels.qmatmul.ops import unpack_nibbles
+    N = len(flat)
+    f32 = [jnp.asarray(e, jnp.float32) for e in flat]
+    rows = [_layer_rows(e, st) for e, st in zip(f32, flags)]
+    dims = []
+    for r in rows:
+        L, Pn = r.shape
+        T = L * Pn
+        dims.append((L, Pn, T, -(-T // n)))
+    nibs = [_nibble_wire(kind, b) for b in widths]
+    # nibble leaves pre-pad their chunk columns to EVEN with a zero
+    # mantissa on scale 1 — the very zero nibble pack_nibbles would add —
+    # so packing the column-concatenated bucket equals concatenating the
+    # per-leaf packs (no pair straddles a leaf boundary)
+    ceven = [(-(-C // 2) * 2 if nib else C)
+             for (_, _, _, C), nib in zip(dims, nibs)]
+    cols = [(ce // 2 if nib else ce) for ce, nib in zip(ceven, nibs)]
+    item = 2 if kind == "bf16" else 1
+    # width-homogeneous buckets: one saturating clip bound (and one
+    # nibble flag) per bucket, so each bucket quantizes, requantizes and
+    # decodes in a SINGLE fused elementwise chain over its concatenated
+    # buffer — per-leaf work shrinks to pad/reshape/slice
+    classes: dict = {}
+    for i in range(N):
+        classes.setdefault(widths[i] if kind != "bf16" else 0,
+                           []).append(i)
+    buckets = []
+    for key in sorted(classes):
+        idxs = classes[key]
+        for b in _bucket_leaves([n * cols[i] * item for i in idxs],
+                                bucket_bytes):
+            buckets.append([idxs[j] for j in b])
+
+    amaxes: List[Optional[jax.Array]] = [None] * N
+    if kind != "bf16":
+        gmax = jax.lax.pmax(
+            jnp.concatenate([jnp.max(jnp.abs(r), axis=1) for r in rows]),
+            axes)
+        off = 0
+        for i, (L, _, _, _) in enumerate(dims):
+            amaxes[i] = jax.lax.slice_in_dim(gmax, off, off + L)
+            off += L
+            _record("pmax.scale", _ring_allreduce_bytes(L * 4, n))
+
+    def chunked(i):
+        """One leaf's (values, scales) in padded chunk layout [n, ceven]
+        — positionwise identical to the rows layout, chunk row d = the
+        slice shard d will own."""
+        L, Pn, T, C = dims[i]
+        e = jnp.pad(rows[i].reshape(-1), (0, n * C - T)).reshape(n, C)
+        if ceven[i] != C:
+            e = jnp.pad(e, ((0, 0), (0, ceven[i] - C)))
+        if kind == "bf16":
+            return e, None
+        s = jnp.pad(
+            jnp.broadcast_to(wp.grid_scale(amaxes[i], widths[i])[:, None],
+                             (L, Pn)).reshape(-1),
+            (0, n * C - T), constant_values=1.0).reshape(n, C)
+        if ceven[i] != C:
+            s = jnp.pad(s, ((0, 0), (0, ceven[i] - C)),
+                        constant_values=1.0)
+        return e, s
+
+    bstate: List[Any] = [None] * len(buckets)
+
+    def compress(b):
+        idxs = buckets[b]
+        pieces = [chunked(i) for i in idxs]
+        E = jnp.concatenate([p[0] for p in pieces], axis=1)
+        if kind == "bf16":
+            payload = E.astype(jnp.bfloat16)
+            S, R = None, E - payload.astype(jnp.float32)
+        else:
+            S = jnp.concatenate([p[1] for p in pieces], axis=1)
+            payload, R = wp.quantize_chunks(E, S, widths[idxs[0]])
+        bstate[b] = (S, R)
+        for i in idxs:
+            _record(f"all_to_all.{'int4' if nibs[i] else kind}",
+                    (n - 1) / n * (n * cols[i]) * item)
+        if nibs[idxs[0]]:
+            payload = wp.pack_chunks(payload)
+        return payload
+
+    a2a = _pipelined_collective(
+        buckets, compress,
+        lambda x: jax.lax.all_to_all(x, axes, 0, 0, tiled=False))
+
+    err2c: List[Any] = [None] * len(buckets)
+
+    def requant(b):
+        idxs = buckets[b]
+        x = a2a[b]
+        if nibs[idxs[0]]:
+            x = unpack_nibbles(x, sum(ceven[i] for i in idxs), axis=-1)
+        chunk_sum = jnp.sum(x.astype(jnp.float32 if kind == "bf16"
+                                     else jnp.int32), axis=0)
+        q2, err2c[b] = _phase2_requantize(chunk_sum, n, kind)
+        if nibs[idxs[0]]:
+            q2 = wp.pack_chunks(q2)
+        for i in idxs:
+            _record(f"all_gather.{'int4' if nibs[i] else kind}",
+                    (n - 1) * cols[i] * q2.dtype.itemsize)
+        return q2
+
+    gath = _pipelined_collective(
+        buckets, requant,
+        lambda x: jax.lax.all_gather(x, axes, axis=0, tiled=False))
+
+    idx = jnp.int32(0)
+    for ax in axes:
+        idx = idx * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
+
+    out: List[Any] = [None] * N
+    for b, idxs in enumerate(buckets):
+        f = gath[b]
+        if nibs[idxs[0]]:
+            f = unpack_nibbles(f, sum(ceven[i] for i in idxs), axis=-1)
+        S, R = bstate[b]
+        if kind == "bf16":
+            dcat = f.astype(jnp.float32) / n
+            ecat = err2c[b]
+        else:
+            dcat = wp.dequant_sum(f, S, _phase2_shift(n), n)
+            ecat = err2c[b] * jax.lax.dynamic_slice_in_dim(
+                S, idx, 1, axis=0)[0]
+        off = 0
+        for i in idxs:
+            _, _, T, C = dims[i]
+            e = flat[i]
+            ce = ceven[i]
+            d = jax.lax.slice_in_dim(dcat, off, off + ce, axis=1)[:, :C]
+            delivered = d.reshape(-1)[:T].reshape(e.shape).astype(e.dtype)
+            residual = jax.lax.slice_in_dim(
+                R, off, off + ce, axis=1)[:, :C].reshape(-1)[:T] \
+                .reshape(e.shape)
+            ev = jax.lax.slice_in_dim(ecat, off, off + ce, axis=0)[:C]
+            scatter = jax.lax.dynamic_update_slice(
+                jnp.zeros((n * C,), jnp.float32), ev, (idx * C,))[:T]
+            out[i] = (delivered,
+                      (residual + scatter.reshape(e.shape)).astype(e.dtype))
+            off += ce
+    return out
+
+
+# ---------------------------------------------------------------------------
 # public API
 # ---------------------------------------------------------------------------
 
@@ -335,14 +567,21 @@ def _check_kind(kind: str) -> None:
 
 def _wire_pmean_impl(e_stacked: Any, mesh, kind: str,
                      flags: Tuple[bool, ...],
-                     widths: Tuple[int, ...]) -> Tuple[Any, Any]:
+                     widths: Tuple[int, ...], fused: bool = True,
+                     bucket_bytes: int = _WIRE_BUCKET_BYTES
+                     ) -> Tuple[Any, Any]:
     axes = data_axis_names(mesh)
     n = data_axis_size(mesh)
 
     def body(tree):
         flat, treedef = jax.tree.flatten(tree)
-        pairs = [_wire_leaf(leaf[0], axes, n, kind, st, b)
-                 for leaf, st, b in zip(flat, flags, widths)]
+        squeezed = [leaf[0] for leaf in flat]
+        if fused:
+            pairs = _wire_tree_fused(squeezed, axes, n, kind, flags,
+                                     widths, bucket_bytes)
+        else:
+            pairs = [_wire_leaf(leaf, axes, n, kind, st, b)
+                     for leaf, st, b in zip(squeezed, flags, widths)]
         delivered = jax.tree.unflatten(treedef, [d for d, _ in pairs])
         residual = jax.tree.unflatten(treedef, [r[None] for _, r in pairs])
         return delivered, residual
@@ -356,18 +595,23 @@ def _wire_pmean_impl(e_stacked: Any, mesh, kind: str,
                      check_rep=False)(e_stacked)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
 def _ef_wire_pmean_cv(e_stacked: Any, mesh, kind: str,
                       flags: Tuple[bool, ...],
-                      widths: Tuple[int, ...]) -> Tuple[Any, Any]:
-    return _wire_pmean_impl(e_stacked, mesh, kind, flags, widths)
+                      widths: Tuple[int, ...], fused: bool,
+                      bucket_bytes: int) -> Tuple[Any, Any]:
+    return _wire_pmean_impl(e_stacked, mesh, kind, flags, widths, fused,
+                            bucket_bytes)
 
 
-def _ef_wire_fwd(e_stacked, mesh, kind, flags, widths):
-    return _ef_wire_pmean_cv(e_stacked, mesh, kind, flags, widths), None
+def _ef_wire_fwd(e_stacked, mesh, kind, flags, widths, fused,
+                 bucket_bytes):
+    return _ef_wire_pmean_cv(e_stacked, mesh, kind, flags, widths, fused,
+                             bucket_bytes), None
 
 
-def _ef_wire_bwd(mesh, kind, flags, widths, _res, cts):
+def _ef_wire_bwd(mesh, kind, flags, widths, fused, bucket_bytes, _res,
+                 cts):
     ct_delivered, _ct_residual = cts
     n = data_axis_size(mesh)
     ct_e = jax.tree.map(
@@ -380,8 +624,9 @@ _ef_wire_pmean_cv.defvjp(_ef_wire_fwd, _ef_wire_bwd)
 
 
 def ef_wire_pmean(e_stacked: Any, mesh, kind: str = "int8",
-                  stacked: Any = None, widths: Any = None
-                  ) -> Tuple[Any, Any]:
+                  stacked: Any = None, widths: Any = None,
+                  fused: bool = True,
+                  bucket_bytes: Optional[int] = None) -> Tuple[Any, Any]:
     """Compressed mean all-reduce with error feedback, inside the wire.
 
     ``e_stacked`` is a pytree whose leaves carry a leading ``[n_data]``
@@ -397,15 +642,24 @@ def ef_wire_pmean(e_stacked: Any, mesh, kind: str = "int8",
     ``core.plan.PrecisionPlan.wire_bits_tree``); ``None`` is uniform int8
     — the exact legacy trace.  Widths <= 4 ride nibble-packed int4 bytes.
 
+    ``fused`` (default) runs the pipelined tree-level exchange —
+    bit-for-bit the per-leaf trace, with quantize/pack fused into the
+    ``kernels.wire_pack`` kernels and the leaves bucketed so compression
+    of bucket k+1 overlaps bucket k's collective; ``fused=False`` keeps
+    the original one-collective-set-per-leaf reference.  ``bucket_bytes``
+    overrides the pipeline bucket budget (mainly for tests).
+
     The custom VJP passes the ``delivered`` cotangent through as the
     transpose of an uncompressed shard mean, so the backward of a loss
     containing this collective is unchanged and ``jax.value_and_grad``
     composes; residual cotangents are dropped (state, not value).
     """
     _check_kind(kind)
+    bb = _WIRE_BUCKET_BYTES if bucket_bytes is None else int(bucket_bytes)
     return _ef_wire_pmean_cv(e_stacked, mesh, kind,
                              _stacked_flags(e_stacked, stacked),
-                             _width_flags(e_stacked, widths))
+                             _width_flags(e_stacked, widths),
+                             bool(fused), bb)
 
 
 # ---------------------------------------------------------------------------
@@ -644,6 +898,220 @@ def _wire2d_leaf(g: jax.Array, r: jax.Array, S: Tuple[int, ...],
     return delivered.astype(dtype), new_r.astype(r.dtype)
 
 
+def _wire2d_tree_fused(gflat: List[jax.Array], rflat: List[jax.Array],
+                       shapes, ks, daxes: Tuple[str, ...],
+                       maxes: Tuple[str, ...], D: int, M: int, kind: str,
+                       flags: Tuple[bool, ...], widths: Tuple[int, ...],
+                       bucket_bytes: int
+                       ) -> List[Tuple[jax.Array, jax.Array]]:
+    """Fused/pipelined twin of mapping :func:`_wire2d_leaf` over a tree:
+    one 2D amax ``pmax`` for every leaf, wire_pack kernels for the
+    elementwise stages, and all three exchanges (data all_to_all, data
+    all_gather, model all_gather) pipelined over size-bucketed
+    column-concatenated buffers.  Bit-for-bit the per-leaf path, by the
+    same commutation arguments as :func:`_wire_tree_fused`; byte records
+    keep the per-leaf legacy tags and values, including the pure-TP op
+    set (no data-exchange records when D == 1)."""
+    from ..kernels import wire_pack as wp
+    from ..kernels.qmatmul.ops import unpack_nibbles
+    axes2d = tuple(daxes) + tuple(maxes)
+    N = len(gflat)
+    midx = (jax.lax.axis_index(maxes[0]) if maxes else jnp.int32(0))
+
+    info = []
+    for g, r, S, k, st in zip(gflat, rflat, shapes, ks, flags):
+        g32 = jnp.asarray(g, jnp.float32)
+        L, Prow_full = _wire2d_rows(S, st)
+        if k is not None:
+            Tb = g32.size
+            C = -(-Tb // D)
+            Cp = D * C
+            sl = jnp.pad(g32.reshape(-1), (0, Cp - Tb))
+            row_of = jnp.minimum(jnp.arange(Cp) // (Tb // L), L - 1)
+        else:
+            T = g32.size
+            Tb = -(-T // M)
+            C = -(-Tb // D)
+            Cp = D * C
+            flat_full = jnp.pad(g32.reshape(-1), (0, M * Cp - T))
+            sl = jax.lax.dynamic_slice(flat_full, (midx * Cp,), (Cp,))
+            pos = midx * Cp + jnp.arange(Cp)
+            row_of = jnp.minimum(pos // Prow_full, L - 1)
+        info.append(dict(e=sl + jnp.asarray(r, jnp.float32), row_of=row_of,
+                         L=L, Prow_full=Prow_full, C=C, Cp=Cp, Tb=Tb,
+                         B=tuple(g.shape)))
+
+    scales: List[Optional[jax.Array]] = [None] * N
+    if kind != "bf16":
+        gmax = jax.lax.pmax(jnp.concatenate(
+            [jnp.zeros((inf["L"],), jnp.float32).at[inf["row_of"]].max(
+                jnp.abs(inf["e"])) for inf in info]), axes2d)
+        off = 0
+        for i, inf in enumerate(info):
+            L = inf["L"]
+            amax = jax.lax.slice_in_dim(gmax, off, off + L)
+            off += L
+            _record("pmax.scale", _ring_allreduce_bytes(L * 4, D * M))
+            scales[i] = wp.grid_scale(amax, widths[i])
+
+    nibs = [_nibble_wire(kind, w) for w in widths]
+    item = 2 if kind == "bf16" else 1
+    cols = [(-(-inf["C"] // 2) if nib else inf["C"])
+            for inf, nib in zip(info, nibs)]
+    buckets = _bucket_leaves([D * c * item for c in cols], bucket_bytes)
+
+    state: List[Any] = [None] * N
+    acc_t = jnp.float32 if kind == "bf16" else jnp.int32
+
+    def compress(i):
+        """Quantize leaf i's slice -> payload [D, C] in the wire dtype."""
+        inf = info[i]
+        C = inf["C"]
+        if kind == "bf16":
+            s_sl = jnp.ones((inf["Cp"],), jnp.float32)
+            payload = inf["e"].astype(jnp.bfloat16)
+            res1 = inf["e"] - payload.astype(jnp.float32)
+            payload = payload.reshape(D, C)
+        else:
+            s_sl = scales[i][inf["row_of"]]
+            payload, res = wp.quantize_chunks(
+                inf["e"].reshape(D, C), s_sl.reshape(D, C), widths[i])
+            res1 = res.reshape(-1)
+        state[i] = (s_sl, res1)
+        return payload
+
+    err2s: List[Any] = [None] * N
+    slq: List[Any] = [None] * N
+    if D > 1:
+        def build1(b):
+            parts = []
+            for i in buckets[b]:
+                p = compress(i)
+                wtag = "int4" if nibs[i] else kind
+                if nibs[i]:
+                    p = wp.pack_chunks(p)
+                    _record(f"all_to_all.{wtag}", (D - 1) / D
+                            * (D * p.shape[-1]) * p.dtype.itemsize)
+                else:
+                    _record(f"all_to_all.{wtag}",
+                            (D - 1) / D * info[i]["Cp"] * p.dtype.itemsize)
+                parts.append(p)
+            return jnp.concatenate(parts, axis=1)
+
+        a2a = _pipelined_collective(
+            buckets, build1,
+            lambda x: jax.lax.all_to_all(x, daxes, 0, 0, tiled=False))
+        ex: dict = {}
+        for b, bucket in enumerate(buckets):
+            ex.update(_split_cols(a2a[b], bucket, cols, axis=1))
+
+        def build2(b):
+            parts = []
+            for i in buckets[b]:
+                C = info[i]["C"]
+                x = ex[i]
+                if nibs[i]:
+                    x = unpack_nibbles(x, C, axis=-1)
+                q2, err2s[i] = _phase2_requantize(
+                    jnp.sum(x.astype(acc_t), axis=0), D, kind)
+                wtag = "int4" if nibs[i] else kind
+                if nibs[i]:
+                    q2 = wp.pack_chunks(q2)
+                _record(f"all_gather.{wtag}",
+                        (D - 1) * q2.shape[0] * q2.dtype.itemsize)
+                parts.append(q2)
+            return jnp.concatenate(parts)
+
+        gath2 = _pipelined_collective(
+            buckets, build2,
+            lambda x: jax.lax.all_gather(x, daxes, axis=0, tiled=False))
+        for b, bucket in enumerate(buckets):
+            got = _split_cols(gath2[b], bucket, cols, axis=1)
+            for i in bucket:
+                f = got[i]
+                if nibs[i]:
+                    f = unpack_nibbles(f, info[i]["C"], axis=-1)
+                slq[i] = f.reshape(info[i]["Cp"])
+    else:
+        for i in range(N):
+            payload = compress(i)
+            q2, err2s[i] = _phase2_requantize(
+                payload.reshape(-1).astype(acc_t), D, kind)
+            slq[i] = q2.reshape(info[i]["Cp"])
+
+    gth: List[Any] = [None] * N
+    if maxes and M > 1:
+        mcols = [(-(-inf["Cp"] // 2) if nib else inf["Cp"])
+                 for inf, nib in zip(info, nibs)]
+
+        def build3(b):
+            parts = []
+            for i in buckets[b]:
+                mg = slq[i]
+                wtag = "int4" if nibs[i] else kind
+                if nibs[i]:
+                    mg = wp.pack_chunks(mg)
+                _record(f"all_gather.{wtag}.model",
+                        (M - 1) * mg.shape[0] * mg.dtype.itemsize)
+                parts.append(mg)
+            return jnp.concatenate(parts)
+
+        gath3 = _pipelined_collective(
+            buckets, build3,
+            lambda x: jax.lax.all_gather(x, maxes, axis=0, tiled=False))
+        for b, bucket in enumerate(buckets):
+            got = _split_cols(gath3[b], bucket, mcols, axis=1)
+            for i in bucket:
+                f = got[i]
+                if nibs[i]:
+                    f = unpack_nibbles(f, info[i]["Cp"], axis=-1)
+                gth[i] = f
+    else:
+        for i in range(N):
+            gth[i] = slq[i][None]
+
+    didx = jnp.int32(0)
+    for ax in daxes:
+        didx = didx * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
+
+    out = []
+    shift_k = _phase2_shift(D)
+    for i, (g, r, S, k) in enumerate(zip(gflat, rflat, shapes, ks)):
+        inf = info[i]
+        s_sl, res1 = state[i]
+        gath = gth[i]
+        C, Cp = inf["C"], inf["Cp"]
+        if k is not None:
+            if kind == "bf16":
+                dec = gath.astype(jnp.float32) / D
+            else:
+                dec = wp.dequant_sum(gath, s_sl[None], shift_k, D)
+            blocks = dec[:, :inf["Tb"]].reshape(
+                (gath.shape[0],) + inf["B"])
+            delivered = jnp.concatenate(
+                [blocks[m] for m in range(blocks.shape[0])], axis=k)
+        else:
+            flat_q = gath.reshape(-1)
+            if kind == "bf16":
+                dec = flat_q.astype(jnp.float32) / D
+            else:
+                row_full = jnp.minimum(
+                    jnp.arange(flat_q.shape[0]) // inf["Prow_full"],
+                    inf["L"] - 1)
+                dec = wp.dequant_sum(flat_q, scales[i][row_full],
+                                     shift_k, D)
+            delivered = dec[:_prod(S)].reshape(S)
+        if kind != "bf16":
+            err2_val = err2s[i] * jax.lax.dynamic_slice(
+                s_sl, (didx * C,), (C,))
+        else:
+            err2_val = err2s[i]
+        new_r = res1 + jax.lax.dynamic_update_slice(
+            jnp.zeros((Cp,), jnp.float32), err2_val, (didx * C,))
+        out.append((delivered.astype(g.dtype), new_r.astype(r.dtype)))
+    return out
+
+
 def _wire2d_specs(grads_stacked: Any, mesh):
     """(grad in_specs, residual spec tree, delivered out_specs) for the 2D
     collective: gradients enter stacked ``[n_data]`` over the data axes
@@ -674,7 +1142,9 @@ def _wire2d_specs(grads_stacked: Any, mesh):
 
 def _wire2d_impl(grads_stacked: Any, residual: Any, mesh, kind: str,
                  flags: Tuple[bool, ...],
-                 widths: Tuple[int, ...]) -> Tuple[Any, Any]:
+                 widths: Tuple[int, ...], fused: bool = True,
+                 bucket_bytes: int = _WIRE_BUCKET_BYTES
+                 ) -> Tuple[Any, Any]:
     from .sharding import model_axis_for
     daxes = data_axis_names(mesh)
     maxes = _wire2d_model_axes(mesh)
@@ -687,11 +1157,16 @@ def _wire2d_impl(grads_stacked: Any, residual: Any, mesh, kind: str,
     def body(gtree, rtree):
         gflat, treedef = jax.tree.flatten(gtree)
         rflat, _ = jax.tree.flatten(rtree)
-        pairs = [
-            _wire2d_leaf(g[0], r[0, 0], S, kk, daxes, maxes, D, M, kind,
-                         st, b)
-            for g, r, S, kk, st, b in zip(gflat, rflat, shapes, ks, flags,
-                                          widths)]
+        if fused:
+            pairs = _wire2d_tree_fused(
+                [g[0] for g in gflat], [r[0, 0] for r in rflat], shapes,
+                ks, daxes, maxes, D, M, kind, flags, widths, bucket_bytes)
+        else:
+            pairs = [
+                _wire2d_leaf(g[0], r[0, 0], S, kk, daxes, maxes, D, M,
+                             kind, st, b)
+                for g, r, S, kk, st, b in zip(gflat, rflat, shapes, ks,
+                                              flags, widths)]
         delivered = jax.tree.unflatten(treedef, [d for d, _ in pairs])
         new_res = jax.tree.unflatten(treedef,
                                      [nr[None, None] for _, nr in pairs])
@@ -703,19 +1178,23 @@ def _wire2d_impl(grads_stacked: Any, residual: Any, mesh, kind: str,
                          grads_stacked, residual)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7))
 def _wire2d_cv(grads_stacked: Any, residual: Any, mesh, kind: str,
                flags: Tuple[bool, ...],
-               widths: Tuple[int, ...]) -> Tuple[Any, Any]:
-    return _wire2d_impl(grads_stacked, residual, mesh, kind, flags, widths)
+               widths: Tuple[int, ...], fused: bool,
+               bucket_bytes: int) -> Tuple[Any, Any]:
+    return _wire2d_impl(grads_stacked, residual, mesh, kind, flags,
+                        widths, fused, bucket_bytes)
 
 
-def _wire2d_fwd(grads_stacked, residual, mesh, kind, flags, widths):
+def _wire2d_fwd(grads_stacked, residual, mesh, kind, flags, widths, fused,
+                bucket_bytes):
     return _wire2d_cv(grads_stacked, residual, mesh, kind, flags,
-                      widths), None
+                      widths, fused, bucket_bytes), None
 
 
-def _wire2d_bwd(mesh, kind, flags, widths, _res, cts):
+def _wire2d_bwd(mesh, kind, flags, widths, fused, bucket_bytes, _res,
+                cts):
     ct_delivered, ct_residual = cts
     n = data_axis_size(mesh)
     ct_g = jax.tree.map(
@@ -730,7 +1209,9 @@ _wire2d_cv.defvjp(_wire2d_fwd, _wire2d_bwd)
 
 def ef_wire_pmean_2d(grads_stacked: Any, residual: Any, mesh,
                      kind: str = "int8", stacked: Any = None,
-                     widths: Any = None) -> Tuple[Any, Any]:
+                     widths: Any = None, fused: bool = True,
+                     bucket_bytes: Optional[int] = None
+                     ) -> Tuple[Any, Any]:
     """2D-sliced compressed mean all-reduce with error feedback.
 
     ``grads_stacked`` is a pytree whose leaves carry a leading
@@ -744,14 +1225,20 @@ def ef_wire_pmean_2d(grads_stacked: Any, residual: Any, mesh,
     ``widths`` optionally carries per-leaf wire widths (matching int
     tree); ``None`` is uniform int8 — the exact legacy trace.
 
+    ``fused``/``bucket_bytes`` select the pipelined tree-level exchange
+    exactly as in :func:`ef_wire_pmean` (default on; bit-for-bit the
+    per-leaf trace).
+
     The custom VJP passes the ``delivered`` cotangent through as the
     transpose of an uncompressed shard mean (``ct / n_data`` per shard);
     residual cotangents are dropped (state, not value).
     """
     _check_kind(kind)
+    bb = _WIRE_BUCKET_BYTES if bucket_bytes is None else int(bucket_bytes)
     return _wire2d_cv(grads_stacked, residual, mesh, kind,
                       _stacked_flags(grads_stacked, stacked),
-                      _width_flags(grads_stacked, widths))
+                      _width_flags(grads_stacked, widths),
+                      bool(fused), bb)
 
 
 def simulate_wire_pmean_2d(grads_stacked: Any, residual: Any, n_model: int,

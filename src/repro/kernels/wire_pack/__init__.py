@@ -1,0 +1,15 @@
+"""Fused wire compression kernels for the compressed gradient collective.
+
+One kernel family covers the hot elementwise stages of the int8-on-the-
+wire exchange (``dist.collectives``): per-row 2^-f grid-exponent
+computation + saturating quantize (+ the phase-1 residual) in one pass,
+nibble packing of chunk payloads, and the phase-2 dequant-accumulate.
+``ops`` selects the compiled Pallas kernel on TPU and the bit-identical
+jnp reference elsewhere (tests/test_wire_pack.py pins both equal in
+interpret mode).
+"""
+from .ops import (dequant_sum, grid_scale, pack_chunks, quantize_chunks,
+                  quantize_leaf, use_fused_kernel)
+
+__all__ = ["dequant_sum", "grid_scale", "pack_chunks", "quantize_chunks",
+           "quantize_leaf", "use_fused_kernel"]

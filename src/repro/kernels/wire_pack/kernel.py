@@ -1,0 +1,179 @@
+"""Pallas TPU kernels: fused wire compression for the gradient collective.
+
+Phase 1 of the int8-on-the-wire exchange is three elementwise sweeps in
+the reference path — grid-exponent from the pmax'd amax, saturating
+quantize, nibble pack — plus a fourth to materialize the error-feedback
+residual.  Each kernel here fuses its stage into one VMEM pass over
+(block_rows, lanes) tiles:
+
+  * ``wire_quantize_rows``  — amax -> 2^-f grid -> round/clip -> int8
+    mantissas AND the fp32 residual, per stacked-layer row, one pass
+  * ``wire_quantize_sflat`` — same with a per-position scale (the 2D
+    sliced path, where one device's slice crosses layer-row boundaries)
+  * ``wire_pack_rows``      — two int4 mantissas per byte (wire format
+    of sub-5-bit plan widths), lifted from ``qmatmul.pack_nibbles``
+  * ``wire_dequant_rows``   — phase-2 decode ``q * 2^shift * s / n``
+
+The grid math reuses ``hgq_quantize``'s exact exponent-field exp2
+(integer shifts, never an ulp off) with the bitcast twin of
+``core.quantizer.floor_log2``; the mantissa range comes from
+``qmatmul.mantissa_max``.  ``ref.py`` holds the jnp reference these are
+asserted bit-identical to (tests/test_wire_pack.py, interpret mode);
+``ops.py`` picks the backend and handles padding/alignment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..hgq_quantize.kernel import DEFAULT_BLOCK_ROWS, LANE, _exact_exp2
+
+
+def _floor_log2_pos(x):
+    """floor(log2 x) for positive *normal* fp32 via exponent-field
+    extraction — bit-identical to ``core.quantizer.floor_log2`` (frexp)
+    on that domain, and integer ops only, so it lowers in-kernel.  The
+    grid ratio qmax/max(amax, 1e-12) is normal for every finite amax a
+    gradient can produce."""
+    ex = (jax.lax.bitcast_convert_type(x, jnp.int32) >> 23) & 0xFF
+    return ex.astype(jnp.float32) - 127.0
+
+
+def _grid_scale_math(amax, qmax):
+    """amax -> the 2^-f wire grid step; the exact math of
+    ``qmatmul.grid_exponent`` + ``_exp2i(-f)``: cap f so amax fits in
+    +-qmax mantissas, backing off one where rounding would still
+    saturate."""
+    fcap = _floor_log2_pos(qmax / jnp.maximum(amax, 1e-12))
+    f = jnp.where(jnp.floor(amax * _exact_exp2(fcap) + 0.5) > qmax,
+                  fcap - 1.0, fcap)
+    return _exact_exp2(-f)
+
+
+def _quantize_rows_kernel(x_ref, a_ref, q_ref, s_ref, r_ref, *, qmax):
+    s = _grid_scale_math(a_ref[...], qmax)        # [br, 1]
+    x = x_ref[...]
+    q = jnp.clip(jnp.round(x / s), -qmax, qmax)   # integral fp32
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = s
+    r_ref[...] = x - q * s
+
+
+def _quantize_sflat_kernel(x_ref, s_ref, q_ref, r_ref, *, qmax):
+    s = s_ref[...]                                # same tile shape as x
+    x = x_ref[...]
+    q = jnp.clip(jnp.round(x / s), -qmax, qmax)
+    q_ref[...] = q.astype(jnp.int8)
+    r_ref[...] = x - q * s
+
+
+def _pack_kernel(q_ref, o_ref):
+    q = q_ref[...]
+    br, c = q.shape
+    pairs = q.reshape(br, c // 2, 2)
+    o_ref[...] = jnp.bitwise_or(
+        jnp.bitwise_and(pairs[..., 0], jnp.int8(0x0F)),
+        jnp.left_shift(pairs[..., 1], 4)).astype(jnp.int8)
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref, *, mul, n):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * mul * s_ref[...] / n
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_rows",
+                                             "interpret"))
+def wire_quantize_rows(rows: jax.Array, amax: jax.Array, *, bits: int = 8,
+                       block_rows: int = DEFAULT_BLOCK_ROWS,
+                       interpret: bool = True):
+    """[L, P] fp32 rows + [L] amax -> (int8 [L, P], scale [L],
+    residual fp32 [L, P]); P must be lane-aligned (ops.py pads)."""
+    from ..qmatmul.ops import mantissa_max
+    L, P = rows.shape
+    assert P % LANE == 0, f"cols {P} must be lane-aligned"
+    br = min(block_rows, L)
+    grid = (pl.cdiv(L, br),)
+    kern = functools.partial(_quantize_rows_kernel,
+                             qmax=float(mantissa_max(bits)))
+    tile = pl.BlockSpec((br, P), lambda i: (i, 0))
+    col = pl.BlockSpec((br, 1), lambda i: (i, 0))
+    q, s, r = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[tile, col],
+        out_specs=[tile, col, tile],
+        out_shape=[jax.ShapeDtypeStruct((L, P), jnp.int8),
+                   jax.ShapeDtypeStruct((L, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((L, P), jnp.float32)],
+        interpret=interpret,
+    )(rows.astype(jnp.float32), amax.reshape(L, 1).astype(jnp.float32))
+    return q, s[:, 0], r
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_rows",
+                                             "interpret"))
+def wire_quantize_sflat(x: jax.Array, s: jax.Array, *, bits: int = 8,
+                        block_rows: int = DEFAULT_BLOCK_ROWS,
+                        interpret: bool = True):
+    """[R, C] fp32 + per-position [R, C] scale -> (int8, residual)."""
+    from ..qmatmul.ops import mantissa_max
+    R, C = x.shape
+    assert C % LANE == 0, f"cols {C} must be lane-aligned"
+    br = min(block_rows, R)
+    grid = (pl.cdiv(R, br),)
+    kern = functools.partial(_quantize_sflat_kernel,
+                             qmax=float(mantissa_max(bits)))
+    tile = pl.BlockSpec((br, C), lambda i: (i, 0))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[tile, tile],
+        out_specs=[tile, tile],
+        out_shape=[jax.ShapeDtypeStruct((R, C), jnp.int8),
+                   jax.ShapeDtypeStruct((R, C), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32), s.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def wire_pack_rows(q: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                   interpret: bool = True) -> jax.Array:
+    """[R, C] int4-range mantissas -> [R, C // 2] packed bytes; C must be
+    2*lane-aligned so the packed tile stays lane-aligned."""
+    R, C = q.shape
+    assert C % (2 * LANE) == 0, f"cols {C} must be 2*lane-aligned"
+    br = min(block_rows, R)
+    grid = (pl.cdiv(R, br),)
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, C // 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C // 2), jnp.int8),
+        interpret=interpret,
+    )(q.astype(jnp.int8))
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "n", "block_rows",
+                                             "interpret"))
+def wire_dequant_rows(q: jax.Array, s: jax.Array, *, shift: int, n: int,
+                      block_rows: int = DEFAULT_BLOCK_ROWS,
+                      interpret: bool = True) -> jax.Array:
+    """[R, C] mantissa sums + [R, C] scale -> fp32 ``q * 2^shift * s / n``
+    (the phase-2 delivered-mean decode) in one pass."""
+    R, C = q.shape
+    assert C % LANE == 0, f"cols {C} must be lane-aligned"
+    br = min(block_rows, R)
+    grid = (pl.cdiv(R, br),)
+    kern = functools.partial(_dequant_kernel, mul=float(2 ** shift), n=n)
+    tile = pl.BlockSpec((br, C), lambda i: (i, 0))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[tile, tile],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.float32),
+        interpret=interpret,
+    )(q, s.astype(jnp.float32))

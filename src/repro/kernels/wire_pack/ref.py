@@ -1,0 +1,66 @@
+"""Reference math of the fused wire quantize-pack family.
+
+Pure jnp, and *definitionally* the semantics of the compressed-wire
+collective's elementwise stages: ``quantize_leaf_ref`` is the exact
+int8 branch of ``dist.collectives._phase1_quantize`` (per-row 2^-f grid
+from :func:`repro.kernels.qmatmul.ops.grid_exponent`, saturating
+round-to-nearest-even, phase-1 residual), ``dequant_sum_ref`` the exact
+phase-2 decode expression, ``pack_chunks_ref`` the exact nibble wire
+format.  Off-TPU this IS the fast path — XLA fuses the chain — while
+``kernel.py`` is the single-VMEM-pass Pallas realization;
+tests/test_wire_pack.py asserts the two bit-identical.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...core.quantizer import _exp2i
+from ..qmatmul.ops import grid_exponent, mantissa_max, pack_nibbles
+
+
+def grid_scale(amax: jax.Array, bits: int = 8) -> jax.Array:
+    """Per-row wire grid step ``2^-f``: ``_exp2i(-grid_exponent(amax))``
+    — the one scale definition phase 1 quantizes on and phase 2 decodes
+    with (exact power of two, so divide == multiply-by-inverse)."""
+    return _exp2i(-grid_exponent(amax, bits))
+
+
+def quantize_leaf_ref(rows: jax.Array, amax: jax.Array, bits: int = 8
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """[L, P] fp32 rows + per-row global amax -> (int8 mantissas [L, P],
+    scale [L], fp32 residual [L, P]).  ``residual = rows - dequant`` is
+    the phase-1 error the caller feeds back next step."""
+    scale = grid_scale(amax, bits)
+    qmax = mantissa_max(bits)
+    q = jnp.clip(jnp.round(rows / scale[:, None]), -qmax,
+                 qmax).astype(jnp.int8)
+    residual = rows - q.astype(jnp.float32) * scale[:, None]
+    return q, scale, residual
+
+
+def quantize_chunks_ref(e: jax.Array, s: jax.Array, bits: int = 8
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Per-position-scale variant (the 2D sliced path, where a flat
+    slice crosses stacked-layer row boundaries): ``e`` and ``s`` share a
+    shape -> (int8 mantissas, fp32 residual)."""
+    qmax = mantissa_max(bits)
+    q = jnp.clip(jnp.round(e / s), -qmax, qmax).astype(jnp.int8)
+    return q, e - q.astype(jnp.float32) * s
+
+
+def pack_chunks_ref(q: jax.Array) -> jax.Array:
+    """Nibble-pack int4-range mantissas two per byte along the last axis
+    (the sub-5-bit wire format; odd lengths pad one zero nibble)."""
+    return pack_nibbles(q, axis=-1)
+
+
+def dequant_sum_ref(q: jax.Array, s: jax.Array, shift: int,
+                    n: int) -> jax.Array:
+    """Phase-2 decode: gathered requantized mantissa sums -> the fp32
+    delivered mean contribution ``q * 2^shift * s / n`` (``shift`` is
+    ``_phase2_shift(n)``; evaluation order matches the collective's
+    original inline expression exactly)."""
+    return q.astype(jnp.float32) * (2 ** shift) * s / n

@@ -61,7 +61,8 @@ def make_train_step(forward: Forward, loss_fn: LossFn, tcfg: TrainConfig,
                     grad_tx: Optional[Callable] = None,
                     reduce: str = "full", mesh=None,
                     wire_kind: str = "int8", wire_layout: str = "auto",
-                    wire_widths: Optional[Any] = None):
+                    wire_widths: Optional[Any] = None,
+                    wire_fused: bool = True):
     """Build the pure train step.
 
     With ``grad_tx`` (e.g. ``dist.ef_compress`` partial application: a
@@ -93,7 +94,9 @@ def make_train_step(forward: Forward, loss_fn: LossFn, tcfg: TrainConfig,
     widths for the compressed reduction — its ``wire_bits_tree`` over the
     gradient tree feeds the collective's ``widths`` argument.  ``None``
     (or a uniform-int8 plan, which callers normalize to ``None``) traces
-    the exact legacy int8 wire.
+    the exact legacy int8 wire.  ``wire_fused`` (default) selects the
+    fused/pipelined wire fast path (``CompressionSpec.fused``) — the
+    delivered values are bit-for-bit the per-leaf trace either way.
 
     Global-norm clipping applies to the *delivered* mean gradient
     (post-reduce compression clips before — the true pre-reduce global
@@ -131,7 +134,8 @@ def make_train_step(forward: Forward, loss_fn: LossFn, tcfg: TrainConfig,
         else:
             return _make_compressed_step(forward, loss_fn, tcfg, beta_sched,
                                          lr_sched, mesh, wire_kind, n_data,
-                                         wire_layout, wire_widths)
+                                         wire_layout, wire_widths,
+                                         wire_fused)
 
     def _step(params, qstate, opt: AdamWState, batch, step, tx_state):
         beta = beta_sched(step)
@@ -168,7 +172,8 @@ def _make_compressed_step(forward: Forward, loss_fn: LossFn,
                           tcfg: TrainConfig, beta_sched, lr_sched,
                           mesh, wire_kind: str, n_data: int,
                           wire_layout: str = "1d",
-                          wire_widths: Optional[Any] = None):
+                          wire_widths: Optional[Any] = None,
+                          wire_fused: bool = True):
     """The int8-on-the-wire train step (see ``make_train_step`` docstring).
 
     Per-shard gradients are materialized with a leading ``[n_data]`` axis
@@ -211,11 +216,12 @@ def _make_compressed_step(forward: Forward, loss_fn: LossFn,
             # so the grad+residual add happens on the slice, inside the
             # collective — gradients go in raw
             delivered, residual = collectives.ef_wire_pmean_2d(
-                grads, tx_state.residual, mesh, wire_kind, widths=widths)
+                grads, tx_state.residual, mesh, wire_kind, widths=widths,
+                fused=wire_fused)
         else:
             err = jax.tree.map(jnp.add, grads, tx_state.residual)
             delivered, residual = collectives.ef_wire_pmean(
-                err, mesh, wire_kind, widths=widths)
+                err, mesh, wire_kind, widths=widths, fused=wire_fused)
         delivered, gnorm = clip_by_global_norm(delivered, tcfg.clip_norm)
         params, opt = adamw_update(delivered, opt, params, lr=lr,
                                    weight_decay=tcfg.weight_decay)

@@ -251,3 +251,69 @@ def test_bad_override_is_exit_2(gate_env, capsys):
     fresh = _write(tmp, "BENCH_serving.json", SERVING)
     assert gate.main([fresh, "--baseline-dir", base,
                       "--override", "nonsense"]) == 2
+
+
+# ------------------- step_ratio_vs_fp32 + timing tolerance ------------------
+
+def _with_ratios():
+    data = copy.deepcopy(COLLECTIVES)
+    data["runs"][1]["step_ratio_vs_fp32"] = 1.15
+    data["mesh2d"][0]["runs"][1]["step_ratio_vs_fp32"] = 1.2
+    return data
+
+
+def test_extract_step_ratio_metrics():
+    m = gate.extract_metrics(_with_ratios())
+    assert m["collectives.int8-wire.step_ratio_vs_fp32"] == (1.15, "lower")
+    assert m["collectives[2x4].int8-wire-2d.step_ratio_vs_fp32"] == \
+        (1.2, "lower")
+    assert "collectives.fp32.step_ratio_vs_fp32" not in m
+
+
+def test_gate_fails_on_injected_step_ratio_regression(gate_env, capsys):
+    """The tentpole wall-clock contract: int8-wire losing ground against
+    the fp32 ring (ratio rising beyond the timing tolerance) MUST fail
+    CI even if absolute step_ms noise were overridden away."""
+    tmp, base = gate_env
+    _write(base, "BENCH_collectives.json", _with_ratios())
+    bad = _with_ratios()
+    bad["runs"][1]["step_ratio_vs_fp32"] = 1.9          # 1.15 -> +65%
+    fresh = _write(tmp, "BENCH_collectives.json", bad)
+    assert gate.main([fresh, "--baseline-dir", base,
+                      "--override", "collectives*step_ms=5.0"]) == 1
+    err = capsys.readouterr().err
+    assert "step_ratio_vs_fp32" in err and "rose" in err
+    bad2d = _with_ratios()
+    bad2d["mesh2d"][0]["runs"][1]["step_ratio_vs_fp32"] = 2.4
+    fresh = _write(tmp, "BENCH_collectives.json", bad2d)
+    assert gate.main([fresh, "--baseline-dir", base,
+                      "--override", "collectives*step_ms=5.0"]) == 1
+
+
+def test_builtin_timing_tolerance_wider_than_default():
+    """Timing metrics get the built-in tolerances (25% step_ms, 50%
+    step_ratio), so a 20% wall-clock wobble passes where a 20% byte rise
+    fails — without any --override."""
+    base = gate.extract_metrics(_with_ratios())
+    wobble = _with_ratios()
+    wobble["runs"][1]["step_ms"] *= 1.2
+    wobble["runs"][1]["step_ratio_vs_fp32"] *= 1.2
+    fails, _ = gate.compare(base, gate.extract_metrics(wobble), 0.10, [],
+                            strict=False)
+    assert fails == []
+    bytes_up = _with_ratios()
+    bytes_up["runs"][1]["bytes_per_element"] *= 1.2
+    fails, _ = gate.compare(base, gate.extract_metrics(bytes_up), 0.10,
+                            [], strict=False)
+    assert len(fails) == 1 and "bytes_per_element" in fails[0]
+
+
+def test_user_override_beats_builtin_timing_default():
+    """--override always wins over the built-in timing tolerance: a user
+    can TIGHTEN the step_ms gate below 25%."""
+    base = gate.extract_metrics(COLLECTIVES)
+    wobble = copy.deepcopy(COLLECTIVES)
+    wobble["runs"][1]["step_ms"] *= 1.2
+    fails, _ = gate.compare(base, gate.extract_metrics(wobble), 0.10,
+                            [("collectives*step_ms", 0.05)], strict=False)
+    assert len(fails) == 1 and "step_ms" in fails[0]

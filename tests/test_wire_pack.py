@@ -1,0 +1,182 @@
+"""kernels.wire_pack — the fused quantize-pack family behind the wire.
+
+The contract under test: the Pallas kernels (forced on, interpreted, so
+any backend runs them) are BIT-IDENTICAL to the jnp reference, and the
+reference is definitionally the collective's legacy elementwise math
+(``grid_exponent``/``_exp2i`` grids, saturating round, ``pack_nibbles``
+wire format, the exact phase-2 decode expression).  Shapes deliberately
+include odd tails that straddle the kernel's lane padding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.quantizer import _exp2i
+from repro.kernels import wire_pack
+from repro.kernels.qmatmul.ops import (grid_exponent, mantissa_max,
+                                       pack_nibbles, unpack_nibbles)
+from repro.kernels.wire_pack import ref
+
+KERNEL = dict(use_kernel=True, interpret=True)
+REF = dict(use_kernel=False)
+
+# stacked [L, P] rows and flat single-row leaves, with odd / sub-lane /
+# multi-tile tails
+SHAPES = [(1, 1), (1, 120), (3, 40), (4, 129), (7, 257)]
+
+
+def _rows(shape, seed=0, scale=1.0):
+    r = jax.random.normal(jax.random.PRNGKey(seed), shape,
+                          jnp.float32) * scale
+    amax = jnp.max(jnp.abs(r), axis=tuple(range(1, r.ndim)))
+    return r, amax
+
+
+# ------------------------ kernel == reference -------------------------------
+
+@pytest.mark.parametrize("bits", [4, 5, 6, 7, 8])
+@pytest.mark.parametrize("shape", SHAPES)
+def test_quantize_leaf_kernel_matches_ref(bits, shape):
+    rows, amax = _rows(shape, seed=bits)
+    qk, sk, rk = wire_pack.quantize_leaf(rows, amax, bits, **KERNEL)
+    qr, sr, rr = wire_pack.quantize_leaf(rows, amax, bits, **REF)
+    np.testing.assert_array_equal(np.asarray(qk), np.asarray(qr))
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+    np.testing.assert_array_equal(np.asarray(rk), np.asarray(rr))
+    assert qk.dtype == jnp.int8 and qk.shape == shape
+    assert int(np.max(np.abs(np.asarray(qk)))) <= mantissa_max(bits)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("shape", SHAPES)
+def test_quantize_chunks_kernel_matches_ref(bits, shape):
+    """Per-position-scale variant (the 2D sliced path): scales are real
+    2^-f grid steps that vary along the row, not a single broadcast."""
+    e, _ = _rows(shape, seed=10 + bits)
+    amax = jnp.abs(e) + jnp.float32(1e-3)       # positionwise pseudo-amax
+    s = wire_pack.grid_scale(amax.reshape(-1), bits).reshape(e.shape)
+    qk, rk = wire_pack.quantize_chunks(e, s, bits, **KERNEL)
+    qr, rr = wire_pack.quantize_chunks(e, s, bits, **REF)
+    np.testing.assert_array_equal(np.asarray(qk), np.asarray(qr))
+    np.testing.assert_array_equal(np.asarray(rk), np.asarray(rr))
+
+
+@pytest.mark.parametrize("shape", [(1, 1), (1, 7), (2, 8), (3, 129),
+                                   (2, 4, 33)])
+def test_pack_chunks_matches_pack_nibbles(shape):
+    """The kernel's byte stream IS the qmatmul nibble wire format —
+    including the odd-tail zero nibble and >2-D leading axes."""
+    q = jax.random.randint(jax.random.PRNGKey(3), shape, -7, 8,
+                           jnp.int32).astype(jnp.int8)
+    pk = wire_pack.pack_chunks(q, **KERNEL)
+    pr = wire_pack.pack_chunks(q, **REF)
+    want = pack_nibbles(q, axis=-1)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(pr), np.asarray(want))
+    # pack -> unpack round-trips in-range int4 mantissas exactly
+    back = unpack_nibbles(pk, shape[-1], axis=-1)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+@pytest.mark.parametrize("shift,n", [(0, 1), (1, 2), (2, 3), (2, 4),
+                                     (3, 5), (3, 8)])
+def test_dequant_sum_kernel_matches_ref(shift, n):
+    """Kernel == reference under the SAME jit regime (the collective
+    always runs jitted; for non-power-of-two n, XLA's reciprocal-multiply
+    folding of /n differs from an eager true divide by 1 ulp, identically
+    on both paths)."""
+    q = jax.random.randint(jax.random.PRNGKey(4), (3, 37), -127, 128,
+                           jnp.int32).astype(jnp.int8)
+    s = wire_pack.grid_scale(
+        jnp.abs(jax.random.normal(jax.random.PRNGKey(5), (37,))) + 0.1)
+    dk = jax.jit(lambda q, s: wire_pack.dequant_sum(
+        q, s, shift, n, **KERNEL))(q, s[None, :])
+    dr = jax.jit(lambda q, s: wire_pack.dequant_sum(
+        q, s, shift, n, **REF))(q, s[None, :])
+    want = q.astype(jnp.float32) * (2 ** shift) * s[None, :] / n
+    np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
+    np.testing.assert_allclose(np.asarray(dr), np.asarray(want),
+                               rtol=2e-7)
+
+
+# --------------------- reference == legacy collective math ------------------
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_grid_scale_is_legacy_grid(bits):
+    """grid_scale == _exp2i(-grid_exponent): an exact power of two whose
+    mantissas never exceed qmax — the one grid definition shared by the
+    wire collective, its simulators, and the kernels."""
+    amax = jnp.asarray([1e-12, 1e-3, 0.5, 1.0, 127.0, 3e4], jnp.float32)
+    s = wire_pack.grid_scale(amax, bits)
+    np.testing.assert_array_equal(
+        np.asarray(s), np.asarray(_exp2i(-grid_exponent(amax, bits))))
+    frac, _ = np.frexp(np.asarray(s))
+    assert np.all(frac == 0.5)                  # exact powers of two
+    q = np.round(np.asarray(amax) / np.asarray(s))
+    assert np.all(q <= mantissa_max(bits))
+
+
+def test_quantize_leaf_is_legacy_phase1():
+    """quantize_leaf reproduces the collective's original inline phase-1
+    expression term for term (grid, saturating round, residual)."""
+    rows, amax = _rows((3, 41), seed=9, scale=2.3)
+    q, s, r = wire_pack.quantize_leaf(rows, amax, 8, **REF)
+    scale = _exp2i(-grid_exponent(amax, 8))
+    want_q = jnp.clip(jnp.round(rows / scale[:, None]), -127,
+                      127).astype(jnp.int8)
+    want_r = rows - want_q.astype(jnp.float32) * scale[:, None]
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(want_q))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(scale))
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(want_r))
+
+
+def test_use_fused_kernel_backend_dispatch():
+    """Off-TPU the jnp reference is the fast path (use_fused_kernel
+    False); the kernels stay reachable via the explicit override."""
+    assert wire_pack.use_fused_kernel() == (jax.default_backend() == "tpu")
+
+
+# --------------------------- property tests ---------------------------------
+
+@settings(max_examples=20)
+@given(st.lists(st.floats(min_value=-100.0, max_value=100.0), min_size=1,
+                max_size=40),
+       st.integers(min_value=2, max_value=8))
+def test_property_quantize_leaf_kernel_matches_ref(vals, bits):
+    rows = jnp.asarray(vals, jnp.float32)[None, :]
+    amax = jnp.max(jnp.abs(rows), axis=1)
+    qk, sk, rk = wire_pack.quantize_leaf(rows, amax, bits, **KERNEL)
+    qr, sr, rr = wire_pack.quantize_leaf(rows, amax, bits, **REF)
+    np.testing.assert_array_equal(np.asarray(qk), np.asarray(qr))
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+    np.testing.assert_array_equal(np.asarray(rk), np.asarray(rr))
+    # the decomposition identity EF relies on: q * s + residual == rows
+    got = np.asarray(qk, np.float32) * np.asarray(sk)[:, None] \
+        + np.asarray(rk)
+    np.testing.assert_array_equal(got, np.asarray(rows))
+
+
+@settings(max_examples=20)
+@given(st.integers(min_value=1, max_value=33),
+       st.integers(min_value=1, max_value=4))
+def test_property_pack_odd_tails(C, R):
+    """Any (rows, odd-or-even columns) combination packs byte-identically
+    to pack_nibbles and round-trips through unpack_nibbles."""
+    q = jax.random.randint(jax.random.PRNGKey(C * 31 + R), (R, C), -7, 8,
+                           jnp.int32).astype(jnp.int8)
+    pk = wire_pack.pack_chunks(q, **KERNEL)
+    np.testing.assert_array_equal(np.asarray(pk),
+                                  np.asarray(pack_nibbles(q, axis=-1)))
+    np.testing.assert_array_equal(
+        np.asarray(unpack_nibbles(pk, C, axis=-1)), np.asarray(q))
+
+
+def test_ref_module_is_the_dispatch_reference():
+    """ops with use_kernel=False is exactly ref.* (no drift between the
+    dispatch layer and the reference module)."""
+    rows, amax = _rows((2, 19), seed=13)
+    for a, b in zip(wire_pack.quantize_leaf(rows, amax, 4, **REF),
+                    ref.quantize_leaf_ref(rows, amax, 4)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
