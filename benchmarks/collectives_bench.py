@@ -191,7 +191,7 @@ def main() -> None:
                           compression=CompressionSpec(kind="int8-wire-2d"))
         mesh_dm = build_mesh(spec_2d.mesh)
         stacked_dm = jax.tree.map(
-            lambda x: jax.random.normal(
+            lambda x, D=D: jax.random.normal(
                 jax.random.PRNGKey(x.size % 9973),
                 (D,) + tuple(x.shape), jnp.float32) * 1e-3, params)
         res2d = collectives.ef_wire2d_init(params, D, M)

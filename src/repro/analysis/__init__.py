@@ -1,0 +1,32 @@
+"""Static analysis over compiled programs and library source.
+
+Two rule registries, one shape:
+
+* :data:`PROGRAM_RULES` (``analysis.rules``) run over
+  :class:`ProgramArtifacts` — the traced jaxpr + compiled HLO of each
+  spec-built train step and serving decode tick (``analysis.program``).
+  Parsers live in ``analysis.hlo`` (collectives, replica groups,
+  input-output aliases) and ``analysis.jaxpr`` (explicit collectives
+  with logical axis names).  ``analysis.report`` serializes the census
+  and diffs it against the committed golden
+  (``benchmarks/baselines/PROGRAMS.json``) — see
+  ``tools/lint_programs.py``.
+* :data:`SOURCE_RULES` (``analysis.ast_rules``) run over ``src/repro``
+  source text — see ``tools/check_no_globals.py``.
+
+Tests share these parsers (``strip_metadata``, ``parse_collectives``,
+``train_step_hlo``) instead of hand-rolling HLO regexes.
+"""
+from .ast_rules import (SOURCE_RULES, SourceFile, SourceRule,  # noqa: F401
+                        check_source)
+from .hlo import (COLLECTIVE_OPS, SCALAR_MAX, Collective,  # noqa: F401
+                  input_output_aliases, parse_collectives,
+                  parse_replica_groups, strip_metadata)
+from .jaxpr import (COLLECTIVE_PRIMITIVES, ExplicitCollective,  # noqa: F401
+                    explicit_collectives, iter_eqns)
+from .program import (ProgramArtifacts, artifacts_for_spec,  # noqa: F401
+                      decode_artifacts, train_artifacts, train_step_hlo,
+                      train_traced)
+from .report import (collect, compare, direction_for, dumps,  # noqa: F401
+                     extract_metrics, program_report, tolerance_for)
+from .rules import (PROGRAM_RULES, Rule, Violation, run_rules)  # noqa: F401

@@ -1,0 +1,203 @@
+"""Declarative invariant rules over compiled program artifacts.
+
+Each :class:`Rule` is (name, doc, applies?, check) — ``check`` returns
+:class:`Violation`\\ s, an empty list means the invariant holds.  The
+registry ``PROGRAM_RULES`` is an immutable tuple so the module passes
+the repo's own no-module-level-mutable-state gate without allowlisting.
+
+The dtype-flow invariants run over the *explicit* collectives of the
+traced jaxpr (``analysis.jaxpr``): those are exactly the exchanges the
+repo wrote — the wire all_to_all/all_gather, the scale pmax — with
+logical axis names attached.  The compiled HLO additionally contains
+GSPMD-inserted collectives (FSDP weight gathers, TP partial-sum
+reductions); those are legitimate f32 traffic and are gated by the
+census baselines in ``analysis.report``, not by hard rules here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Tuple
+
+from .hlo import SCALAR_MAX
+from .program import ProgramArtifacts
+
+def _wire_payload(kind: str) -> Tuple[str, ...]:
+    """jaxpr-level dtype names a wire payload may travel as: s8 grads /
+    nibble-packed u8 pairs for the int8 kinds, bf16 for the bf16 wire."""
+    return ("bfloat16",) if kind == "bf16" else ("int8", "uint8")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    program: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.program}: [{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    name: str
+    doc: str
+    applies: Callable[[ProgramArtifacts], bool]
+    check: Callable[[ProgramArtifacts], List[Violation]]
+
+    def run(self, art: ProgramArtifacts) -> List[Violation]:
+        return self.check(art) if self.applies(art) else []
+
+
+def _is_wire_train(art: ProgramArtifacts) -> bool:
+    return (art.kind == "train" and bool(art.meta.get("wire"))
+            and art.mesh_shape[0] * art.mesh_shape[1] > 1)
+
+
+# -- dtype-flow ----------------------------------------------------------
+
+def _check_wire_dtypes(art: ProgramArtifacts) -> List[Violation]:
+    """Every explicit collective moving more than scalar-class traffic
+    must carry the plan's wire payload dtype — a gradient-sized f32
+    exchange is exactly the silent-upcast leak HGQ exists to prevent.
+    Scalar-class traffic (the amax pmax, loss/gnorm scalars) may stay
+    f32: it is O(layers), not O(params)."""
+    allowed = _wire_payload(art.meta.get("wire_payload", "int8"))
+    out = []
+    for c in art.explicit_collectives():
+        if c.numel < SCALAR_MAX:
+            continue
+        if c.dtype not in allowed:
+            out.append(Violation(
+                "wire-dtype", art.name,
+                f"{c.primitive} over {c.axes} moves {c.dtype}"
+                f"{list(c.dims)} ({c.numel} elems) — wire payload must "
+                f"be one of {allowed}; scalar-class f32 is only allowed "
+                f"under {SCALAR_MAX} elems"))
+    return out
+
+
+def _check_wire_present(art: ProgramArtifacts) -> List[Violation]:
+    """A wire-compressed step with no explicit payload collective over
+    the data axis means the exchange silently fell back to the dense
+    GSPMD path — the compression did nothing."""
+    allowed = _wire_payload(art.meta.get("wire_payload", "int8"))
+    if art.mesh_shape[0] == 1:
+        return []          # no data axis to exchange over
+    for c in art.explicit_collectives():
+        if c.over("data") and c.dtype in allowed and c.numel >= SCALAR_MAX:
+            return []
+    return [Violation(
+        "wire-present", art.name,
+        f"no explicit {allowed} collective over the data axis — the "
+        f"compressed wire exchange is missing from the traced program")]
+
+
+def _check_no_f64(art: ProgramArtifacts) -> List[Violation]:
+    """f64 anywhere in a compiled module means x64 leaked in — every
+    HGQ width fits in f32/bf16/intN and doubles would silently halve
+    matmul throughput."""
+    if " f64[" in art.hlo or "=f64[" in art.hlo or "(f64[" in art.hlo:
+        return [Violation("no-f64", art.name,
+                          "compiled module contains f64 values")]
+    return []
+
+
+# -- donation / aliasing -------------------------------------------------
+
+def _check_donation(art: ProgramArtifacts) -> List[Violation]:
+    """Donated buffers (params, optimizer mu/nu, EF residual) must come
+    back as input-output aliases in the compiled module; a dropped
+    donation doubles peak memory for that tree silently."""
+    want = art.meta.get("donated_leaves", 0)
+    got = art.aliased_buffers()
+    if got < want:
+        return [Violation(
+            "donation", art.name,
+            f"compiled module aliases {got} buffers, but at least {want} "
+            f"donated leaves (params + opt.mu/nu + EF residual) must "
+            f"round-trip in place")]
+    return []
+
+
+def _check_decode_donation(art: ProgramArtifacts) -> List[Violation]:
+    """The decode tick donates its KV/state cache tree; zero aliases
+    means every token copies the full cache."""
+    if art.aliased_buffers() == 0:
+        return [Violation(
+            "decode-donation", art.name,
+            "decode step has no input-output aliases — the donated "
+            "KV/state cache is being copied every token")]
+    return []
+
+
+# -- packed serving ------------------------------------------------------
+
+def _check_packed_weights(art: ProgramArtifacts) -> List[Violation]:
+    """A packed-serving program must actually take its weights as
+    integer parameters: f32 parameter bytes at or above the unpacked
+    tree size mean the pack was dropped before compilation."""
+    import re
+    header = art.hlo.split("\n\n", 1)[0]
+    m = re.search(r"entry_computation_layout=\{\((.*?)\)->", header)
+    if not m:
+        return [Violation("packed-weights", art.name,
+                          "could not locate entry_computation_layout")]
+    params = re.findall(r"(\w+)\[([\d,]*)\]", m.group(1))
+    int_bytes = f32_bytes = 0
+    for dtype, dims in params:
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        if dtype in ("s8", "u8", "s4", "u4"):
+            int_bytes += n
+        elif dtype == "f32":
+            f32_bytes += 4 * n
+    out = []
+    if int_bytes == 0:
+        out.append(Violation(
+            "packed-weights", art.name,
+            "packed_serving spec but the decode program has no integer "
+            "weight parameters"))
+    unpacked = art.meta.get("unpacked_param_bytes", 0)
+    if unpacked and f32_bytes >= unpacked:
+        out.append(Violation(
+            "packed-weights", art.name,
+            f"f32 parameter bytes ({f32_bytes}) >= unpacked tree size "
+            f"({unpacked}) — weights are not being served packed"))
+    return out
+
+
+PROGRAM_RULES: Tuple[Rule, ...] = (
+    Rule("wire-dtype",
+         "explicit collectives >= SCALAR_MAX elems carry the wire "
+         "payload dtype (s8 / nibble-packed u8, or bf16), never f32",
+         _is_wire_train, _check_wire_dtypes),
+    Rule("wire-present",
+         "a wire-compressed step has an explicit payload collective "
+         "over the data axis (no silent dense fallback)",
+         _is_wire_train, _check_wire_present),
+    Rule("no-f64",
+         "no f64 values anywhere in a compiled module",
+         lambda art: True, _check_no_f64),
+    Rule("donation",
+         "donated train buffers (params, opt.mu/nu, EF residual) are "
+         "input-output aliased in the compiled module",
+         lambda art: art.kind == "train", _check_donation),
+    Rule("decode-donation",
+         "the decode tick's donated cache tree is aliased in place",
+         lambda art: art.kind == "decode", _check_decode_donation),
+    Rule("packed-weights",
+         "packed-serving programs take integer weight parameters and "
+         "never rematerialize the f32 tree",
+         lambda art: art.kind == "decode" and art.meta.get("packed"),
+         _check_packed_weights),
+)
+
+
+def run_rules(art: ProgramArtifacts,
+              rules: Tuple[Rule, ...] = PROGRAM_RULES) -> List[Violation]:
+    out = []
+    for rule in rules:
+        out.extend(rule.run(art))
+    return out

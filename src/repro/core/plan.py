@@ -196,10 +196,13 @@ def layer_occupied_bits(w, f=None) -> int:
     ``|mantissa|`` plus the sign bit.  An int in [1, 8]."""
     import jax.numpy as jnp
     from ..kernels.qmatmul.ops import channel_bits
+    from .quantizer import _exp2i
     w32 = jnp.asarray(w, jnp.float32)
     fi = channel_bits(w32, None if f is None else jnp.asarray(f))
     amax = jnp.max(jnp.abs(w32), axis=-2)
-    m = int(jnp.max(jnp.floor(amax * jnp.exp2(fi) + 0.5)))
+    # _exp2i, not jnp.exp2: the occupied-bits count must round on the
+    # exact power-of-two grid the kernel quantizes on
+    m = int(jnp.max(jnp.floor(amax * _exp2i(fi) + 0.5)))
     return max(int(m).bit_length() + 1, 1)
 
 

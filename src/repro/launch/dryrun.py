@@ -61,7 +61,7 @@ def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
 def abstract_model_state(M, cfg: ModelConfig):
     key = jax.ShapeDtypeStruct((2,), jnp.uint32)
     return jax.eval_shape(lambda k: M.init(k, cfg),
-                          jax.eval_shape(lambda: jax.random.PRNGKey(0)))
+                          jax.eval_shape(jax.random.PRNGKey, 0))
 
 
 def abstract_cache(M, cfg: ModelConfig, batch: int, max_len: int):

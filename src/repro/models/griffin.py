@@ -90,7 +90,7 @@ class GriffinLM:
             jax.random.split(ku, units))
         p["rem"], q["rem"] = [], []
         rem_p, rem_q = [], []
-        for i, k in enumerate(jax.random.split(kr, max(rem, 1))[:rem]):
+        for k in jax.random.split(kr, max(rem, 1))[:rem]:
             bp, bq = block_init(k, "rec")
             rem_p.append(bp)
             rem_q.append(bq)

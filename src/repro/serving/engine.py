@@ -166,6 +166,20 @@ class Engine:
                 packed_matmul(self.packed):
             return fn(*args)
 
+    def decode_program(self):
+        """(jaxpr, compiled HLO text) of the engine's decode tick, traced
+        on representative full-batch args — the program ``step()`` runs.
+        This is what ``repro.analysis`` lints: packed-weight dtypes,
+        cache donation and upcasts are judged on this artifact."""
+        B = self.slots
+        tok = jnp.zeros((B, 1), jnp.int32)
+        pos = jnp.zeros((B,), jnp.int32)
+        temp = jnp.zeros((B,), jnp.float32)
+        topk = jnp.zeros((B,), jnp.int32)
+        traced = self._run(self._decode.trace, self.p, self.q, self.caches,
+                           tok, pos, self._key, temp, topk, True)
+        return traced.jaxpr, traced.lower().compile().as_text()
+
     # ------------------------------------------------------------------
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.slot_req):

@@ -9,7 +9,6 @@ program as the legacy global-state setup (``--spec`` file == classic
 flags), on 1x1 here and on the 2x4/4x2 meshes in the multi-device CI job.
 """
 import dataclasses
-import re
 import warnings
 
 import jax
@@ -19,6 +18,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.analysis import strip_metadata, train_step_hlo
 from repro.api import (CompressionSpec, GRAD_COMPRESSION_KINDS, MeshSpec,
                        PrecisionSpec, RunSpec, build)
 
@@ -220,13 +220,14 @@ def test_two_contexts_training_isolated():
 
 
 # ------------------------------ HLO identity -------------------------------
+# the stripper and the spec-side lowering are the shared
+# repro.analysis parsers — the identity the tests pin here is asserted
+# over the SAME artifact the program linter (tools/lint_programs.py)
+# gates, not a subtly different re-lowering
 
-def _strip_metadata(hlo: str) -> str:
-    """Strip source-location noise from compiled HLO: the comparison is
-    over the *compiled* program (XLA inlines/dedups the lowering's
-    private helper functions, whose auto-numbering is not the program)."""
-    hlo = re.sub(r"metadata=\{[^}]*\}", "", hlo)
-    return re.sub(r'"[^"]*"', '""', hlo)
+_strip_metadata = strip_metadata
+_spec_step_hlo = train_step_hlo       # argv list -> compiled HLO text
+_spec_hlo_from_spec = train_step_hlo  # RunSpec   -> compiled HLO text
 
 
 def _legacy_step_hlo(mesh_str, grad_compression):
@@ -306,18 +307,6 @@ def _legacy_step_hlo(mesh_str, grad_compression):
             return jitted.lower(*args).compile().as_text()
     finally:
         reset_axes()
-
-
-def _spec_step_hlo(argv):
-    spec = RunSpec.from_args(argv)
-    ctx = build(spec)
-    setup = ctx.init_training()
-    with ctx.mesh:
-        args = [setup.params, setup.qstate, setup.opt,
-                setup.pipeline(0), jnp.int32(0)]
-        if setup.ef_state is not None:
-            args.append(setup.ef_state)
-        return setup.jitted.lower(*args).compile().as_text()
 
 
 def test_hlo_identity_1x1():
@@ -418,17 +407,6 @@ def test_hlo_identity_uniform_plan_wire2d():
     with_plan = _spec_hlo_from_spec(dc.replace(spec,
                                                plan=PrecisionPlan()))
     assert _strip_metadata(with_plan) == _strip_metadata(base)
-
-
-def _spec_hlo_from_spec(spec):
-    ctx = build(spec)
-    setup = ctx.init_training()
-    with ctx.mesh:
-        args = [setup.params, setup.qstate, setup.opt,
-                setup.pipeline(0), jnp.int32(0)]
-        if setup.ef_state is not None:
-            args.append(setup.ef_state)
-        return setup.jitted.lower(*args).compile().as_text()
 
 
 # --------------------------- serving contexts ------------------------------

@@ -14,6 +14,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.analysis import SCALAR_MAX, parse_collectives
 from repro.dist import EFState, ef_compress, ef_init
 from repro.dist.collectives import (data_axis_size, ef_wire_init,
                                     ef_wire_pmean, fp32_allreduce_bytes,
@@ -269,7 +270,8 @@ def test_shard_map_matches_simulate():
     with mesh:
         placed = jax.device_put(tree, ef_residual_sharding(tree, mesh))
         for kind in ("int8", "bf16"):
-            d, r = jax.jit(lambda t: ef_wire_pmean(t, mesh, kind))(placed)
+            d, r = jax.jit(
+                lambda t, k=kind: ef_wire_pmean(t, mesh, k))(placed)
             ds, rs = simulate_wire_pmean(tree, kind)
             for k in tree:
                 np.testing.assert_array_equal(np.asarray(d[k]),
@@ -314,8 +316,8 @@ def test_wire_1d_bytes_model_pins_measured_trace():
             tree = {name: full[name]}
             placed = jax.device_put(tree,
                                     ef_residual_sharding(tree, mesh))
-            fn = jax.jit(lambda t, k=kind, b=bits: ef_wire_pmean(
-                t, mesh, k, widths={name: b}))
+            fn = jax.jit(lambda t, k=kind, b=bits, n_=name: ef_wire_pmean(
+                t, mesh, k, widths={n_: b}))
             with record_wire_bytes() as rec:
                 fn.lower(placed)
             want = wire_bytes_model(full[name][0].size, n, kind,
@@ -414,20 +416,13 @@ def test_compressed_step_hlo_moves_int8():
         hlo = jax.jit(step).lower(p0, q0, adamw_init(p0), pipe(0),
                                   jnp.int32(0), ec).compile().as_text()
     assert "s8[" in hlo and "all-to-all" in hlo
-    import math
-    import re
-    for line in hlo.splitlines():
-        if "all-reduce" not in line:
-            continue
-        head = line.strip().split("all-reduce(")[0]
-        m = re.search(r"f32\[([\d,]*)\]", head)
-        if m is None:
-            continue
-        # every surviving f32 all-reduce is tiny: loss/gnorm scalars, amax
-        # grids, TP feature extremes — a gradient-sized one (smallest
-        # JetTagger matmul leaf is 16*64) would mean fp32 crossed the wire
-        dims = [int(d) for d in m.group(1).split(",") if d]
-        assert math.prod(dims) < 256, line.strip()[:160]
+    # shared repro.analysis parser: every surviving f32 all-reduce is
+    # tiny — loss/gnorm scalars, amax grids, TP feature extremes; a
+    # gradient-sized one (smallest JetTagger matmul leaf is 16*64) would
+    # mean fp32 crossed the wire
+    for c in parse_collectives(hlo):
+        if c.kind == "all-reduce" and c.dtype == "f32":
+            assert c.numel < SCALAR_MAX, c.line[:160]
 
 
 # ------------------------- fused bucketed path ------------------------------

@@ -76,13 +76,14 @@ class _FakePodMesh:
     devices = types.SimpleNamespace(shape=(2, 16, 16))
 
 
-def _spec(path_keys, shape, mesh=_FakeMesh(), mode="train"):
+def _spec(path_keys, shape, mesh=None, mode="train"):
     from repro.dist.sharding import spec_for_param
 
     class K:
         def __init__(self, key):
             self.key = key
-    return spec_for_param([K(k) for k in path_keys], shape, mesh, mode)
+    return spec_for_param([K(k) for k in path_keys], shape,
+                          _FakeMesh() if mesh is None else mesh, mode)
 
 
 def test_weight_spec_fsdp_tp():

@@ -1,0 +1,195 @@
+"""tools/ CI gates — exit codes, violation fixtures, allowlists.
+
+Covers ``check_no_globals.py`` (the source-rule registry CLI, incl. the
+tuple-unpack/starred-target regression), ``check_specs.py`` (round-trip
+gate on good/bad/non-canonical fixtures), and ``lint_programs.py`` (the
+program-report gate: green on a fresh baseline, nonzero on an injected
+baseline drift — the "extra collective launch" acceptance check).
+"""
+import importlib.util
+import json
+import os
+import sys
+
+import pytest
+
+from repro.analysis import check_source
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_tool(name):
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(ROOT, "tools", f"{name}.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# --------------------------- check_no_globals ------------------------------
+
+def test_source_rules_tuple_unpack_regression():
+    """The historical escape: tuple-unpack and starred targets slipped
+    past the module-mutable rule."""
+    probs = check_source("src/repro/x.py", "a, b = [], {}\n")
+    assert len(probs) == 2
+    assert any("`a`" in p for p in probs) and any("`b`" in p for p in probs)
+    # element-wise: only the mutable element is flagged
+    probs = check_source("src/repro/x.py", "a, b = [], 3\n")
+    assert len(probs) == 1 and "`a`" in probs[0]
+    # a starred target always binds a fresh list
+    probs = check_source("src/repro/x.py", "a, *rest = (1, 2, 3)\n")
+    assert len(probs) == 1 and "`rest`" in probs[0]
+    # nested unpack
+    probs = check_source("src/repro/x.py", "(a, b), c = ([], 1), {}\n")
+    assert any("`a`" in p for p in probs) and any("`c`" in p for p in probs)
+    assert not any("`b`" in p for p in probs)
+
+
+def test_source_rules_global_and_mutable():
+    bad = "X = {}\n\ndef f():\n    global X\n    X = {}\n"
+    probs = check_source("src/repro/x.py", bad)
+    assert any("[no-global]" in p for p in probs)
+    assert any("[module-mutable]" in p for p in probs)
+    assert check_source("src/repro/x.py", "X = (1, 2)\nY = 3\n") == []
+    # dunders and annotations-without-value stay exempt
+    assert check_source("src/repro/x.py",
+                        "__all__ = []\nz: dict\n") == []
+
+
+def test_source_rules_allowlist_and_pragma():
+    src = "CACHE = {}\n"
+    assert check_source("src/repro/x.py", src) != []
+    assert check_source("src/repro/x.py", src,
+                        allow=frozenset({"src/repro/x.py::CACHE"})) == []
+    assert check_source("src/repro/x.py", src,
+                        allow=frozenset({"src/repro/x.py::*"})) == []
+    assert check_source(
+        "src/repro/x.py",
+        "CACHE = {}  # lint: allow(module-mutable)\n") == []
+    # the pragma names ONE rule; a different rule on the line still fires
+    assert check_source(
+        "src/repro/x.py",
+        "CACHE = {}  # lint: allow(fixed-prngkey)\n") != []
+
+
+def test_source_rules_inexact_bit_arith_scoped_to_bit_exact_modules():
+    src = "import jax.numpy as jnp\ns = jnp.exp2(f)\n"
+    probs = check_source("src/repro/core/quantizer.py", src)
+    assert len(probs) == 1 and "[inexact-bit-arith]" in probs[0]
+    assert check_source("src/repro/kernels/wire_pack/kernel.py", src) != []
+    # outside the bit-exact modules jnp.exp2 is fine (e.g. an LR schedule)
+    assert check_source("src/repro/train/loop.py", src) == []
+    # python-level powers are exact and allowed everywhere
+    assert check_source("src/repro/core/quantizer.py",
+                        "m = 2.0 ** 24\np = pow(2, 5)\n") == []
+
+
+def test_source_rules_fixed_prngkey_and_shims():
+    probs = check_source(
+        "src/repro/a.py", "import jax\nk = jax.random.PRNGKey(0)\n")
+    assert len(probs) == 1 and "[fixed-prngkey]" in probs[0]
+    # a non-zero literal is a deliberate fixture constant, not the bug
+    assert check_source("src/repro/a.py",
+                        "k = jax.random.PRNGKey(7)\n") == []
+    probs = check_source("src/repro/a.py",
+                         "from repro.dist import set_axes\n"
+                         "set_axes(('data',), 'model')\n")
+    assert len(probs) == 1 and "[deprecated-shim-call]" in probs[0]
+    # referencing (importing, defining) the shim is not calling it
+    assert check_source("src/repro/a.py",
+                        "def set_axes(*a, **k):\n    pass\n") == []
+
+
+def test_check_no_globals_cli(tmp_path):
+    tool = _load_tool("check_no_globals")
+    src = tmp_path / "src" / "repro"
+    src.mkdir(parents=True)
+    (src / "ok.py").write_text("X = (1,)\n")
+    assert tool.main(["--src", str(src)]) == 0
+    (src / "bad.py").write_text("a, b = [], {}\n")
+    assert tool.main(["--src", str(src)]) == 1
+    assert tool.main(["--src", str(tmp_path / "nope")]) == 2
+
+
+def test_check_no_globals_real_tree_is_clean():
+    tool = _load_tool("check_no_globals")
+    assert tool.main([]) == 0
+
+
+# ----------------------------- check_specs ---------------------------------
+
+def test_check_specs_cli(tmp_path):
+    tool = _load_tool("check_specs")
+    # the shipped specs pass
+    assert tool.main([]) == 0
+    # empty dir is a bad invocation, not a pass
+    empty = tmp_path / "none"
+    empty.mkdir()
+    assert tool.main(["--specs-dir", str(empty)]) == 2
+    # unparseable spec fails
+    bad = tmp_path / "bad"
+    bad.mkdir()
+    (bad / "x.json").write_text('{"arch": "no-such-arch"!!}\n')
+    assert tool.main(["--specs-dir", str(bad)]) == 1
+    # parseable but non-canonical bytes fail too
+    from repro.api import RunSpec
+    noncanon = tmp_path / "noncanon"
+    noncanon.mkdir()
+    (noncanon / "y.json").write_text(
+        json.dumps(json.loads(RunSpec().to_json())) + "\n")  # no indent
+    assert tool.main(["--specs-dir", str(noncanon)]) == 1
+
+
+# ---------------------------- lint_programs --------------------------------
+
+def test_lint_programs_override_parsing():
+    import argparse
+    tool = _load_tool("lint_programs")
+    assert tool._parse_override("train:*.launches=0.5") == \
+        ("train:*.launches", 0.5)
+    with pytest.raises(argparse.ArgumentTypeError):
+        tool._parse_override("no-equals-sign")
+
+
+def test_lint_programs_gate_and_injected_drift(tmp_path):
+    """End-to-end over the 1x1 spec only (fits any host): --update
+    creates the baseline and exits 0, the same programs pass against it,
+    and a doctored baseline claiming FEWER launches / MORE aliases makes
+    the gate exit 1 — the injected-violation acceptance check."""
+    tool = _load_tool("lint_programs")
+    specs = tmp_path / "specs"
+    specs.mkdir()
+    shipped = os.path.join(ROOT, "examples", "specs", "host_1x1.json")
+    (specs / "host_1x1.json").write_text(open(shipped).read())
+    # plan files are skipped, not parsed as RunSpec
+    (specs / "plan_x.json").write_text("{not json}")
+
+    out = tmp_path / "report.json"
+    baseline = tmp_path / "PROGRAMS.json"
+    common = ["--specs-dir", str(specs), "--out", str(out),
+              "--baseline", str(baseline)]
+
+    # no baseline yet -> 2
+    assert tool.main(common) == 2
+    # create it -> 0, then the identical program passes -> 0
+    assert tool.main(common + ["--update"]) == 0
+    assert tool.main(common) == 0
+
+    report = json.loads(out.read_text())
+    assert set(report["programs"]) == {"train:host_1x1",
+                                       "decode:host_1x1"}
+    for rep in report["programs"].values():
+        assert rep["violations"] == []
+
+    # inject drift: the golden claims an alias the program doesn't have
+    # (equivalently: the fresh program dropped a donation) and fewer
+    # collective launches than the program performs
+    doctored = json.loads(baseline.read_text())
+    doctored["programs"]["train:host_1x1"]["aliased_buffers"] += 1
+    baseline.write_text(json.dumps(doctored))
+    assert tool.main(common) == 1
+
+    # an override widening the drifted metric lets it pass again
+    assert tool.main(common + [
+        "--override", "train:host_1x1.aliased_buffers=0.5"]) == 0

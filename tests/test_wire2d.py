@@ -11,9 +11,6 @@ meshes, that a pure-TP 1xM mesh takes the sliced path with no data-axis
 exchange, that the compressed-2d train step tracks the post-reduce loss
 curve with s8-only gradient collectives, and that checkpoint resume of
 the sliced residual is exact."""
-import math
-import re
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -21,6 +18,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.analysis import SCALAR_MAX, parse_collectives
 from repro.dist import EFState, ef_init, ef_compress
 from repro.dist.collectives import (data_axis_size, ef_wire2d_init,
                                     ef_wire_init, ef_wire_pmean_2d,
@@ -321,8 +319,8 @@ def test_wire2d_leaf_bytes_pins_measured_trace(kind, bits):
             res = _init_res(tree, D, M)
             res_p = jax.device_put(res,
                                    ef_residual_sharding(res, mesh, "2d"))
-            fn = jax.jit(lambda t, rr: ef_wire_pmean_2d(
-                t, rr, mesh, kind, widths={name: bits}))
+            fn = jax.jit(lambda t, rr, n_=name: ef_wire_pmean_2d(
+                t, rr, mesh, kind, widths={n_: bits}))
             with record_wire_bytes() as rec:
                 fn.lower(tree, res_p)
             stacked = name == "layers"
@@ -472,27 +470,11 @@ def test_compressed_2d_step_hlo_moves_int8():
                                   jnp.int32(0), ec).compile().as_text()
     assert "s8[" in hlo and "all-to-all" in hlo
 
-    def crosses_data(line):
-        g = re.search(r"replica_groups=\{(\{[\d,{}]*\})\}", line)
-        if not g:
-            return True           # unknown grouping: count it
-        for grp in re.findall(r"\{([\d,]+)\}", g.group(1)):
-            ids = [int(x) for x in grp.split(",")]
-            if len({i // M for i in ids}) > 1:
-                return True
-        return False
-
-    bad = []
-    for line in hlo.splitlines():
-        m = re.search(r"= f32\[([\d,]*)\]\S* all-reduce\(", line.strip())
-        if m is None:
-            continue
-        dims = [int(x) for x in m.group(1).split(",") if x]
-        # surviving small f32 all-reduces: loss/gnorm scalars, amax grids
-        if math.prod(dims) < 256:
-            continue
-        if crosses_data(line):
-            bad.append(line.strip()[:160])
+    # shared repro.analysis parser: surviving small f32 all-reduces
+    # (loss/gnorm scalars, amax grids) stay under SCALAR_MAX elements
+    bad = [c.line[:160] for c in parse_collectives(hlo)
+           if c.kind == "all-reduce" and c.dtype == "f32"
+           and c.numel >= SCALAR_MAX and c.crosses_data_axis(M)]
     assert not bad, bad
 
 

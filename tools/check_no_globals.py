@@ -1,32 +1,32 @@
-"""CI gate: no new module-level mutable trace-time state in src/repro.
+"""CI gate: source-level AST rules over src/repro.
 
-The RunSpec/RunContext redesign removed the hidden trace-time globals
-(``set_axes``/``set_compute_dtype`` module state) in favor of the scoped
-mechanism in ``repro/dist/scope.py``.  This checker keeps them out:
+Thin CLI over the ``repro.analysis.ast_rules`` registry (one rule per
+invariant, same declarative shape as the compiled-program rules):
 
-* any ``global`` statement in ``src/repro`` fails — mutating module
-  state from a function is exactly the pattern that made jitted programs
-  depend on ambient configuration (use ``dist.scope.Scoped`` instead);
-* any module-level binding of a *mutable* container literal
-  (``= []``, ``= {}``, ``= set()`` / ``dict()`` / ``list()``) fails —
-  module-level caches/registries accumulate cross-run state (bind them
-  inside a class or a ``Scoped`` default).
+* ``no-global`` — no ``global`` statements (the RunSpec/RunContext
+  redesign removed hidden trace-time globals; ``dist.scope.Scoped`` is
+  the sanctioned mechanism);
+* ``module-mutable`` — no module-level mutable-container bindings,
+  including tuple-unpack (``a, b = [], {}``) and starred targets;
+* ``inexact-bit-arith`` — no ``jnp.exp2``/``log2``/float-pow in the
+  bit-exact modules (frexp/ldexp-exact helpers only);
+* ``fixed-prngkey`` — no hardcoded ``PRNGKey(0)`` in library code;
+* ``deprecated-shim-call`` — no calls to the deprecated ``set_*`` shims.
 
-Allowlist entries are ``path::name`` (for assignments) or ``path::*``
-(whole file), relative to the repo root.
+Allowlist entries are ``path::name`` (one binding) or ``path::*``
+(whole file); a ``# lint: allow(<rule>)`` comment suppresses one line.
 
 Usage (CI lint job):  python tools/check_no_globals.py
 Exit codes: 0 = clean, 1 = violations, 2 = bad invocation.
 """
 from __future__ import annotations
 
-import ast
 import os
 import sys
 from typing import List
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-SRC = os.path.join(ROOT, "src", "repro")
+sys.path.insert(0, os.path.join(ROOT, "src"))
 
 # path::name entries exempt from the module-level-mutable rule.  Keep
 # this list SHORT and justified; the deprecated set_* shims do not need
@@ -39,80 +39,43 @@ ALLOWLIST = frozenset({
     "src/repro/launch/roofline.py::_DTYPE_BYTES",
 })
 
-MUTABLE_CALLS = {"dict", "list", "set", "defaultdict", "OrderedDict",
-                 "deque", "Counter"}
 
-
-def _is_mutable_literal(node: ast.AST) -> bool:
-    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
-                         ast.DictComp, ast.SetComp)):
-        return True
-    if isinstance(node, ast.Call):
-        fn = node.func
-        name = fn.id if isinstance(fn, ast.Name) else (
-            fn.attr if isinstance(fn, ast.Attribute) else "")
-        return name in MUTABLE_CALLS
-    return False
-
-
-def _targets(node: ast.AST) -> List[str]:
-    if isinstance(node, ast.Assign):
-        out = []
-        for t in node.targets:
-            if isinstance(t, ast.Name):
-                out.append(t.id)
-        return out
-    if isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
-        return [node.target.id]
-    return []
-
-
-def check_file(path: str) -> List[str]:
-    rel = os.path.relpath(path, ROOT)
-    with open(path) as f:
-        tree = ast.parse(f.read(), filename=rel)
-    problems = []
-    if f"{rel}::*" in ALLOWLIST:
-        return problems
-    # rule 1: no `global` statements anywhere in the module
-    for node in ast.walk(tree):
-        if isinstance(node, ast.Global):
-            problems.append(
-                f"{rel}:{node.lineno}: `global {', '.join(node.names)}` — "
-                f"module-level mutable trace-time state; use "
-                f"repro.dist.scope.Scoped")
-    # rule 2: no module-level mutable-container bindings
-    for node in tree.body:
-        if isinstance(node, (ast.Assign, ast.AnnAssign)):
-            value = node.value
-            if value is None or not _is_mutable_literal(value):
+def check_tree(src_root: str, root: str = ROOT,
+               allow: frozenset = ALLOWLIST) -> List[str]:
+    from repro.analysis import check_source
+    problems: List[str] = []
+    for dirpath, _, files in os.walk(src_root):
+        for fn in sorted(files):
+            if not fn.endswith(".py"):
                 continue
-            for name in _targets(node):
-                if name.startswith("__") and name.endswith("__"):
-                    continue  # dunder module attrs (__all__) are constants
-                if f"{rel}::{name}" in ALLOWLIST:
-                    continue
-                problems.append(
-                    f"{rel}:{node.lineno}: module-level mutable binding "
-                    f"`{name}` — bind it in a class or a Scoped default")
+            path = os.path.join(dirpath, fn)
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            with open(path) as f:
+                problems += check_source(rel, f.read(), allow=allow)
     return problems
 
 
-def main() -> int:
-    if not os.path.isdir(SRC):
-        print(f"missing {SRC}", file=sys.stderr)
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="source-level AST rules over src/repro")
+    ap.add_argument("--src", default=os.path.join(ROOT, "src", "repro"),
+                    help="tree to check (paths in messages/allowlist "
+                         "stay relative to its grandparent)")
+    args = ap.parse_args(argv)
+    if not os.path.isdir(args.src):
+        print(f"missing {args.src}", file=sys.stderr)
         return 2
-    problems: List[str] = []
-    for dirpath, _, files in os.walk(SRC):
-        for fn in sorted(files):
-            if fn.endswith(".py"):
-                problems += check_file(os.path.join(dirpath, fn))
+    # allowlist keys are relative to the directory holding `src/`
+    root = os.path.dirname(os.path.dirname(os.path.abspath(args.src)))
+    problems = check_tree(os.path.abspath(args.src), root=root)
     for p in problems:
         print(f"FAIL {p}", file=sys.stderr)
     if problems:
         return 1
-    print("check_no_globals: src/repro is free of module-level mutable "
-          "trace-time state")
+    print("check_no_globals: src tree passes all source rules "
+          "(no-global, module-mutable, inexact-bit-arith, fixed-prngkey, "
+          "deprecated-shim-call)")
     return 0
 
 

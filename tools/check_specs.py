@@ -32,7 +32,7 @@ def check_file(path: str) -> List[str]:
     from repro.api.spec import RunSpec
     from repro.core.plan import PrecisionPlan
 
-    rel = os.path.relpath(path, ROOT)
+    rel = os.path.relpath(path, ROOT) if path.startswith(ROOT) else path
     is_plan = os.path.basename(path).startswith("plan_")
     loader = PrecisionPlan if is_plan else RunSpec
     with open(path) as f:
@@ -50,13 +50,18 @@ def check_file(path: str) -> List[str]:
     return []
 
 
-def main() -> int:
-    if not os.path.isdir(SPECS):
-        print(f"missing {SPECS}", file=sys.stderr)
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="spec/plan JSON byte-exact round-trip gate")
+    ap.add_argument("--specs-dir", default=SPECS)
+    args = ap.parse_args(argv)
+    if not os.path.isdir(args.specs_dir):
+        print(f"missing {args.specs_dir}", file=sys.stderr)
         return 2
-    files = sorted(glob.glob(os.path.join(SPECS, "*.json")))
+    files = sorted(glob.glob(os.path.join(args.specs_dir, "*.json")))
     if not files:
-        print(f"no spec files under {SPECS}", file=sys.stderr)
+        print(f"no spec files under {args.specs_dir}", file=sys.stderr)
         return 2
     problems: List[str] = []
     for path in files:
@@ -65,8 +70,8 @@ def main() -> int:
         print(f"FAIL {p}", file=sys.stderr)
     if problems:
         return 1
-    print(f"check_specs: {len(files)} spec/plan files under examples/specs "
-          f"round-trip byte-exactly")
+    print(f"check_specs: {len(files)} spec/plan files under "
+          f"{os.path.relpath(args.specs_dir, ROOT)} round-trip byte-exactly")
     return 0
 
 
