@@ -14,7 +14,10 @@ What is guarded (direction-aware — a metric only fails when it moves the
   (higher is better), and the mixed-precision section's
   ``bytes_per_element`` (lower) / ``reduction_vs_uniform`` (higher);
 * ``serving``: ``decode_tokens_per_sec`` / ``mixed_tokens_per_sec`` per
-  mode (higher is better) and the ``hbm_saving_x`` packing ratio.
+  mode (higher is better), the ``hbm_saving_x`` packing ratio, and the
+  structural KV-cache metrics per mode — ``kv_bytes_per_token`` (lower)
+  and the cache-bandwidth decode speedup ``decode_kv_speedup_x``
+  (higher; THE quantized-KV win gate).
 
 Timing metrics get built-in default tolerances instead of the global
 ``--tolerance``: ``*step_ms*`` at ``TIMING_TOLERANCE`` (25%) and
@@ -118,6 +121,15 @@ def extract_metrics(data: dict) -> Metrics:
             for key in ("decode_tokens_per_sec", "mixed_tokens_per_sec"):
                 out[f"serving.{row['mode']}.{key}"] = (
                     float(row[key]), "higher")
+            # structural KV-cache metrics (exact, not timing): stored
+            # bytes per decoded token and the cache-bandwidth decode
+            # speedup of the quantized ring buffer over the fp one
+            if "kv_bytes_per_token" in row:
+                out[f"serving.{row['mode']}.kv_bytes_per_token"] = (
+                    float(row["kv_bytes_per_token"]), "lower")
+            if "decode_kv_speedup_x" in row:
+                out[f"serving.{row['mode']}.decode_kv_speedup_x"] = (
+                    float(row["decode_kv_speedup_x"]), "higher")
         if "hbm_saving_x" in data:
             out["serving.hbm_saving_x"] = (float(data["hbm_saving_x"]),
                                            "higher")

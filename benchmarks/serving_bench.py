@@ -1,22 +1,31 @@
-"""Continuous-batching serving benchmark: decode tokens/sec, fp vs packed.
+"""Continuous-batching serving benchmark: decode tokens/sec across
+weight (fp vs HGQ int8-packed) and KV-cache (fp vs plan-width quantized)
+modes.
 
-Serves an identical ragged workload through ``repro.serving.Engine`` twice
-— bf16/fp weights and the HGQ int8-packed tree (``packed=True``, decode
-projections on ``kernels.qmatmul.qmatmul_any``) — and reports two numbers
-per mode (compile excluded via a warmup run): ``decode_tokens_per_sec``,
-pure jitted decode ticks on a saturated batch (prefill untimed — the
-steady-state hot-path number), and ``mixed_tokens_per_sec``, a full
-continuous-batching run including chunked prefill and slot churn (the
-end-to-end serving number; shifts with the prompt-length mix).  Writes a
-JSON artifact so CI accumulates the perf trajectory.
+Serves an identical ragged workload through ``repro.serving.Engine``
+once per ``RunSpec`` mode — bf16/fp weights, the HGQ int8-packed tree
+(``packed=True``, decode projections on ``kernels.qmatmul.qmatmul_any``),
+and the plan-width quantized KV ring buffer
+(``ServingSpec(kv_cache="plan")``, decode reads through
+``kernels.kv_dequant``) — and reports two numbers per mode (compile
+excluded via a warmup run): ``decode_tokens_per_sec``, pure jitted
+decode ticks on a saturated batch (prefill untimed — the steady-state
+hot-path number), and ``mixed_tokens_per_sec``, a full continuous-
+batching run including chunked prefill and slot churn.  KV rows
+additionally report ``kv_bytes_per_token`` and the cache-bandwidth
+speedup ``decode_kv_speedup_x`` (decode is KV-bound, so stored cache
+bytes per token are the structural decode-throughput model — the
+number that holds on TPU where wall time on this container does not).
+Writes a JSON artifact so CI accumulates the perf trajectory.
 
     PYTHONPATH=src python benchmarks/serving_bench.py --smoke
     PYTHONPATH=src python benchmarks/serving_bench.py \
         --arch qwen2-0.5b --requests 16 --max-new 32 --out BENCH_serving.json
 
-On this CPU container the Pallas kernel runs in interpret mode, so the
-packed path's *wall time* is not the TPU story (the structural bytes-moved
-numbers in the JSON are); on TPU the same flag compiles the kernel.
+On this CPU container the Pallas kernels run in interpret/reference
+mode, so the packed and quantized-KV *wall times* are not the TPU story
+(the structural bytes-moved numbers in the JSON are); on TPU the same
+flags compile the kernels.
 """
 from __future__ import annotations
 
@@ -39,19 +48,19 @@ def ragged_requests(vocab: int, n: int, max_new: int, seed: int = 7):
     return reqs
 
 
-def bench_engine(ctx, params, qstate, *, n_requests: int,
-                 max_new: int, batch_slots: int, max_len: int) -> dict:
+def bench_engine(ctx, params, qstate, *, mode: str, n_requests: int,
+                 max_new: int, max_len: int) -> dict:
+    from repro.serving import kv_bytes_per_token
     cfg = ctx.cfg
-    packed = ctx.spec.precision.packed_serving
-    eng = ctx.make_engine(params, qstate, batch_slots=batch_slots,
-                          max_len=max_len, prefill_chunk=8)
+    slots = ctx.spec.serving.slots
+    eng = ctx.make_engine(params, qstate, max_len=max_len, prefill_chunk=8)
     # warmup: compile decode/prefill/sample once
-    eng.run(ragged_requests(cfg.vocab, batch_slots, 4))
+    eng.run(ragged_requests(cfg.vocab, slots, 4))
     # decode-only: saturate every slot (prefill + first token untimed),
     # then time nothing but jitted ragged decode ticks
-    dec_reqs = ragged_requests(cfg.vocab, batch_slots, max_new, seed=11)
+    dec_reqs = ragged_requests(cfg.vocab, slots, max_new, seed=11)
     for r in dec_reqs:
-        if not eng.submit(r):
+        if eng.submit(r) is None:
             raise RuntimeError("engine rejected a warm decode request")
     t0 = time.perf_counter()
     while any(s is not None for s in eng.slot_req):
@@ -64,9 +73,19 @@ def bench_engine(ctx, params, qstate, *, n_requests: int,
     eng.run(reqs)
     dt = time.perf_counter() - t0
     new_tokens = sum(len(r.out) for r in reqs)
-    return {"mode": "packed" if packed else "fp",
+    # attention layers only: griffin/whisper mix in non-KV blocks, but
+    # the archs this bench serves are all-attention stacks
+    kv_fp = kv_bytes_per_token(cfg.n_kv, cfg.hd, cfg.n_layers, None)
+    kv_now = kv_bytes_per_token(cfg.n_kv, cfg.hd, cfg.n_layers,
+                                eng.kv_bits)
+    return {"mode": mode,
             "spec": ctx.spec.to_dict(),
             "requests": n_requests,
+            "kv_bits": eng.kv_bits,
+            "kv_bytes_per_token": kv_now,
+            # decode is KV-bandwidth-bound: stored cache bytes per token
+            # are the structural decode-throughput model (TPU story)
+            "decode_kv_speedup_x": round(kv_fp / kv_now, 2),
             "decode_tokens": dec_tokens, "decode_wall_s": round(dt_dec, 4),
             "decode_tokens_per_sec": round(dec_tokens / dt_dec, 2),
             "mixed_tokens": new_tokens, "mixed_wall_s": round(dt, 4),
@@ -94,38 +113,50 @@ def main() -> None:
 
     import dataclasses
 
-    from repro.api import PrecisionSpec, RunSpec, build
+    from repro.api import PrecisionSpec, RunSpec, ServingSpec, build
+    from repro.core.plan import LayerPlan, PrecisionPlan
     from repro.serving.packed import pack_tree, packed_nbytes
 
     # the bench measures exactly the declarative config the launcher and
-    # the serving example run: one RunSpec per mode, two coexisting
-    # contexts (the packed engine's traces never touch the fp one's)
-    base = RunSpec(arch=args.arch, full=args.full)
-    ctxs = [build(dataclasses.replace(
-        base, precision=PrecisionSpec(packed_serving=packed)))
-        for packed in (False, True)]
-    params, qstate = ctxs[0].init_state()
+    # the serving example run: one RunSpec per mode, coexisting contexts
+    # (one engine's traces never touch another's).  kv_plan carries a
+    # nibble-width KV plan (wire/pack stay uniform int8, so weights and
+    # every other trace are the exact fp-row programs).
+    base = RunSpec(arch=args.arch, full=args.full,
+                   serving=ServingSpec(slots=args.batch_slots))
+    kv_plan = PrecisionPlan(default=LayerPlan(kv_bits=4))
+    modes = [
+        ("fp", base),
+        ("packed", dataclasses.replace(
+            base, precision=PrecisionSpec(packed_serving=True))),
+        ("kv_plan", dataclasses.replace(
+            base, plan=kv_plan,
+            serving=dataclasses.replace(base.serving, kv_cache="plan"))),
+    ]
+    ctxs = [(m, build(spec)) for m, spec in modes]
+    params, qstate = ctxs[0][1].init_state()
 
     if args.profile:
         jax.profiler.start_trace(args.profile)
     rows = []
-    for ctx in ctxs:
-        row = bench_engine(ctx, params, qstate,
+    for mode, ctx in ctxs:
+        row = bench_engine(ctx, params, qstate, mode=mode,
                            n_requests=args.requests, max_new=args.max_new,
-                           batch_slots=args.batch_slots,
                            max_len=args.max_len)
         rows.append(row)
         print(f"serving.{row['mode']}: decode "
               f"{row['decode_tokens_per_sec']} tok/s, mixed "
               f"{row['mixed_tokens_per_sec']} tok/s "
-              f"({row['mixed_tokens']} tokens / {row['mixed_wall_s']}s)")
+              f"({row['mixed_tokens']} tokens / {row['mixed_wall_s']}s), "
+              f"kv {row['kv_bytes_per_token']} B/tok "
+              f"({row['decode_kv_speedup_x']}x)")
     if args.profile:
         jax.profiler.stop_trace()
         print(f"profiler trace written to {args.profile}")
 
     fp_b, q_b = packed_nbytes(params), packed_nbytes(pack_tree(params))
     result = {
-        "bench": "serving", "arch": ctxs[0].cfg.name,
+        "bench": "serving", "arch": ctxs[0][1].cfg.name,
         "backend": jax.default_backend(),
         "batch_slots": args.batch_slots, "max_len": args.max_len,
         "weight_bytes_fp": fp_b, "weight_bytes_packed": q_b,

@@ -1,16 +1,27 @@
-"""Continuous-batching serving example: ragged per-slot decode + HGQ
-int8-packed weights on the decode hot path.
+"""Continuous-batching serving example: ragged per-slot decode, HGQ
+int8-packed weights, and the plan-width quantized KV ring buffer.
 
-Each serving mode is a declarative ``repro.api.RunSpec`` (fp vs
-``precision.packed_serving=True``), and the two engines are built from
-two *coexisting* RunContexts in one process — the packed engine's traces
-never perturb the fp engine's (no global flags).  Runs a reduced
-llama-family model, serves a ragged workload (prompts of different
-lengths joining and leaving mid-run) through the single jitted per-slot
-decode step in both modes; packed decode projections run on the fused
-int8 dequant-matmul Pallas kernel (``kernels/qmatmul``), the TPU serving
-win of HGQ (DESIGN.md SS2: decode is HBM-bound; packed weights halve the
-streamed bytes).
+Each serving mode is a declarative ``repro.api.RunSpec`` — the serving
+surface itself is the frozen ``ServingSpec`` part (slots, kv_cache,
+packing override) — and the engines are built from *coexisting*
+RunContexts in one process: one engine's traces never perturb
+another's (no global flags).  Runs a reduced llama-family model and
+serves a ragged workload (prompts of different lengths joining and
+leaving mid-run) through the single jitted per-slot decode step:
+
+* ``fp``      — bf16 weights, fp KV cache (the exact legacy path);
+* ``packed``  — decode projections on the fused int8 dequant-matmul
+  Pallas kernel (``kernels/qmatmul``): packed weights halve the
+  streamed HBM bytes (DESIGN.md SS2: decode is HBM-bound);
+* ``kv_plan`` — KV ring buffer stored at the plan's learned widths
+  (``ServingSpec(kv_cache="plan")``, reads through
+  ``kernels/kv_dequant``): nibble KV cuts cache bytes ~2.7x, the other
+  half of the decode-bandwidth story.
+
+The fp engine is driven through the handle surface —
+``submit() -> RequestHandle`` plus the incremental ``tokens(handle)``
+reader — the streaming API; ``run()`` is the same engine behind a batch
+wrapper, which the other modes use.
 
     PYTHONPATH=src python examples/serve_llm.py
 """
@@ -19,8 +30,10 @@ import time
 
 import jax
 
-from repro.api import PrecisionSpec, RunSpec, build
-from repro.serving import Request, SamplingConfig, generate
+from repro.api import PrecisionSpec, RunSpec, ServingSpec, build
+from repro.core.plan import LayerPlan, PrecisionPlan
+from repro.serving import (Request, SamplingConfig, generate,
+                           kv_bytes_per_token)
 from repro.serving.packed import pack_tree, packed_nbytes
 
 
@@ -36,43 +49,76 @@ def make_requests(vocab):
     return reqs
 
 
-def serve(ctx, params, qstate):
-    eng = ctx.make_engine(params, qstate, batch_slots=4, max_len=64,
-                          prefill_chunk=8)
+def serve(tag, ctx, params, qstate):
+    eng = ctx.make_engine(params, qstate, max_len=64, prefill_chunk=8)
     reqs = make_requests(ctx.cfg.vocab)
     t0 = time.perf_counter()
     eng.run(reqs)
     dt = time.perf_counter() - t0
     new_tokens = sum(len(r.out) for r in reqs)
-    tag = "packed" if eng.packed else "fp"
     print(f"[{tag}] {len(reqs)} requests, {new_tokens} new tokens "
           f"in {dt:.2f}s ({new_tokens / dt:.1f} tok/s incl. compile)")
     return reqs
 
 
+def serve_streaming(ctx, params, qstate):
+    """The handle surface: admit what fits, stream tokens as they land,
+    backfill freed slots — same engine ``run()`` wraps."""
+    eng = ctx.make_engine(params, qstate, max_len=64, prefill_chunk=8)
+    reqs = make_requests(ctx.cfg.vocab)
+    pending, handles = list(reqs), []
+    t0 = time.perf_counter()
+    while pending and (h := eng.submit(pending[0])):
+        handles.append(h)
+        pending.pop(0)
+    while handles:
+        h = handles.pop(0)
+        for tok in eng.tokens(h):          # incremental reader
+            while pending and (h2 := eng.submit(pending[0])):
+                handles.append(h2)
+                pending.pop(0)
+    dt = time.perf_counter() - t0
+    new_tokens = sum(len(r.out) for r in reqs)
+    print(f"[fp/stream] {len(reqs)} requests, {new_tokens} new tokens "
+          f"in {dt:.2f}s ({new_tokens / dt:.1f} tok/s incl. compile)")
+    return reqs
+
+
 def main():
-    spec = RunSpec(arch="llama3.2-3b")
+    spec = RunSpec(arch="llama3.2-3b", serving=ServingSpec(slots=4))
     packed_spec = dataclasses.replace(
         spec, precision=PrecisionSpec(packed_serving=True))
+    kv_spec = dataclasses.replace(
+        spec, plan=PrecisionPlan(default=LayerPlan(kv_bits=4)),
+        serving=dataclasses.replace(spec.serving, kv_cache="plan"))
 
-    # two contexts, two precisions, one process: the fp and packed
-    # engines trace under their own spec — nothing global is shared
-    ctx, packed_ctx = build(spec), build(packed_spec)
+    # three contexts, one process: each engine traces under its own spec
+    ctx, packed_ctx, kv_ctx = build(spec), build(packed_spec), build(kv_spec)
     params, qstate = ctx.init_state()
 
-    # ---- fp engine: ragged continuous batching -----------------------
-    reqs = serve(ctx, params, qstate)
+    # ---- fp engine, handle surface: streaming ragged batching --------
+    reqs = serve_streaming(ctx, params, qstate)
     for i, r in enumerate(reqs):
         print(f"  request {i}: prompt[{len(r.prompt)}] -> {r.out}")
 
     # ---- packed engine: int8 weights on the decode path --------------
-    packed_reqs = serve(packed_ctx, params, qstate)
+    packed_reqs = serve("packed", packed_ctx, params, qstate)
     greedy = [i for i, r in enumerate(reqs) if r.sampling is None]
     agree = sum(reqs[i].out == packed_reqs[i].out for i in greedy)
     print(f"  greedy packed-vs-fp request agreement: {agree}/{len(greedy)}")
     fp_b, q_b = packed_nbytes(params), packed_nbytes(pack_tree(params))
     print(f"  weight bytes {fp_b} -> {q_b} "
           f"({fp_b / q_b:.2f}x HBM saving at decode)")
+
+    # ---- quantized-KV engine: nibble ring buffer ---------------------
+    kv_reqs = serve("kv_plan", kv_ctx, params, qstate)
+    agree = sum(reqs[i].out == kv_reqs[i].out for i in greedy)
+    print(f"  greedy kv_plan-vs-fp request agreement: {agree}/{len(greedy)}")
+    cfg = ctx.cfg
+    fp_kv = kv_bytes_per_token(cfg.n_kv, cfg.hd, cfg.n_layers, None)
+    q_kv = kv_bytes_per_token(cfg.n_kv, cfg.hd, cfg.n_layers, 4)
+    print(f"  KV bytes/token {fp_kv} -> {q_kv} "
+          f"({fp_kv / q_kv:.2f}x decode-bandwidth saving)")
 
     # ---- per-request greedy reference (what the tests assert) --------
     import jax.numpy as jnp

@@ -115,20 +115,31 @@ def train_artifacts(spec: RunSpec, spec_path: str = "") -> ProgramArtifacts:
 
 def decode_artifacts(spec: RunSpec, spec_path: str = "") -> ProgramArtifacts:
     """The serving decode-step program for a (1x1-mesh) spec: the
-    Engine's jitted ragged tick with the spec's packed/plan flags."""
+    Engine's jitted ragged tick with the spec's serving/packing flags.
+    The census engine is built small (2 slots, 32-token cache) but
+    otherwise exactly as ``make_engine`` would serve the spec."""
+    spec = dataclasses.replace(
+        spec, serving=dataclasses.replace(spec.serving, slots=2))
     ctx = build(spec)
     params, qstate = ctx.init_state()
     unpacked_bytes = sum(
         a.size * a.dtype.itemsize for a in jax.tree.leaves(params))
-    eng = ctx.make_engine(params, qstate, batch_slots=2, max_len=32)
+    eng = ctx.make_engine(params, qstate, max_len=32)
     jaxpr, hlo = eng.decode_program()
     return ProgramArtifacts(
         name=f"decode:{_spec_name(spec_path, spec)}",
         kind="decode", spec=spec, spec_path=spec_path,
         mesh_shape=(1, 1), jaxpr=jaxpr, hlo=hlo,
         meta={
-            "packed": bool(spec.precision.packed_serving),
+            "packed": bool(eng.packed),
             "unpacked_param_bytes": int(unpacked_bytes),
+            "kv_cache": spec.serving.kv_cache,
+            "kv_bits": eng.kv_bits,
+            # quantized cache trees are all-int8; what the quantized-kv
+            # rule requires the entry layout to store as integer bytes
+            "kv_cache_int_bytes": (0 if eng.kv_bits is None else sum(
+                a.size for a in jax.tree.leaves(eng.caches)
+                if a.dtype == jnp.int8)),
         })
 
 

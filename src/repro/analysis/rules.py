@@ -132,23 +132,36 @@ def _check_decode_donation(art: ProgramArtifacts) -> List[Violation]:
 
 # -- packed serving ------------------------------------------------------
 
-def _check_packed_weights(art: ProgramArtifacts) -> List[Violation]:
-    """A packed-serving program must actually take its weights as
-    integer parameters: f32 parameter bytes at or above the unpacked
-    tree size mean the pack was dropped before compilation."""
+def _entry_params(hlo: str):
+    """``[(dtype, numel), ...]`` of the compiled module's entry
+    parameters, from the ``entry_computation_layout`` header — the
+    ground truth for what the program stores vs rematerializes.  None
+    when the header cannot be located."""
     import re
-    header = art.hlo.split("\n\n", 1)[0]
+    header = hlo.split("\n\n", 1)[0]
     m = re.search(r"entry_computation_layout=\{\((.*?)\)->", header)
     if not m:
-        return [Violation("packed-weights", art.name,
-                          "could not locate entry_computation_layout")]
-    params = re.findall(r"(\w+)\[([\d,]*)\]", m.group(1))
-    int_bytes = f32_bytes = 0
-    for dtype, dims in params:
+        return None
+    out = []
+    for dtype, dims in re.findall(r"(\w+)\[([\d,]*)\]", m.group(1)):
         n = 1
         for d in dims.split(","):
             if d:
                 n *= int(d)
+        out.append((dtype, n))
+    return out
+
+
+def _check_packed_weights(art: ProgramArtifacts) -> List[Violation]:
+    """A packed-serving program must actually take its weights as
+    integer parameters: f32 parameter bytes at or above the unpacked
+    tree size mean the pack was dropped before compilation."""
+    params = _entry_params(art.hlo)
+    if params is None:
+        return [Violation("packed-weights", art.name,
+                          "could not locate entry_computation_layout")]
+    int_bytes = f32_bytes = 0
+    for dtype, n in params:
         if dtype in ("s8", "u8", "s4", "u4"):
             int_bytes += n
         elif dtype == "f32":
@@ -165,6 +178,40 @@ def _check_packed_weights(art: ProgramArtifacts) -> List[Violation]:
             "packed-weights", art.name,
             f"f32 parameter bytes ({f32_bytes}) >= unpacked tree size "
             f"({unpacked}) — weights are not being served packed"))
+    return out
+
+
+# -- quantized KV cache --------------------------------------------------
+
+def _check_quantized_kv(art: ProgramArtifacts) -> List[Violation]:
+    """A quantized-KV decode program must store its ring buffer at the
+    plan's KV byte widths: the int8 mantissa/exponent buffers account
+    for the cache bytes the engine allocated, and no cache-class
+    (>= SCALAR_MAX elems) bf16 parameter exists — a bf16 entry buffer
+    here is exactly the hidden fp spill the spec was meant to remove
+    (weights stay f32/s8; only the fp cache was ever bf16)."""
+    params = _entry_params(art.hlo)
+    if params is None:
+        return [Violation("quantized-kv", art.name,
+                          "could not locate entry_computation_layout")]
+    want = art.meta.get("kv_cache_int_bytes", 0)
+    int_bytes = sum(n for dtype, n in params
+                    if dtype in ("s8", "u8", "s4", "u4"))
+    out = []
+    if int_bytes < want:
+        out.append(Violation(
+            "quantized-kv", art.name,
+            f"integer entry-parameter bytes ({int_bytes}) < the engine's "
+            f"quantized cache allocation ({want}) — the KV ring buffer "
+            f"is not stored at plan widths"))
+    spilled = [n for dtype, n in params
+               if dtype == "bf16" and n >= SCALAR_MAX]
+    if spilled:
+        out.append(Violation(
+            "quantized-kv", art.name,
+            f"bf16 entry parameters of cache class remain "
+            f"({sorted(spilled, reverse=True)[:4]} elems) — the fp KV "
+            f"cache is spilling alongside the quantized one"))
     return out
 
 
@@ -192,6 +239,11 @@ PROGRAM_RULES: Tuple[Rule, ...] = (
          "never rematerialize the f32 tree",
          lambda art: art.kind == "decode" and art.meta.get("packed"),
          _check_packed_weights),
+    Rule("quantized-kv",
+         "quantized-KV decode programs store the ring buffer at plan "
+         "KV byte widths with no cache-class bf16 spill",
+         lambda art: art.kind == "decode" and art.meta.get("kv_bits"),
+         _check_quantized_kv),
 )
 
 

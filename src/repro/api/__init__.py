@@ -17,6 +17,7 @@ module-level mutable state.
 """
 from ..core.plan import LayerPlan, PrecisionPlan  # noqa: F401
 from .spec import (CompressionSpec, GRAD_COMPRESSION_KINDS,  # noqa: F401
-                   MeshSpec, PrecisionSpec, RunSpec, emit_pareto_specs)
+                   KV_CACHE_MODES, MeshSpec, PrecisionSpec, RunSpec,
+                   ServingSpec, emit_pareto_specs)
 from .context import (GradCompression, RunContext,  # noqa: F401
                       TrainSetup, build, build_mesh)

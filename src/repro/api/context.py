@@ -27,6 +27,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
+import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -178,6 +179,10 @@ class RunContext:
         # a plan stay HLO-byte-identical (tests/test_api.py)
         plan = spec.plan
         self.plan = None if plan is None or plan.is_uniform_int8 else plan
+        # the un-normalized plan: kv_bits resolution must see every entry
+        # (a plan that is uniform-int8 for wire/pack may still carry
+        # narrow KV widths, and normalizing it away would drop them)
+        self._full_plan = spec.plan
 
     # --------------------------- activation ----------------------------
 
@@ -326,13 +331,32 @@ class RunContext:
 
     def make_engine(self, params, qstate, **kwargs):
         """A continuous-batching ``serving.Engine`` serving this spec:
-        packing follows ``PrecisionSpec.packed_serving`` plus the spec's
-        precision plan, and the engine snapshots this context's trace
-        flags, so engines from different contexts coexist in one
-        process."""
-        from ..serving import Engine
-        kwargs.setdefault("packed", self.spec.precision.packed_serving)
+        slot count, packing, KV-cache storage and prefix reuse all come
+        from ``spec.serving`` (plus the spec's precision plan), and the
+        engine snapshots this context's trace flags, so engines from
+        different contexts coexist in one process.
+
+        ``batch_slots`` / ``packed`` / ``plan`` kwargs are deprecated
+        (one release): they shadow ``ServingSpec`` fields — put them in
+        the spec.  Workload knobs the spec does not own (``max_len``,
+        ``eos_id``, ``prefill_chunk``, ``seed``) pass through."""
+        from ..serving import Engine, resolve_kv_bits
+        sv = self.spec.serving
+        for kw, field in (("batch_slots", "serving.slots"),
+                          ("packed", "serving.packed"),
+                          ("plan", "RunSpec.plan")):
+            if kw in kwargs:
+                warnings.warn(
+                    f"make_engine({kw}=...) is deprecated: set "
+                    f"RunSpec.{field} instead (the kwarg still wins for "
+                    f"one release)", DeprecationWarning, stacklevel=2)
+        kwargs.setdefault("batch_slots", sv.slots)
+        kwargs.setdefault("packed", sv.resolved_packed(self.spec.precision))
         kwargs.setdefault("plan", self.plan)
+        kwargs.setdefault("kv_bits",
+                          resolve_kv_bits(sv.kv_cache, self._full_plan))
+        kwargs.setdefault("ring_slack", sv.ring_slack or None)
+        kwargs.setdefault("prefix_reuse", sv.prefix_reuse)
         with self.activate(packed=False):
             return Engine(self.model, params, qstate, self.cfg, **kwargs)
 

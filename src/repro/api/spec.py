@@ -11,6 +11,8 @@ frozen composition of:
   packing, packed-kernel routing;
 * :class:`CompressionSpec` — gradient compression kind, wire exchange
   layout, error-feedback residual layout;
+* :class:`ServingSpec` — continuous-batching slot count, ring-buffer
+  slack, packed-weight serving, KV-cache storage mode, prefix reuse;
 * the existing :class:`repro.train.TrainConfig` and
   :class:`repro.data.DataSpec`.
 
@@ -42,6 +44,8 @@ GRAD_COMPRESSION_KINDS = ("none", "bf16", "int8", "int8-wire",
                           "int8-wire-2d")
 WIRE_LAYOUTS = ("auto", "1d", "2d")
 COMPUTE_DTYPES = (None, "bfloat16", "float32")
+# mirrors serving.kvcache.KV_CACHE_MODES (this module stays jax-free)
+KV_CACHE_MODES = ("fp", "int8", "plan")
 
 
 def _check(cond: bool, msg: str) -> None:
@@ -201,6 +205,51 @@ class CompressionSpec:
         return self.resolved_wire_layout(model_size)
 
 
+@dataclasses.dataclass(frozen=True)
+class ServingSpec:
+    """Serving configuration as data: replaces the ad-hoc
+    ``make_engine(batch_slots=..., packed=..., plan=...)`` kwarg surface.
+
+    * ``slots`` — continuous-batching slot count (``Engine`` batch rows);
+    * ``ring_slack`` — extra ring-buffer slots beyond the attention
+      window; ``0`` = auto (follow the prefill chunk, the exactness
+      floor for chunked prefill);
+    * ``packed`` — serve from the HGQ int8-packed weight tree; ``None``
+      follows ``PrecisionSpec.packed_serving``;
+    * ``kv_cache`` — KV ring-buffer storage: ``"fp"`` (the exact legacy
+      bf16 cache, byte-identical HLO), ``"int8"`` (8-bit mantissas on
+      per-row 2^-f grids), or ``"plan"`` (the narrowest ``kv_bits`` the
+      run's :class:`core.plan.PrecisionPlan` resolves — nibble-packed
+      two-per-byte at <= 4 bits);
+    * ``prefix_reuse`` — cache prefilled prompt slices keyed by the
+      exact prompt, so re-submitting an identical prompt skips prefill.
+    """
+    slots: int = 8
+    ring_slack: int = 0
+    packed: Optional[bool] = None
+    kv_cache: str = "fp"
+    prefix_reuse: bool = False
+
+    def __post_init__(self):
+        _check(self.slots >= 1,
+               f"ServingSpec.slots must be >= 1, got {self.slots}")
+        _check(self.ring_slack >= 0,
+               f"ServingSpec.ring_slack must be >= 0, "
+               f"got {self.ring_slack}")
+        _check(self.kv_cache in KV_CACHE_MODES,
+               f"ServingSpec.kv_cache must be one of {KV_CACHE_MODES}, "
+               f"got {self.kv_cache!r}")
+        _check(self.packed is None or isinstance(self.packed, bool),
+               f"ServingSpec.packed must be None or a bool, "
+               f"got {self.packed!r}")
+
+    def resolved_packed(self, precision: PrecisionSpec) -> bool:
+        """The concrete packed-weight flag (``None`` follows
+        ``PrecisionSpec.packed_serving``)."""
+        return (precision.packed_serving if self.packed is None
+                else self.packed)
+
+
 def _default_train() -> TrainConfig:
     # the launcher's classic training hyperparameters (launch.train)
     return TrainConfig(steps=20, lr=1e-3, beta0=1e-9, beta1=1e-7)
@@ -226,6 +275,7 @@ class RunSpec:
         default_factory=CompressionSpec)
     train: TrainConfig = dataclasses.field(default_factory=_default_train)
     data: DataSpec = dataclasses.field(default_factory=_default_data)
+    serving: ServingSpec = dataclasses.field(default_factory=ServingSpec)
     # learned per-layer precision (core.plan.PrecisionPlan): wire widths
     # for the compressed gradient collective + pack widths for serving.
     # None (and any uniform-int8 plan) is byte-identical to the pre-plan
@@ -244,7 +294,7 @@ class RunSpec:
     def from_dict(cls, d: Dict[str, Any]) -> "RunSpec":
         parts = {"mesh": MeshSpec, "precision": PrecisionSpec,
                  "compression": CompressionSpec, "train": TrainConfig,
-                 "data": DataSpec}
+                 "data": DataSpec, "serving": ServingSpec}
         d = dict(d)
         known = {f.name for f in dataclasses.fields(cls)}
         unknown = set(d) - known
@@ -316,6 +366,15 @@ class RunSpec:
                         choices=["none", "bfloat16", "float32"],
                         help="matmul compute dtype "
                              "(PrecisionSpec.compute_dtype)")
+        ap.add_argument("--kv-cache", default=None,
+                        choices=list(KV_CACHE_MODES),
+                        help="serving KV ring-buffer storage "
+                             "(ServingSpec.kv_cache): fp keeps the exact "
+                             "legacy cache; int8/plan store 2^-f "
+                             "quantized mantissas at 8 / plan bits")
+        ap.add_argument("--slots", type=int, default=None,
+                        help="continuous-batching slot count "
+                             "(ServingSpec.slots)")
         ap.add_argument("--grad-compression",
                         choices=list(GRAD_COMPRESSION_KINDS), default=None,
                         help="bf16/int8 quantize the synchronized "
@@ -370,6 +429,13 @@ class RunSpec:
         if args.grad_compression is not None:
             rep["compression"] = dataclasses.replace(
                 spec.compression, kind=args.grad_compression)
+        sv: Dict[str, Any] = {}
+        if getattr(args, "kv_cache", None) is not None:
+            sv["kv_cache"] = args.kv_cache
+        if getattr(args, "slots", None) is not None:
+            sv["slots"] = args.slots
+        if sv:
+            rep["serving"] = dataclasses.replace(spec.serving, **sv)
         tr: Dict[str, Any] = {}
         if args.steps is not None:
             tr["steps"] = args.steps

@@ -12,6 +12,10 @@ per-layer table of
 * ``pack_bits``  — storage width of the serving weight pack
   (``serving/packed.py`` / ``dist.perf``; <= 4 nibble-packs two
   mantissas per byte);
+* ``kv_bits``    — storage width of the serving KV cache rows for the
+  layer's attention block (``serving/kvcache.py``; <= 4 nibble-packs two
+  mantissas per stored byte, dequantized inside the fused attention
+  read of ``kernels/kv_dequant``);
 * ``scale_exp``  — the layer's calibrated grid exponent (2^-f), recorded
   for reporting (dry-run cells, plan summaries) — consumers recompute
   their own exact grids.
@@ -47,9 +51,10 @@ class LayerPlan:
     wire_bits: int = 8
     pack_bits: int = 8
     scale_exp: Optional[float] = None
+    kv_bits: int = 8
 
     def __post_init__(self):
-        for name in ("wire_bits", "pack_bits"):
+        for name in ("wire_bits", "pack_bits", "kv_bits"):
             v = getattr(self, name)
             _check(MIN_BITS <= v <= MAX_BITS,
                    f"LayerPlan.{name} must be in "
@@ -92,14 +97,22 @@ class PrecisionPlan:
         return jax.tree_util.tree_map_with_path(
             lambda path, _: self.entry_for(path_key(path)).wire_bits, tree)
 
+    def kv_bits_for(self, key: str) -> int:
+        """KV-cache storage width for an attention layer path (deepest
+        ``layers`` match, like :meth:`entry_for`) — what the serving
+        quantized KV cache (``serving/kvcache.py``) resolves per model."""
+        return self.entry_for(key).kv_bits
+
     def summary(self) -> Dict[str, Any]:
         """Reporting view (dry-run cells, bench JSONs): the default plus
         every non-default layer's widths."""
         return {
             "default": {"wire_bits": self.default.wire_bits,
-                        "pack_bits": self.default.pack_bits},
+                        "pack_bits": self.default.pack_bits,
+                        "kv_bits": self.default.kv_bits},
             "layers": {k: {"wire_bits": e.wire_bits,
-                           "pack_bits": e.pack_bits}
+                           "pack_bits": e.pack_bits,
+                           "kv_bits": e.kv_bits}
                        for k, e in sorted(self.layers.items())},
         }
 

@@ -1,0 +1,16 @@
+"""Quantized-KV-cache kernels for the serving decode read.
+
+One kernel family covers the hot stages of the plan-width KV cache
+(``serving/kvcache.py``): per-row 2^-f grid-exponent computation +
+saturating quantize at the ring-buffer write, the plain ``q * 2^-f``
+decode, and the fused dequant-attention read that streams int8/nibble
+cache bytes from HBM and dequantizes in VMEM.  ``ops`` selects the
+compiled Pallas kernel on TPU and the jnp reference elsewhere
+(tests/test_kv_dequant.py pins the elementwise kernels bit-identical in
+interpret mode and the fused read numerically tight).
+"""
+from .ops import (kv_attention_decode, kv_dequant, kv_pack, kv_quantize,
+                  kv_unpack, use_fused_kernel)
+
+__all__ = ["kv_attention_decode", "kv_dequant", "kv_pack", "kv_quantize",
+           "kv_unpack", "use_fused_kernel"]

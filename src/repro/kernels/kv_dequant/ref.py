@@ -1,0 +1,104 @@
+"""Reference math of the quantized-KV-cache family.
+
+Pure jnp, and *definitionally* the semantics of the serving quantized KV
+cache: ``kv_quantize_ref`` is the per-row (token x kv-head) 2^-f grid
+store — amax over the head dim picks the capped grid exponent of
+``kernels.qmatmul.ops.grid_exponent``, mantissas saturate at
+``mantissa_max(bits)`` — and ``kv_attention_ref`` is the decode
+attention read over dequantized mantissas, the exact expression of
+``nn.attention._decode_attention`` with the dequant fused in front.
+Off-TPU this IS the fast path — XLA fuses dequant into the attention
+einsums — while ``kernel.py`` is the single-VMEM-pass Pallas
+realization; tests/test_kv_dequant.py pins the elementwise kernels
+bit-identical and the fused attention read numerically tight against
+these.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...core.quantizer import _exp2i, quantize_inference
+from ..qmatmul.ops import (grid_exponent, mantissa_max, pack_nibbles,
+                           unpack_nibbles)
+
+NEG_INF = -1e30
+
+
+def kv_grid_exponent(rows: jax.Array, bits: int) -> jax.Array:
+    """Per-row grid exponent ``f`` for ``[..., hd]`` k/v rows: amax over
+    the head dim -> the capped 2^-f grid of ``qmatmul.grid_exponent``."""
+    amax = jnp.max(jnp.abs(rows.astype(jnp.float32)), axis=-1)
+    return grid_exponent(amax, bits)
+
+
+def kv_quantize_ref(rows: jax.Array, bits: int
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """``[..., hd]`` fp rows -> (int8 mantissas ``[..., hd]``, int8 grid
+    exponents ``[...]``).  ``x ~ mantissa * 2^-f`` with the per-row f
+    chosen so amax fits in +-``mantissa_max(bits)``."""
+    f = kv_grid_exponent(rows, bits)
+    qmax = mantissa_max(bits)
+    q = jnp.clip(jnp.round(rows.astype(jnp.float32) * _exp2i(f)[..., None]),
+                 -qmax, qmax).astype(jnp.int8)
+    return q, f.astype(jnp.int8)
+
+
+def kv_dequant_ref(q: jax.Array, f: jax.Array) -> jax.Array:
+    """(int8 mantissas ``[..., hd]``, int8 exponents ``[...]``) -> fp32
+    ``q * 2^-f`` — the one decode expression every reader shares."""
+    return q.astype(jnp.float32) * _exp2i(-f.astype(jnp.float32))[..., None]
+
+
+def kv_pack_ref(q: jax.Array) -> jax.Array:
+    """Nibble-pack int4-range mantissas two per stored byte along the
+    head dim (``kv_bits <= 4`` storage format; hd is even by RoPE)."""
+    return pack_nibbles(q, axis=-1)
+
+
+def kv_unpack_ref(packed: jax.Array, hd: int) -> jax.Array:
+    """Inverse of :func:`kv_pack_ref`: ``[..., hd // 2]`` bytes ->
+    ``[..., hd]`` sign-extended int8 mantissas."""
+    return unpack_nibbles(packed, hd, axis=-1)
+
+
+def kv_attention_ref(qg: jax.Array, km: jax.Array, kf: jax.Array,
+                     vm: jax.Array, vf: jax.Array, qpos: jax.Array,
+                     tpos: jax.Array, *, window: Optional[int],
+                     probs_f: Optional[jax.Array] = None) -> jax.Array:
+    """Decode attention over a quantized ring cache, dequant fused.
+
+    ``qg`` [B, S, KV, G, hd] fp queries; ``km``/``vm`` [B, W, KV, hd]
+    int8 mantissas (or [B, W, KV, hd//2] nibble-packed when ``hd`` does
+    not match); ``kf``/``vf`` [B, W, KV] int8 grid exponents; ``qpos``
+    [B, S] global query positions; ``tpos`` [B, W] global position per
+    cache slot (negative = never written).  Math is expression-for-
+    expression ``nn.attention._decode_attention`` on the dequantized
+    cache, so the fp and quantized paths differ only by the storage
+    grid.
+    """
+    B, S, KV, G, hd = qg.shape
+    if km.shape[-1] != hd:
+        km = kv_unpack_ref(km, hd)
+        vm = kv_unpack_ref(vm, hd)
+    k_all = kv_dequant_ref(km, kf)                # [B, W, KV, hd] fp32
+    v_all = kv_dequant_ref(vm, vf)
+    scale = hd ** -0.5
+    s = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32), k_all,
+                   preferred_element_type=jnp.float32) * scale
+    mask = (tpos[:, None, :] <= qpos[:, :, None]) & (tpos[:, None, :] >= 0)
+    if window is not None:
+        mask &= (qpos[:, :, None] - tpos[:, None, :]) < window
+    mask = mask[:, None, None]                    # [B, 1, 1, S, T]
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    pt = jnp.exp(s - m)
+    pt = jnp.where(mask, pt, 0.0)
+    if probs_f is not None:
+        pt = quantize_inference(pt, probs_f)
+    l = jnp.sum(pt, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgst,btkh->bskgh", pt / jnp.maximum(l, 1e-20), v_all,
+                   preferred_element_type=jnp.float32)
+    return o.astype(qg.dtype)

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from ..core import hgq
 from ..core.hgq import Aux
 from ..dist.axes import constrain
-from ..nn.attention import (AttnConfig, GQAAttention, KVCache,
+from ..nn.attention import (AttnConfig, GQAAttention, KVCache, QKVCache,
                             decode_positions)
 from ..nn.basic import HDense, HEmbedding, RMSNorm
 from ..nn.mlp import GLUMLP
@@ -26,8 +26,10 @@ from .config import ModelConfig
 class GriffinCaches(NamedTuple):
     conv: jax.Array      # [n_rec, B, cw-1, d_rnn]
     h: jax.Array         # [n_rec, B, d_rnn]
-    k: jax.Array         # [n_att, B, W, KV, hd]
-    v: jax.Array
+    k: jax.Array         # [n_att, B, W, KV, hd] (int8 mantissas when
+    v: jax.Array         # quantized; [.., hd//2] nibble-packed <= 4 bits)
+    kf: Optional[jax.Array] = None   # [n_att, B, W, KV] grid exponents
+    vf: Optional[jax.Array] = None   # (None = legacy fp cache)
 
 
 def _rg_cfg(cfg: ModelConfig) -> RGLRUConfig:
@@ -105,7 +107,7 @@ class GriffinLM:
     # ------------------------------------------------------------------
     @staticmethod
     def _block(lp, lq, x, kind, cfg, mode, aux, positions, rec_state=None,
-               kv_cache=None, cache_pos=None):
+               kv_cache=None, cache_pos=None, kv_bits=None):
         newq: Dict[str, Any] = {}
         h, newq["ln1"] = RMSNorm.apply(lp["ln1"], lq["ln1"], x, mode=mode,
                                        aux=aux)
@@ -119,7 +121,7 @@ class GriffinLM:
             m, newq["mix"], new_cache = GQAAttention.apply(
                 lp["mix"], lq["mix"], h, cfg=_attn_cfg(cfg), mode=mode,
                 aux=aux, positions=positions, cache=kv_cache,
-                cache_pos=cache_pos)
+                cache_pos=cache_pos, kv_bits=kv_bits)
         x = x + m.q
         h, newq["ln2"] = RMSNorm.apply(lp["ln2"], lq["ln2"], x, mode=mode,
                                        aux=aux)
@@ -129,14 +131,19 @@ class GriffinLM:
 
     @staticmethod
     def _stack(p, q, x, positions, cfg: ModelConfig, mode,
-               caches: Optional[GriffinCaches], cache_pos):
+               caches: Optional[GriffinCaches], cache_pos, kv_bits=None):
         units, rem, _ = _layer_counts(cfg)
         decode = caches is not None
+        quant = decode and caches.kf is not None
 
         def unit_body(carry, xs):
             h, ebops, l1 = carry
             carry = (h, ebops, l1)
-            if decode:
+            if quant:
+                up, uq, (c1, h1, c2, h2, kc, vc, kcf, vcf) = xs
+                s1, s2 = GriffinState(c1, h1), GriffinState(c2, h2)
+                kvc = QKVCache(kc, vc, kcf, vcf)
+            elif decode:
                 up, uq, (c1, h1, c2, h2, kc, vc) = xs
                 s1, s2 = GriffinState(c1, h1), GriffinState(c2, h2)
                 kvc = KVCache(kc, vc)
@@ -153,9 +160,12 @@ class GriffinLM:
                 rec_state=s2)
             h, nq["att"], _, nkv = GriffinLM._block(
                 up["att"], uq["att"], h, "att", cfg, mode, aux, positions,
-                kv_cache=kvc, cache_pos=cache_pos)
+                kv_cache=kvc, cache_pos=cache_pos, kv_bits=kv_bits)
             e, l = aux.as_tuple()
-            if decode:
+            if quant:
+                out = (nq, (ns1.conv, ns1.h, ns2.conv, ns2.h,
+                            nkv.k, nkv.v, nkv.kf, nkv.vf))
+            elif decode:
                 out = (nq, (ns1.conv, ns1.h, ns2.conv, ns2.h, nkv.k, nkv.v))
             else:
                 out = nq
@@ -166,10 +176,11 @@ class GriffinLM:
                 unit_body, policy=jax.checkpoint_policies.nothing_saveable)
         if decode:
             nrec = 2 * units
+            kv_xs = (caches.k, caches.v) if not quant else \
+                (caches.k, caches.v, caches.kf, caches.vf)
             xs = (p["units"], q["units"],
                   (caches.conv[:nrec:2], caches.h[:nrec:2],
-                   caches.conv[1:nrec:2], caches.h[1:nrec:2],
-                   caches.k, caches.v))
+                   caches.conv[1:nrec:2], caches.h[1:nrec:2]) + kv_xs)
         else:
             xs = (p["units"], q["units"])
         (x, ebops, l1), out = jax.lax.scan(
@@ -192,7 +203,11 @@ class GriffinLM:
             aux_tot.merge(aux)
         newq["rem"] = rem_newq
         if decode:
-            c1, h1, c2, h2, kc, vc = out[1]
+            if quant:
+                c1, h1, c2, h2, kc, vc, kcf, vcf = out[1]
+            else:
+                c1, h1, c2, h2, kc, vc = out[1]
+                kcf = vcf = None
             conv_u = jnp.stack([c1, c2], axis=1).reshape(
                 (2 * units,) + c1.shape[1:])
             h_u = jnp.stack([h1, h2], axis=1).reshape(
@@ -202,7 +217,8 @@ class GriffinLM:
                     [conv_u, jnp.stack([s.conv for s in rem_states])], 0)
                 h_u = jnp.concatenate(
                     [h_u, jnp.stack([s.h for s in rem_states])], 0)
-            new_caches = GriffinCaches(conv=conv_u, h=h_u, k=kc, v=vc)
+            new_caches = GriffinCaches(conv=conv_u, h=h_u, k=kc, v=vc,
+                                       kf=kcf, vf=vcf)
         return x, newq, new_caches, aux_tot
 
     # ------------------------------------------------------------------
@@ -228,7 +244,8 @@ class GriffinLM:
 
     @staticmethod
     def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-                   dtype=jnp.bfloat16, ring_slack: int = 0) -> GriffinCaches:
+                   dtype=jnp.bfloat16, ring_slack: int = 0,
+                   kv_bits=None) -> GriffinCaches:
         units, rem, natt = _layer_counts(cfg)
         nrec = 2 * units + rem
         # ring_slack: see TransformerLM.init_cache — keeps multi-token
@@ -236,16 +253,22 @@ class GriffinLM:
         W = min(max_len, (cfg.window + ring_slack) if cfg.window
                 else max_len)
         rg = _rg_cfg(cfg)
+        kv_shape = (natt, batch, W, cfg.n_kv, cfg.hd)
+        if kv_bits is not None:
+            from ..serving.kvcache import quantized_cache
+            qkv = quantized_cache(kv_shape, kv_bits)
+            kv = dict(k=qkv.k, v=qkv.v, kf=qkv.kf, vf=qkv.vf)
+        else:
+            kv = dict(k=jnp.zeros(kv_shape, dtype),
+                      v=jnp.zeros(kv_shape, dtype))
         return GriffinCaches(
             conv=jnp.zeros((nrec, batch, rg.conv_width - 1, rg.d_rnn),
                            jnp.float32),
-            h=jnp.zeros((nrec, batch, rg.d_rnn), jnp.float32),
-            k=jnp.zeros((natt, batch, W, cfg.n_kv, cfg.hd), dtype),
-            v=jnp.zeros((natt, batch, W, cfg.n_kv, cfg.hd), dtype))
+            h=jnp.zeros((nrec, batch, rg.d_rnn), jnp.float32), **kv)
 
     @staticmethod
     def decode_step(p, q, caches: GriffinCaches, tokens, cache_pos,
-                    cfg: ModelConfig, mode: str = hgq.EVAL):
+                    cfg: ModelConfig, mode: str = hgq.EVAL, kv_bits=None):
         B, S = tokens.shape
         aux = Aux.zero()
         newq: Dict[str, Any] = {}
@@ -253,7 +276,8 @@ class GriffinLM:
                                             mode=mode, aux=aux)
         positions = decode_positions(cache_pos, S)
         x, nq, new_caches, _ = GriffinLM._stack(p, q, e.q, positions, cfg,
-                                                mode, caches, cache_pos)
+                                                mode, caches, cache_pos,
+                                                kv_bits=kv_bits)
         h, _ = RMSNorm.apply(p["final_norm"], q["final_norm"], x, mode=mode,
                              aux=aux)
         lt, _ = HDense.apply(p["lm_head"], q["lm_head"], h, mode=mode,

@@ -88,7 +88,7 @@ class TransformerLM:
     # -------------------------- layer body ------------------------------
     @staticmethod
     def _layer(lp, lq, x, positions, cache, cache_pos, cfg: ModelConfig,
-               mode: str):
+               mode: str, kv_bits: Optional[int] = None):
         Norm = _norm_cls(cfg)
         aux = Aux.zero()
         newq: Dict[str, Any] = {}
@@ -96,7 +96,8 @@ class TransformerLM:
                                     aux=aux)
         a, newq["attn"], new_cache = GQAAttention.apply(
             lp["attn"], lq["attn"], h, cfg=_attn_cfg(cfg), mode=mode, aux=aux,
-            positions=positions, cache=cache, cache_pos=cache_pos)
+            positions=positions, cache=cache, cache_pos=cache_pos,
+            kv_bits=kv_bits)
         x = constrain(x + a.q, "b..")
         h, newq["ln2"] = Norm.apply(lp["ln2"], lq["ln2"], x, mode=mode,
                                     aux=aux)
@@ -113,7 +114,7 @@ class TransformerLM:
     @staticmethod
     def _stack_forward(p, q, x, positions, cfg: ModelConfig, mode: str,
                        caches: Optional[KVCache] = None,
-                       cache_pos=None):
+                       cache_pos=None, kv_bits: Optional[int] = None):
         def body(carry, xs):
             h, ebops, l1 = carry
             if caches is not None:
@@ -122,7 +123,8 @@ class TransformerLM:
                 lp, lq = xs
                 cache_l = None
             h2, newlq, new_cache, (e, l) = TransformerLM._layer(
-                lp, lq, h, positions, cache_l, cache_pos, cfg, mode)
+                lp, lq, h, positions, cache_l, cache_pos, cfg, mode,
+                kv_bits=kv_bits)
             out = (newlq, new_cache) if caches is not None else newlq
             return (h2.astype(h.dtype), ebops + e, l1 + l), out
 
@@ -196,20 +198,26 @@ class TransformerLM:
     # ---------------------------- decode --------------------------------
     @staticmethod
     def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-                   dtype=jnp.bfloat16, ring_slack: int = 0) -> KVCache:
+                   dtype=jnp.bfloat16, ring_slack: int = 0,
+                   kv_bits: Optional[int] = None) -> KVCache:
         """``ring_slack``: extra ring-buffer slots beyond the attention
         window — writing a decode/prefill chunk of S <= ring_slack + 1
         tokens then never evicts history still inside the oldest chunk
-        query's window, keeping multi-token decode_step calls exact."""
+        query's window, keeping multi-token decode_step calls exact.
+        ``kv_bits``: plan-width quantized storage (``serving/kvcache.py``);
+        None keeps the exact legacy fp cache."""
         kv_len = min(max_len, cfg.window + ring_slack) if cfg.window \
             else max_len
         shape = (cfg.n_layers, batch, kv_len, cfg.n_kv, cfg.hd)
+        if kv_bits is not None:
+            from ..serving.kvcache import quantized_cache
+            return quantized_cache(shape, kv_bits)
         return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
 
     @staticmethod
     def decode_step(p, q, caches: KVCache, tokens: jax.Array,
                     cache_pos: jax.Array, cfg: ModelConfig,
-                    mode: str = hgq.EVAL):
+                    mode: str = hgq.EVAL, kv_bits: Optional[int] = None):
         """One decode step. tokens [B, S_new]; cache_pos scalar or per-slot
         [B] (ragged continuous batching). Returns (logits, new_caches)."""
         B, S = tokens.shape
@@ -220,7 +228,8 @@ class TransformerLM:
         positions = decode_positions(cache_pos, S)
         x, newq["layers"], new_caches, (ebops, l1) = \
             TransformerLM._stack_forward(p, q, e.q, positions, cfg, mode,
-                                         caches=caches, cache_pos=cache_pos)
+                                         caches=caches, cache_pos=cache_pos,
+                                         kv_bits=kv_bits)
         aux.add(ebops=ebops, l1=l1)
         Norm = _norm_cls(cfg)
         h, newq["final_norm"] = Norm.apply(p["final_norm"], q["final_norm"],

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from ..core import hgq
 from ..core.hgq import Aux, QTensor
 from ..dist.axes import constrain
-from ..nn.attention import (AttnConfig, GQAAttention, KVCache,
+from ..nn.attention import (AttnConfig, GQAAttention, KVCache, QKVCache,
                             decode_positions)
 from ..nn.basic import HDense, HEmbedding, LayerNorm
 from ..nn.mlp import MLP
@@ -22,11 +22,13 @@ from .config import ModelConfig
 
 
 class WhisperCaches(NamedTuple):
-    self_k: jax.Array    # [L, B, S_max, H, hd]
+    self_k: jax.Array    # [L, B, S_max, H, hd] (int8 mantissas quantized)
     self_v: jax.Array
-    cross_k: jax.Array   # [L, B, enc_seq, H, hd]
+    cross_k: jax.Array   # [L, B, enc_seq, H, hd] (always fp: written once)
     cross_v: jax.Array
     memory_ready: jax.Array  # scalar bool — cross K/V computed?
+    self_kf: Optional[jax.Array] = None  # [L, B, S_max, H] grid exponents
+    self_vf: Optional[jax.Array] = None  # (None = legacy fp self cache)
 
 
 def _attn_cfg(cfg: ModelConfig, causal: bool) -> AttnConfig:
@@ -193,12 +195,16 @@ class WhisperModel:
 
     @staticmethod
     def _decode_stack(p, q, x, memory: Optional[QTensor], positions, cfg,
-                      mode, aux, caches=None, cache_pos=None):
+                      mode, aux, caches=None, cache_pos=None, kv_bits=None):
         decode = caches is not None
+        quant = decode and caches.self_kf is not None
 
         def body(carry, xs):
             h, eb, l1 = carry
-            if decode:
+            if quant:
+                lp, lq, (sk, sv, skf, svf, ck, cv) = xs
+                kvc = QKVCache(sk, sv, skf, svf)
+            elif decode:
                 lp, lq, (sk, sv, ck, cv) = xs
                 kvc = KVCache(sk, sv)
             else:
@@ -211,7 +217,7 @@ class WhisperModel:
             at, nq["attn"], nkv = GQAAttention.apply(
                 lp["attn"], lq["attn"], n1, cfg=_attn_cfg(cfg, causal=True),
                 mode=mode, aux=a, positions=positions, cache=kvc,
-                cache_pos=cache_pos)
+                cache_pos=cache_pos, kv_bits=kv_bits)
             h = h + at.q
             nx, nq["ln_x"] = LayerNorm.apply(lp["ln_x"], lq["ln_x"], h,
                                              mode=mode, aux=a)
@@ -229,13 +235,22 @@ class WhisperModel:
             mt, nq["mlp"] = MLP.apply(lp["mlp"], lq["mlp"], n2, mode=mode,
                                       aux=a)
             e, l = a.as_tuple()
-            out = (nq, (nkv.k, nkv.v)) if decode else nq
+            if quant:
+                out = (nq, (nkv.k, nkv.v, nkv.kf, nkv.vf))
+            elif decode:
+                out = (nq, (nkv.k, nkv.v))
+            else:
+                out = nq
             return ((h + mt.q).astype(carry[0].dtype), eb + e, l1 + l), out
 
         if cfg.remat:
             body = jax.checkpoint(
                 body, policy=jax.checkpoint_policies.nothing_saveable)
-        if decode:
+        if quant:
+            xs = (p["dec_layers"], q["dec_layers"],
+                  (caches.self_k, caches.self_v, caches.self_kf,
+                   caches.self_vf, caches.cross_k, caches.cross_v))
+        elif decode:
             xs = (p["dec_layers"], q["dec_layers"],
                   (caches.self_k, caches.self_v, caches.cross_k,
                    caches.cross_v))
@@ -279,15 +294,25 @@ class WhisperModel:
 
     @staticmethod
     def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-                   dtype=jnp.bfloat16, ring_slack: int = 0) -> WhisperCaches:
+                   dtype=jnp.bfloat16, ring_slack: int = 0,
+                   kv_bits=None) -> WhisperCaches:
         del ring_slack  # decoder self-attn cache is not windowed
         L, H, hd = cfg.n_layers, cfg.n_heads, cfg.hd
+        self_shape = (L, batch, max_len, H, hd)
+        if kv_bits is not None:
+            # cross K/V stays fp: written once at prefill, not the
+            # per-tick bandwidth the ring quantization targets
+            from ..serving.kvcache import quantized_cache
+            qkv = quantized_cache(self_shape, kv_bits)
+            selfkv = dict(self_k=qkv.k, self_v=qkv.v,
+                          self_kf=qkv.kf, self_vf=qkv.vf)
+        else:
+            selfkv = dict(self_k=jnp.zeros(self_shape, dtype),
+                          self_v=jnp.zeros(self_shape, dtype))
         return WhisperCaches(
-            self_k=jnp.zeros((L, batch, max_len, H, hd), dtype),
-            self_v=jnp.zeros((L, batch, max_len, H, hd), dtype),
             cross_k=jnp.zeros((L, batch, cfg.enc_seq, H, hd), dtype),
             cross_v=jnp.zeros((L, batch, cfg.enc_seq, H, hd), dtype),
-            memory_ready=jnp.zeros((), jnp.bool_))
+            memory_ready=jnp.zeros((), jnp.bool_), **selfkv)
 
     @staticmethod
     def prefill_cross(p, q, caches: WhisperCaches, frame_embeds, cfg,
@@ -308,7 +333,7 @@ class WhisperModel:
 
     @staticmethod
     def decode_step(p, q, caches: WhisperCaches, tokens, cache_pos,
-                    cfg: ModelConfig, mode: str = hgq.EVAL):
+                    cfg: ModelConfig, mode: str = hgq.EVAL, kv_bits=None):
         aux = Aux.zero()
         newq: Dict[str, Any] = {}
         B, S = tokens.shape
@@ -320,11 +345,15 @@ class WhisperModel:
         x = e.q + (pe if positions.ndim == 2 else pe[None])
         x, _, new_kv = WhisperModel._decode_stack(
             p, q, x, None, positions, cfg, mode, aux, caches=caches,
-            cache_pos=cache_pos)
+            cache_pos=cache_pos, kv_bits=kv_bits)
         h, _ = LayerNorm.apply(p["dec_norm"], q["dec_norm"], x, mode=mode,
                                aux=aux)
         from ..nn.common import get_qw
         wq = get_qw(p["embed"]["table"], mode)
         logits = constrain(jnp.matmul(h.q.astype(wq.q.dtype), wq.q.T), "b.m")
+        if caches.self_kf is not None:
+            nk, nv, nkf, nvf = new_kv
+            return logits, caches._replace(self_k=nk, self_v=nv,
+                                           self_kf=nkf, self_vf=nvf)
         nk, nv = new_kv
         return logits, caches._replace(self_k=nk, self_v=nv)

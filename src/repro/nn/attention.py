@@ -47,6 +47,20 @@ class KVCache(NamedTuple):
     v: jax.Array
 
 
+class QKVCache(NamedTuple):
+    """Plan-width quantized ring cache: int8 mantissas on a per-row
+    (token x kv-head) 2^-f grid, the grid exponents riding alongside in
+    ring-indexed buffers scatter-written at the same slots.  ``k``/``v``
+    are ``[B, W, KV, hd]`` (or ``[B, W, KV, hd // 2]`` nibble-packed when
+    ``kv_bits <= 4``); ``kf``/``vf`` are ``[B, W, KV]`` int8 exponents.
+    Built by ``serving/kvcache.py``; read by the fused dequant-attention
+    kernel (``kernels/kv_dequant``)."""
+    k: jax.Array
+    v: jax.Array
+    kf: jax.Array
+    vf: jax.Array
+
+
 # int8 KV cache (beyond-paper, HGQ-machinery): k/v stored as round(x * 2^4)
 # — halves cache HBM traffic vs bf16 at decode.  Static scale: post-HGQ
 # activations are range-calibrated, |k|,|v| < 8 by construction.
@@ -118,7 +132,8 @@ class GQAAttention:
     @staticmethod
     def apply(p, q, x: QTensor, *, cfg: AttnConfig, mode: str, aux: Aux,
               positions: jax.Array, cache: Optional[KVCache] = None,
-              cache_pos: Optional[jax.Array] = None
+              cache_pos: Optional[jax.Array] = None,
+              kv_bits: Optional[int] = None
               ) -> Tuple[QTensor, Dict[str, Any], Optional[KVCache]]:
         B, S, _ = x.q.shape
         H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
@@ -158,11 +173,27 @@ class GQAAttention:
             else:
                 slot = qpos
             bidx = jnp.arange(B)[:, None]
-            k_all = cache.k.at[bidx, slot].set(
-                _cache_store(kh, cache.k.dtype), mode="drop")
-            v_all = cache.v.at[bidx, slot].set(
-                _cache_store(vh, cache.v.dtype), mode="drop")
-            new_cache = KVCache(k_all, v_all)
+            quantized = isinstance(cache, QKVCache)
+            if quantized:
+                # plan-width store: per-row 2^-f grid mantissas + the grid
+                # exponents, scatter-written at the same newest-wins slots
+                from ..kernels.kv_dequant.ops import (kv_attention_decode,
+                                                      kv_pack, kv_quantize)
+                km_new, kf_new = kv_quantize(kh, kv_bits or 8)
+                vm_new, vf_new = kv_quantize(vh, kv_bits or 8)
+                if cache.k.shape[-1] != kh.shape[-1]:
+                    km_new, vm_new = kv_pack(km_new), kv_pack(vm_new)
+                k_all = cache.k.at[bidx, slot].set(km_new, mode="drop")
+                v_all = cache.v.at[bidx, slot].set(vm_new, mode="drop")
+                kf_all = cache.kf.at[bidx, slot].set(kf_new, mode="drop")
+                vf_all = cache.vf.at[bidx, slot].set(vf_new, mode="drop")
+                new_cache = QKVCache(k_all, v_all, kf_all, vf_all)
+            else:
+                k_all = cache.k.at[bidx, slot].set(
+                    _cache_store(kh, cache.k.dtype), mode="drop")
+                v_all = cache.v.at[bidx, slot].set(
+                    _cache_store(vh, cache.v.dtype), mode="drop")
+                new_cache = KVCache(k_all, v_all)
             if cfg.window is not None:
                 # slot s holds global position last - ((last - s) % W) where
                 # last is the row's newest written position; never-written
@@ -171,9 +202,14 @@ class GQAAttention:
                 tpos = last[:, None] - jnp.mod(last[:, None] - spos[None], W)
             else:
                 tpos = jnp.broadcast_to(jnp.arange(W), (B, W))
-            out = _decode_attention(qh, _cache_load(k_all),
-                                    _cache_load(v_all), qpos, cfg,
-                                    probs_f, mode, tpos=tpos)
+            if quantized:
+                out = kv_attention_decode(
+                    qh, k_all, kf_all, v_all, vf_all, qpos, tpos,
+                    window=cfg.window, n_kv=KV, probs_f=probs_f)
+            else:
+                out = _decode_attention(qh, _cache_load(k_all),
+                                        _cache_load(v_all), qpos, cfg,
+                                        probs_f, mode, tpos=tpos)
             kv_len = W
         else:
             out = _chunked_attention(qh, kh, vh, positions, cfg, probs_f, mode)

@@ -1,2 +1,5 @@
-from .engine import Engine, Request, SamplingConfig, generate
+from .engine import (Engine, Request, RequestHandle, SamplingConfig,
+                     generate)
+from .kvcache import (KV_CACHE_MODES, kv_bytes_per_token, quantized_cache,
+                      resolve_kv_bits)
 from .packed import pack_for_serving, pack_tree

@@ -21,6 +21,15 @@ Architecture (one ``Engine`` = one model replica):
 * **Packed weights.** ``packed=True`` converts params to the HGQ int8 +
   per-channel 2^-f serving tree (``serving/packed.py``) and routes decode
   projections onto the fused dequant-matmul ``kernels.qmatmul.qmatmul_any``.
+* **Quantized KV.** ``kv_bits=b`` stores the ring buffer as int8
+  mantissas on per-row 2^-f grids (nibble-packed at b <= 4) with the
+  grid exponents riding alongside through the slot scheduler; decode
+  reads through the fused dequant-attention kernel
+  (``kernels.kv_dequant``).  ``None`` keeps the legacy fp cache,
+  byte-identical HLO.
+* **Handles.** ``submit(req)`` returns a :class:`RequestHandle`;
+  ``tokens(handle)`` reads its output incrementally while ticking the
+  engine; ``run(requests)`` is the thin serve-to-completion wrapper.
 
 ``generate`` remains the single-batch greedy reference the engine is
 tested token-for-token against.
@@ -65,6 +74,25 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass
+class RequestHandle:
+    """Admission receipt for one submitted request: what ``submit``
+    returns and ``Engine.tokens`` reads from.  Truthy (so legacy
+    ``if eng.submit(req):`` call sites keep working — a full engine
+    returns ``None``); carries the request plus the incremental-read
+    cursor."""
+    request: Request
+    _cursor: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.request.done
+
+    @property
+    def out(self) -> List[int]:
+        return self.request.out
+
+
 def _sample(logits: jax.Array, key: jax.Array, temp: jax.Array,
             topk: jax.Array, enable: bool = True) -> jax.Array:
     """Per-row sampling: logits [B, V]; temp [B] (<=0 greedy); topk [B]
@@ -92,11 +120,17 @@ class Engine:
     def __init__(self, model, params, qstate, cfg: ModelConfig, *,
                  batch_slots: int = 8, max_len: int = 512,
                  eos_id: Optional[int] = None, packed: bool = False,
-                 plan=None, prefill_chunk: int = 16, seed: int = 0):
+                 plan=None, prefill_chunk: int = 16, seed: int = 0,
+                 kv_bits: Optional[int] = None,
+                 ring_slack: Optional[int] = None,
+                 prefix_reuse: bool = False):
         self.model = model
         self.cfg = cfg
         self.packed = packed
         self.plan = plan       # PrecisionPlan: per-layer pack widths
+        # kv_bits: plan-width quantized KV ring storage (serving/kvcache);
+        # None keeps the exact legacy fp cache and its byte-identical HLO
+        self.kv_bits = kv_bits
         # snapshot the trace-time configuration in scope at construction
         # (a RunContext's activate(), or the process defaults): every
         # trace this engine owns re-binds exactly this snapshot, so
@@ -116,9 +150,19 @@ class Engine:
         self.prefill_chunk = max(1, min(prefill_chunk, W))
         # ring_slack: a windowed ring buffer gets prefill_chunk extra slots
         # so writing a whole chunk never evicts history still inside the
-        # chunk's oldest query window — chunked prefill stays exact
+        # chunk's oldest query window — chunked prefill stays exact.  An
+        # explicit ring_slack only widens that floor (shrinking below the
+        # chunk would break prefill exactness).
+        self.ring_slack = (self.prefill_chunk if not ring_slack
+                           else max(ring_slack, self.prefill_chunk))
         self.caches = model.init_cache(cfg, batch_slots, max_len,
-                                       ring_slack=self.prefill_chunk)
+                                       ring_slack=self.ring_slack,
+                                       kv_bits=kv_bits)
+        self.prefix_reuse = prefix_reuse
+        # prompt tuple -> (prefilled slot slice, last-position logits);
+        # bounded LRU so long-lived engines don't hoard cache slices
+        self._prefix_cache: "dict" = {}
+        self._prefix_cap = 32
         # a zeroed single-slot cache slice: prefill always starts from a
         # clean slot (also resets recurrent state left by the previous
         # occupant — KV junk is masked by positions, recurrent state isn't)
@@ -133,14 +177,21 @@ class Engine:
 
     # ------------------------------------------------------------------
     def _build(self) -> None:
-        model, cfg = self.model, self.cfg
+        model, cfg, kv_bits = self.model, self.cfg, self.kv_bits
 
         def decode(p, q, c, tok, pos, key, temp, topk, enable):
-            logits, c = model.decode_step(p, q, c, tok, pos, cfg)
+            if kv_bits is None:
+                logits, c = model.decode_step(p, q, c, tok, pos, cfg)
+            else:
+                logits, c = model.decode_step(p, q, c, tok, pos, cfg,
+                                              kv_bits=kv_bits)
             return _sample(logits[:, -1], key, temp, topk, enable), c
 
         def prefill(p, q, cs, tok, pos):
-            return model.decode_step(p, q, cs, tok, pos, cfg)
+            if kv_bits is None:
+                return model.decode_step(p, q, cs, tok, pos, cfg)
+            return model.decode_step(p, q, cs, tok, pos, cfg,
+                                     kv_bits=kv_bits)
 
         # donate the cache through the per-token tick and the slot splice so
         # XLA aliases it in place instead of copying the full KV/state tree
@@ -194,19 +245,10 @@ class Engine:
         self._key, sub = jax.random.split(self._key)
         return sub
 
-    def submit(self, req: Request) -> bool:
-        """Admit one request: chunked prefill into a fresh slot slice at
-        offset 0, splice it into the batch cache, sample the first token.
-        Returns False when no slot is free."""
-        slot = self._free_slot()
-        if slot is None:
-            return False
-        plen = len(req.prompt)
-        if plen < 1 or req.max_new < 1 or \
-                plen + req.max_new > self.max_len:
-            raise ValueError(
-                f"need prompt >= 1 ({plen}), max_new >= 1 ({req.max_new}), "
-                f"and prompt + max_new <= max_len ({self.max_len})")
+    def _prefill_prompt(self, prompt: List[int]):
+        """Chunked prefill of one prompt into a fresh slot slice at
+        offset 0: (slice, last-position logits)."""
+        plen = len(prompt)
         C = self.prefill_chunk
         cs = self._fresh_slot
         last_logits = None
@@ -218,12 +260,40 @@ class Engine:
         while start < plen:
             n = C if plen - start >= C else \
                 1 << ((plen - start).bit_length() - 1)
-            tok = jnp.asarray([req.prompt[start:start + n]], jnp.int32)
+            tok = jnp.asarray([prompt[start:start + n]], jnp.int32)
             logits, cs = self._run(self._prefill, self.p, self.q, cs, tok,
                                    jnp.int32(start))
             start += n
             if start >= plen:
                 last_logits = logits[:, -1]
+        return cs, last_logits
+
+    def submit(self, req: Request) -> Optional[RequestHandle]:
+        """Admit one request: chunked prefill into a fresh slot slice at
+        offset 0, splice it into the batch cache, sample the first token.
+        Returns a truthy :class:`RequestHandle`, or None when no slot is
+        free."""
+        slot = self._free_slot()
+        if slot is None:
+            return None
+        plen = len(req.prompt)
+        if plen < 1 or req.max_new < 1 or \
+                plen + req.max_new > self.max_len:
+            raise ValueError(
+                f"need prompt >= 1 ({plen}), max_new >= 1 ({req.max_new}), "
+                f"and prompt + max_new <= max_len ({self.max_len})")
+        key = tuple(req.prompt) if self.prefix_reuse else None
+        if key is not None and key in self._prefix_cache:
+            # exact-prompt reuse: the cached slice is an immutable jax
+            # value (prefill never donates), so splicing it again is safe
+            cs, last_logits = self._prefix_cache.pop(key)
+            self._prefix_cache[key] = (cs, last_logits)   # LRU refresh
+        else:
+            cs, last_logits = self._prefill_prompt(req.prompt)
+            if key is not None:
+                self._prefix_cache[key] = (cs, last_logits)
+                while len(self._prefix_cache) > self._prefix_cap:
+                    self._prefix_cache.pop(next(iter(self._prefix_cache)))
         self.caches = self._write_slot(self.caches, cs, jnp.int32(slot))
         sc = self._sampling(req)
         first = self._run(
@@ -234,7 +304,7 @@ class Engine:
         self.slot_pos[slot] = plen
         self._next_tok[slot] = int(first[0])
         self._record(slot, int(first[0]))
-        return True
+        return RequestHandle(req)
 
     def _record(self, slot: int, token: int) -> None:
         """Append a sampled token; finish + recycle the slot on EOS/len."""
@@ -271,8 +341,25 @@ class Engine:
             self._next_tok[i] = nxt[i]
             self._record(i, int(nxt[i]))
 
+    def tokens(self, handle: RequestHandle):
+        """Incremental token reader for one admitted request: yields each
+        sampled token as it lands, ticking the engine (``step()``) when
+        the request has produced nothing new yet.  Other active slots
+        advance on the same ticks — interleaving readers IS continuous
+        batching."""
+        req = handle.request
+        while True:
+            while handle._cursor < len(req.out):
+                tok = req.out[handle._cursor]
+                handle._cursor += 1
+                yield tok
+            if req.done:
+                return
+            self.step()
+
     def run(self, requests: List[Request]) -> List[Request]:
-        """Serve a workload to completion with continuous batching."""
+        """Serve a workload to completion with continuous batching: the
+        thin batch wrapper over ``submit``/``step``."""
         pending = list(requests)
         while pending or any(r is not None for r in self.slot_req):
             while pending and self._free_slot() is not None:

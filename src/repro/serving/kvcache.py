@@ -1,0 +1,81 @@
+"""Plan-width quantized KV cache: construction and width resolution.
+
+Decode is KV-cache-bandwidth-bound (BENCH_serving.json: packed weights
+move mixed throughput 10.8x and decode not at all), so the ring buffer
+is the hottest serving buffer the precision plan can still shrink.  This
+module is the serving-side glue around :class:`nn.attention.QKVCache`:
+
+* :func:`quantized_cache` builds the zeroed container for a model cache
+  stack — int8 mantissas on per-row 2^-f grids (nibble-packed two per
+  byte at ``kv_bits <= 4``) plus the ring-indexed int8 grid-exponent
+  buffers that ride alongside through the Engine's slot scheduler,
+  checkpoint-free;
+* :func:`resolve_kv_bits` maps a ``ServingSpec.kv_cache`` mode to the
+  storage width — ``"fp"`` -> None (the exact legacy cache and HLO),
+  ``"int8"`` -> 8, ``"plan"`` -> the narrowest ``kv_bits`` the
+  :class:`core.plan.PrecisionPlan` resolves (the scan-stacked layers
+  share one homogeneous cache, so the narrowest entry is the one that
+  can hold every layer's calibrated range);
+* :func:`kv_bytes_per_token` is the byte-width formula the README and
+  bench meta report.
+
+Quantize-at-write and the fused dequant-attention read live in
+``nn/attention.py`` / ``kernels/kv_dequant``; this module never touches
+tensors larger than the empty cache it allocates.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from ..core.plan import NIBBLE_BITS, PrecisionPlan
+from ..nn.attention import QKVCache
+
+KV_CACHE_MODES = ("fp", "int8", "plan")
+
+
+def quantized_cache(shape: Tuple[int, ...], kv_bits: int) -> QKVCache:
+    """Zeroed quantized cache for a ``[..., W, KV, hd]`` stack (any
+    leading layer/batch dims).  Mantissas store ``hd`` int8 bytes per
+    row, or ``hd // 2`` nibble-packed at ``kv_bits <= NIBBLE_BITS``;
+    exponents drop the head dim.  Zero mantissas under zero exponents
+    decode to 0.0, and never-written slots are masked by ``tpos`` anyway,
+    so the empty cache is exact."""
+    hd = shape[-1]
+    if kv_bits <= NIBBLE_BITS:
+        if hd % 2:
+            raise ValueError(f"nibble-packed kv cache needs even head dim, "
+                             f"got {hd}")
+        hd = hd // 2
+    m_shape = shape[:-1] + (hd,)
+    return QKVCache(k=jnp.zeros(m_shape, jnp.int8),
+                    v=jnp.zeros(m_shape, jnp.int8),
+                    kf=jnp.zeros(shape[:-1], jnp.int8),
+                    vf=jnp.zeros(shape[:-1], jnp.int8))
+
+
+def resolve_kv_bits(kv_cache: str,
+                    plan: Optional[PrecisionPlan]) -> Optional[int]:
+    """``ServingSpec.kv_cache`` mode -> mantissa storage width (None =
+    keep the legacy fp cache)."""
+    if kv_cache not in KV_CACHE_MODES:
+        raise ValueError(f"kv_cache must be one of {KV_CACHE_MODES}, "
+                         f"got {kv_cache!r}")
+    if kv_cache == "fp":
+        return None
+    if kv_cache == "int8" or plan is None:
+        return 8
+    entries = [plan.default, *plan.layers.values()]
+    return min(e.kv_bits for e in entries)
+
+
+def kv_bytes_per_token(n_kv: int, hd: int, n_layers: int,
+                       kv_bits: Optional[int]) -> int:
+    """Stored cache bytes per token row across a model's attention
+    layers: ``2 * KV * (hd * b/8 + 1)`` per layer quantized (mantissas
+    plus one grid-exponent byte), ``2 * KV * hd * 2`` fp (bf16)."""
+    if kv_bits is None:
+        return 2 * n_kv * hd * 2 * n_layers
+    per_head = (hd // 2 if kv_bits <= NIBBLE_BITS else hd) + 1
+    return 2 * n_kv * per_head * n_layers

@@ -20,7 +20,7 @@ from hypothesis import strategies as st
 
 from repro.analysis import strip_metadata, train_step_hlo
 from repro.api import (CompressionSpec, GRAD_COMPRESSION_KINDS, MeshSpec,
-                       PrecisionSpec, RunSpec, build)
+                       PrecisionSpec, RunSpec, ServingSpec, build)
 
 multidevice = pytest.mark.skipif(
     jax.device_count() < 8,
@@ -415,10 +415,10 @@ def test_engine_snapshot_isolated_from_later_scopes():
     """An Engine built under one context keeps decoding identically even
     while another context with different precision is active — the
     engine's trace-time snapshot, not ambient state, governs it."""
-    spec = RunSpec(arch="qwen2-0.5b")
+    spec = RunSpec(arch="qwen2-0.5b", serving=ServingSpec(slots=2))
     ctx = build(spec)
     params, qstate = ctx.init_state()
-    eng = ctx.make_engine(params, qstate, batch_slots=2, max_len=32)
+    eng = ctx.make_engine(params, qstate, max_len=32)
     from repro.serving import Request
     r1 = Request(prompt=[3, 1, 4, 1], max_new=5)
     eng.run([r1])
@@ -428,3 +428,85 @@ def test_engine_snapshot_isolated_from_later_scopes():
         r2 = Request(prompt=[3, 1, 4, 1], max_new=5)
         eng.run([r2])          # traces/caches under the engine snapshot
     assert r1.out == r2.out
+
+
+# ----------------------------- ServingSpec ---------------------------------
+
+def test_serving_spec_roundtrip_and_validation():
+    s = RunSpec(serving=ServingSpec(slots=4, kv_cache="plan",
+                                    packed=True, prefix_reuse=True))
+    assert RunSpec.from_json(s.to_json()) == s
+    with pytest.raises(ValueError, match="kv_cache"):
+        ServingSpec(kv_cache="int4")
+    with pytest.raises(ValueError, match="slots"):
+        ServingSpec(slots=0)
+    with pytest.raises(ValueError, match="unknown ServingSpec fields"):
+        RunSpec.from_dict({"serving": {"slotss": 2}})
+    # CLI flags map onto the spec
+    s2 = RunSpec.from_args(["--kv-cache", "int8", "--slots", "3"])
+    assert s2.serving.kv_cache == "int8" and s2.serving.slots == 3
+    # packed=None follows PrecisionSpec.packed_serving
+    assert not ServingSpec().resolved_packed(PrecisionSpec())
+    assert ServingSpec().resolved_packed(
+        PrecisionSpec(packed_serving=True))
+    assert not ServingSpec(packed=False).resolved_packed(
+        PrecisionSpec(packed_serving=True))
+
+
+def test_make_engine_legacy_kwargs_warn():
+    """batch_slots/packed/plan kwargs are one-release shims: they must
+    warn DeprecationWarning and still win over the spec."""
+    ctx = build(RunSpec(arch="qwen2-0.5b", serving=ServingSpec(slots=4)))
+    params, qstate = ctx.init_state()
+    with pytest.warns(DeprecationWarning, match="batch_slots"):
+        eng = ctx.make_engine(params, qstate, batch_slots=2, max_len=32)
+    assert eng.slots == 2
+    with pytest.warns(DeprecationWarning, match="packed"):
+        ctx.make_engine(params, qstate, packed=False, max_len=32)
+
+
+def test_kv_cache_fp_hlo_identical_to_legacy_engine():
+    """Acceptance contract: a spec with ``kv_cache="fp"`` (the default)
+    compiles the byte-identical decode program to the pre-ServingSpec
+    Engine construction — quantized-KV support must not perturb the fp
+    decode path by a single instruction.  A kv-carrying plan under
+    ``kv_cache="fp"`` must not either."""
+    from repro.core.plan import LayerPlan, PrecisionPlan
+    from repro.serving import Engine
+    spec = RunSpec(arch="qwen2-0.5b", serving=ServingSpec(slots=2))
+    ctx = build(spec)
+    params, qstate = ctx.init_state()
+    _, fresh = ctx.make_engine(params, qstate, max_len=32).decode_program()
+    # the legacy surface: direct Engine kwargs, no serving spec at all
+    legacy_eng = Engine(ctx.model, params, qstate, ctx.cfg,
+                        batch_slots=2, max_len=32)
+    _, legacy = legacy_eng.decode_program()
+    assert _strip_metadata(fresh) == _strip_metadata(legacy)
+    # a plan carrying narrow KV widths changes nothing while kv_cache=fp
+    kv_plan = PrecisionPlan(default=LayerPlan(kv_bits=4))
+    ctx2 = build(dataclasses.replace(spec, plan=kv_plan))
+    _, fp_planned = ctx2.make_engine(params, qstate,
+                                     max_len=32).decode_program()
+    assert _strip_metadata(fp_planned) == _strip_metadata(legacy)
+
+
+def test_kv_cache_plan_resolution():
+    """kv_cache mode -> storage width: fp -> None, int8 -> 8, plan ->
+    the narrowest kv_bits across entries (uniform wire/pack plans are
+    NOT normalized away for KV resolution)."""
+    from repro.core.plan import LayerPlan, PrecisionPlan
+    from repro.serving import resolve_kv_bits
+    assert resolve_kv_bits("fp", None) is None
+    assert resolve_kv_bits("int8", None) == 8
+    assert resolve_kv_bits("plan", None) == 8
+    plan = PrecisionPlan(layers={"layers/attn/wk/kernel":
+                                 LayerPlan(kv_bits=4)})
+    assert resolve_kv_bits("plan", plan) == 4
+    # a kv-only plan is wire/pack-uniform: build() normalizes ctx.plan
+    # to None, but make_engine still resolves kv widths from the full one
+    ctx = build(RunSpec(arch="qwen2-0.5b", plan=plan,
+                        serving=ServingSpec(slots=2, kv_cache="plan")))
+    assert ctx.plan is None
+    params, qstate = ctx.init_state()
+    eng = ctx.make_engine(params, qstate, max_len=32)
+    assert eng.kv_bits == 4

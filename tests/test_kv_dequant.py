@@ -1,0 +1,134 @@
+"""kernels.kv_dequant — the quantized-KV-cache kernel family.
+
+Pins the Pallas kernels (forced through interpret mode on CPU) against
+the jnp reference semantics: elementwise quantize/dequant must be
+bit-identical, the nibble pack must round-trip exactly, and the fused
+dequant-attention read must match the reference attention on the same
+int8 buffers to fp32 tolerance (and exactly with probs quantization,
+which snaps both paths to the same 2^-f grid).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.kv_dequant import (kv_attention_decode, kv_dequant,
+                                      kv_pack, kv_quantize, kv_unpack,
+                                      use_fused_kernel)
+from repro.kernels.kv_dequant import ref
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _rows(shape, scale=3.0, key=KEY):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+def test_backend_dispatch_cpu():
+    # this suite runs on CPU: the jnp reference is the fast path, and
+    # the kernel route must be forceable in interpret mode
+    assert jax.default_backend() == "cpu"
+    assert use_fused_kernel() is False
+
+
+@pytest.mark.parametrize("bits", [8, 5, 4])
+def test_kernel_quantize_bit_identical(bits):
+    x = _rows((6, 7, 2, 64))
+    q_ref, f_ref = kv_quantize(x, bits, use_kernel=False)
+    q_k, f_k = kv_quantize(x, bits, use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(q_ref), np.asarray(q_k))
+    np.testing.assert_array_equal(np.asarray(f_ref), np.asarray(f_k))
+    qmax = 2 ** (bits - 1) - 1
+    assert int(np.max(np.abs(np.asarray(q_ref)))) <= qmax
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_kernel_dequant_bit_identical_and_bounded(bits):
+    x = _rows((5, 3, 48))
+    q, f = kv_quantize(x, bits, use_kernel=False)
+    d_ref = kv_dequant(q, f, use_kernel=False)
+    d_k = kv_dequant(q, f, use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(d_ref), np.asarray(d_k))
+    # reconstruction error bounded by half a grid step per row
+    step = np.exp2(-np.asarray(f, np.float32))
+    err = np.max(np.abs(np.asarray(d_ref) - np.asarray(x)), axis=-1)
+    assert np.all(err <= 0.5 * step + 1e-7)
+
+
+def test_nibble_pack_roundtrip_exact():
+    x = _rows((4, 9, 32))
+    q, _ = kv_quantize(x, 4, use_kernel=False)
+    packed = kv_pack(q)
+    assert packed.shape == q.shape[:-1] + (q.shape[-1] // 2,)
+    assert packed.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(kv_unpack(packed, 32)),
+                                  np.asarray(q))
+
+
+def _ring(B, W, KV, hd, bits, packed, key):
+    k1, k2 = jax.random.split(key)
+    km, kf = ref.kv_quantize_ref(_rows((B, W, KV, hd), key=k1), bits)
+    vm, vf = ref.kv_quantize_ref(_rows((B, W, KV, hd), key=k2), bits)
+    if packed:
+        km, vm = kv_pack(km), kv_pack(vm)
+    return km, kf, vm, vf
+
+
+@pytest.mark.parametrize("window,probs_f", [(None, None), (8, None),
+                                            (None, 6.0)])
+def test_fused_attention_matches_ref(window, probs_f):
+    B, S, KV, G, hd, W = 2, 1, 2, 2, 64, 16
+    H = KV * G
+    qh = _rows((B, S, H, hd), scale=1.0)
+    km, kf, vm, vf = _ring(B, W, KV, hd, 8, False, KEY)
+    qpos = jnp.asarray([[13], [9]], jnp.int32)
+    # ring layout: slot s holds global position qpos - ((qpos - s) % W);
+    # a few slots negative = never written
+    tpos = jnp.stack([jnp.arange(W) - 2, jnp.arange(W) - 5]).astype(
+        jnp.int32)
+    pf = None if probs_f is None else jnp.float32(probs_f)
+    out_ref = kv_attention_decode(qh, km, kf, vm, vf, qpos, tpos,
+                                  window=window, n_kv=KV, probs_f=pf,
+                                  use_kernel=False)
+    out_k = kv_attention_decode(qh, km, kf, vm, vf, qpos, tpos,
+                                window=window, n_kv=KV, probs_f=pf,
+                                use_kernel=True, interpret=True)
+    a, b = np.asarray(out_ref, np.float32), np.asarray(out_k, np.float32)
+    tol = 0.0 if probs_f is not None else 1e-5
+    assert float(np.max(np.abs(a - b))) <= tol, np.max(np.abs(a - b))
+
+
+def test_fused_attention_packed_nibbles():
+    B, S, KV, G, hd, W = 1, 1, 2, 2, 64, 16
+    qh = _rows((B, S, KV * G, hd), scale=1.0)
+    km, kf, vm, vf = _ring(B, W, KV, hd, 4, True, KEY)
+    qpos = jnp.asarray([[11]], jnp.int32)
+    tpos = jnp.arange(W, dtype=jnp.int32)[None, :] - 4
+    out_ref = kv_attention_decode(qh, km, kf, vm, vf, qpos, tpos,
+                                  window=None, n_kv=KV, use_kernel=False)
+    out_k = kv_attention_decode(qh, km, kf, vm, vf, qpos, tpos,
+                                window=None, n_kv=KV, use_kernel=True,
+                                interpret=True)
+    a, b = np.asarray(out_ref, np.float32), np.asarray(out_k, np.float32)
+    assert float(np.max(np.abs(a - b))) <= 1e-5
+
+
+def test_quantized_cache_container():
+    from repro.serving import quantized_cache
+    c8 = quantized_cache((3, 2, 16, 2, 64), 8)
+    assert c8.k.shape == (3, 2, 16, 2, 64) and c8.k.dtype == jnp.int8
+    assert c8.kf.shape == (3, 2, 16, 2) and c8.kf.dtype == jnp.int8
+    c4 = quantized_cache((3, 2, 16, 2, 64), 4)
+    assert c4.k.shape == (3, 2, 16, 2, 32)   # nibble-packed head dim
+    with pytest.raises(ValueError, match="even head dim"):
+        quantized_cache((2, 16, 2, 63), 4)
+
+
+def test_kv_bytes_per_token_formula():
+    from repro.serving import kv_bytes_per_token
+    # fp: 2 tensors * KV * hd * 2 bytes * layers
+    assert kv_bytes_per_token(2, 64, 4, None) == 2 * 2 * 64 * 2 * 4
+    # int8: mantissa byte per element + one exponent byte per row
+    assert kv_bytes_per_token(2, 64, 4, 8) == 2 * 2 * (64 + 1) * 4
+    # nibble: two mantissas per byte
+    assert kv_bytes_per_token(2, 64, 4, 4) == 2 * 2 * (32 + 1) * 4
