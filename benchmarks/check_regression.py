@@ -14,10 +14,14 @@ What is guarded (direction-aware — a metric only fails when it moves the
   (higher is better), and the mixed-precision section's
   ``bytes_per_element`` (lower) / ``reduction_vs_uniform`` (higher);
 * ``serving``: ``decode_tokens_per_sec`` / ``mixed_tokens_per_sec`` per
-  mode (higher is better), the ``hbm_saving_x`` packing ratio, and the
+  mode (higher is better), the ``hbm_saving_x`` packing ratio, the
   structural KV-cache metrics per mode — ``kv_bytes_per_token`` (lower)
   and the cache-bandwidth decode speedup ``decode_kv_speedup_x``
-  (higher; THE quantized-KV win gate).
+  (higher; THE quantized-KV win gate) — and the streaming-ASR SLO
+  metrics of the ``asr_stream`` row: ``ttft_ms`` /
+  ``chunk_latency_p50_ms`` / ``chunk_latency_p90_ms`` (all lower is
+  better — the bounded-latency gate) plus the structural
+  ``cross_kv_bytes_per_request`` (lower).
 
 Timing metrics get built-in default tolerances instead of the global
 ``--tolerance``: ``*step_ms*`` at ``TIMING_TOLERANCE`` (25%) and
@@ -25,7 +29,10 @@ Timing metrics get built-in default tolerances instead of the global
 warmup-discarded median (see ``benchmarks/common.time_stats``), stable
 enough to gate, but shared runners still jitter more than byte counts
 (which are exact), and ratios divide two independently-jittering
-medians.  A user ``--override`` always beats the built-in default.
+medians.  Streaming latencies (``*ttft_ms`` / ``*chunk_latency*``) get
+``LATENCY_TOLERANCE`` (50%): unlike step_ms they aggregate only a
+handful of single events per run, so the tails jitter hard on shared
+runners.  A user ``--override`` always beats the built-in default.
 
 Usage (CI runs exactly this after the smoke benches):
 
@@ -66,9 +73,15 @@ BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 # compressed path's, so the quotient is noisier than either step_ms.
 TIMING_TOLERANCE = 0.25
 RATIO_TOLERANCE = 0.5
+# streaming SLO latencies aggregate a handful of single wall-clock
+# events (one ttft per stream, one latency per chunk) — far noisier on
+# shared runners than the warmup-discarded step_ms medians
+LATENCY_TOLERANCE = 0.5
 TIMING_DEFAULTS: List[Tuple[str, float]] = [
     ("*step_ms*", TIMING_TOLERANCE),
     ("*step_ratio*", RATIO_TOLERANCE),
+    ("*ttft_ms", LATENCY_TOLERANCE),
+    ("*chunk_latency*", LATENCY_TOLERANCE),
 ]
 
 # metric name -> direction ("lower" = regression when it rises,
@@ -118,18 +131,29 @@ def extract_metrics(data: dict) -> Metrics:
                     float(row["reduction_vs_uniform"]), "higher")
     elif kind == "serving":
         for row in data.get("runs", []):
+            # the asr_stream row has no decode-only phase, hence no
+            # decode_tokens_per_sec — extract whichever keys are present
             for key in ("decode_tokens_per_sec", "mixed_tokens_per_sec"):
-                out[f"serving.{row['mode']}.{key}"] = (
-                    float(row[key]), "higher")
+                if key in row:
+                    out[f"serving.{row['mode']}.{key}"] = (
+                        float(row[key]), "higher")
             # structural KV-cache metrics (exact, not timing): stored
-            # bytes per decoded token and the cache-bandwidth decode
-            # speedup of the quantized ring buffer over the fp one
-            if "kv_bytes_per_token" in row:
-                out[f"serving.{row['mode']}.kv_bytes_per_token"] = (
-                    float(row["kv_bytes_per_token"]), "lower")
+            # bytes per decoded token, the cache-bandwidth decode
+            # speedup of the quantized ring buffer over the fp one, and
+            # the per-request cross-attention memory pin
+            for key in ("kv_bytes_per_token", "cross_kv_bytes_per_request"):
+                if key in row:
+                    out[f"serving.{row['mode']}.{key}"] = (
+                        float(row[key]), "lower")
             if "decode_kv_speedup_x" in row:
                 out[f"serving.{row['mode']}.decode_kv_speedup_x"] = (
                     float(row["decode_kv_speedup_x"]), "higher")
+            # streaming-ASR bounded-latency SLO gate
+            for key in ("ttft_ms", "chunk_latency_p50_ms",
+                        "chunk_latency_p90_ms"):
+                if key in row:
+                    out[f"serving.{row['mode']}.{key}"] = (
+                        float(row[key]), "lower")
         if "hbm_saving_x" in data:
             out["serving.hbm_saving_x"] = (float(data["hbm_saving_x"]),
                                            "higher")

@@ -18,6 +18,16 @@ bytes per token are the structural decode-throughput model — the
 number that holds on TPU where wall time on this container does not).
 Writes a JSON artifact so CI accumulates the perf trajectory.
 
+A fourth row (``mode="asr_stream"``) serves the shipped
+``examples/specs/serving_asr_stream.json`` streaming-ASR spec through
+``serving.StreamingEngine``: audio-chunk requests stream beside LM
+traffic in the shared slot scheduler, and the row reports the
+bounded-latency SLO metrics — ``ttft_ms`` (last chunk -> first token),
+``chunk_latency_p50_ms`` / ``chunk_latency_p90_ms`` (per-chunk encode +
+append wall), ``mixed_tokens_per_sec`` over the mixed workload, and the
+structural ``cross_kv_bytes_per_request`` the quantized cross-attention
+memory pins.
+
     PYTHONPATH=src python benchmarks/serving_bench.py --smoke
     PYTHONPATH=src python benchmarks/serving_bench.py \
         --arch qwen2-0.5b --requests 16 --max-new 32 --out BENCH_serving.json
@@ -31,6 +41,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -92,6 +103,58 @@ def bench_engine(ctx, params, qstate, *, mode: str, n_requests: int,
             "mixed_tokens_per_sec": round(new_tokens / dt, 2)}
 
 
+def bench_streaming(ctx, params, qstate, *, n_streams: int, n_lm: int,
+                    max_new: int, max_len: int) -> dict:
+    """Streaming-ASR SLO metrics: chunked audio through the continuous-
+    batching slot scheduler with concurrent LM traffic, timed after a
+    compile warmup."""
+    from repro.serving import (AudioRequest, kv_bytes_per_token,
+                               kv_cross_bytes_per_request)
+    cfg = ctx.cfg
+
+    def audio_reqs(seed):
+        key = jax.random.PRNGKey(seed)
+        return [AudioRequest(
+            frames=jax.random.normal(
+                jax.random.fold_in(key, i),
+                (cfg.enc_seq, cfg.d_model)) * 0.3,
+            prompt=[1, 2 + i % 7], max_new=max_new)
+            for i in range(n_streams)]
+
+    eng = ctx.make_engine(params, qstate, max_len=max_len,
+                          prefill_chunk=8)
+    # warmup: compile append_cross per block shape + prefill + decode
+    eng.run(audio_reqs(3) + ragged_requests(cfg.vocab, n_lm, 4))
+    streams = audio_reqs(11)
+    reqs = streams + ragged_requests(cfg.vocab, n_lm, max_new, seed=13)
+    t0 = time.perf_counter()
+    eng.run(reqs)
+    dt = time.perf_counter() - t0
+    chunks = sorted(t for r in streams for t in r.t_chunks)
+    ttfts = [r.ttft_s for r in streams]
+    pct = lambda v, p: v[min(len(v) - 1, round(p * (len(v) - 1)))]
+    tokens = sum(len(r.out) for r in reqs)
+    return {"mode": "asr_stream",
+            "spec": ctx.spec.to_dict(),
+            "streams": n_streams, "lm_requests": n_lm,
+            "chunk_frames": ctx.spec.serving.audio.chunk_frames,
+            "chunks_per_stream": len(streams[0].t_chunks),
+            "kv_bits": eng.kv_bits,
+            "kv_bytes_per_token": kv_bytes_per_token(
+                cfg.n_kv, cfg.hd, cfg.n_layers, eng.kv_bits),
+            # static per-request cross-attention memory footprint (the
+            # admission-control number; see serving/kvcache.py)
+            "cross_kv_bytes_per_request": kv_cross_bytes_per_request(
+                cfg.n_kv, cfg.hd, cfg.n_layers, cfg.enc_seq, eng.kv_bits),
+            # SLO latencies: ttft = last chunk appended -> first token
+            # sampled; chunk latency = one encode+quantize+append event
+            "ttft_ms": round(1e3 * sum(ttfts) / len(ttfts), 2),
+            "chunk_latency_p50_ms": round(1e3 * pct(chunks, 0.5), 2),
+            "chunk_latency_p90_ms": round(1e3 * pct(chunks, 0.9), 2),
+            "mixed_tokens": tokens, "mixed_wall_s": round(dt, 4),
+            "mixed_tokens_per_sec": round(tokens / dt, 2)}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -150,6 +213,28 @@ def main() -> None:
               f"({row['mixed_tokens']} tokens / {row['mixed_wall_s']}s), "
               f"kv {row['kv_bytes_per_token']} B/tok "
               f"({row['decode_kv_speedup_x']}x)")
+    # streaming ASR: serve the shipped golden spec (whisper enc-dec,
+    # quantized cross+self KV, mixed lm+asr admission) — its own context
+    # and params, coexisting with the LM contexts above
+    asr_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "..", "examples", "specs",
+                            "serving_asr_stream.json")
+    spec_asr = RunSpec.from_file(asr_path)
+    if args.full:
+        spec_asr = dataclasses.replace(spec_asr, full=True)
+    ctx_asr = build(spec_asr)
+    p_asr, q_asr = ctx_asr.init_state()
+    row = bench_streaming(ctx_asr, p_asr, q_asr,
+                          n_streams=3 if args.smoke else 4,
+                          n_lm=3 if args.smoke else args.requests,
+                          max_new=args.max_new, max_len=args.max_len)
+    rows.append(row)
+    print(f"serving.{row['mode']}: ttft {row['ttft_ms']}ms, chunk p50 "
+          f"{row['chunk_latency_p50_ms']}ms p90 "
+          f"{row['chunk_latency_p90_ms']}ms, mixed "
+          f"{row['mixed_tokens_per_sec']} tok/s, cross-kv "
+          f"{row['cross_kv_bytes_per_request']} B/req")
+
     if args.profile:
         jax.profiler.stop_trace()
         print(f"profiler trace written to {args.profile}")

@@ -2,7 +2,8 @@
 
 One frozen, JSON-serializable :class:`RunSpec` (mesh + precision +
 compression + train/data config + seed) replaces the old trace-time
-globals (``dist.axes.set_axes``, ``dist.perf.set_compute_dtype``) and
+globals (``dist.axes.set_axes`` / ``dist.perf.set_compute_dtype``,
+both since removed) and
 the per-launcher argparse/setup blocks; :func:`build` turns a spec into
 a :class:`RunContext` that constructs the mesh, axis registry,
 shardings, train step, and serving engine from the spec alone, with no
@@ -16,8 +17,9 @@ module-level mutable state.
         metrics = setup.step(0)
 """
 from ..core.plan import LayerPlan, PrecisionPlan  # noqa: F401
-from .spec import (CompressionSpec, GRAD_COMPRESSION_KINDS,  # noqa: F401
-                   KV_CACHE_MODES, MeshSpec, PrecisionSpec, RunSpec,
-                   ServingSpec, emit_pareto_specs)
+from .spec import (AudioSpec, CompressionSpec,  # noqa: F401
+                   GRAD_COMPRESSION_KINDS, KV_CACHE_MODES, MeshSpec,
+                   PrecisionSpec, RunSpec, SERVING_WORKLOADS, ServingSpec,
+                   emit_pareto_specs)
 from .context import (GradCompression, RunContext,  # noqa: F401
                       TrainSetup, build, build_mesh)

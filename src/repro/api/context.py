@@ -27,7 +27,6 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
-import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -221,12 +220,16 @@ class RunContext:
         """The run's :class:`DataSpec` with vocab resolved from the
         architecture (a spec file may leave ``vocab=0``)."""
         ds = self.spec.data
-        if ds.kind == "lm" and ds.vocab == 0:
+        if ds.kind in ("lm", "asr") and ds.vocab == 0:
             ds = dataclasses.replace(ds, vocab=self.cfg.vocab)
         return ds
 
     def make_pipeline(self) -> Callable[[int], Dict[str, jax.Array]]:
-        return make_pipeline(self.data_spec())
+        ds = self.data_spec()
+        if ds.kind == "asr":
+            return make_pipeline(ds, d_model=self.cfg.d_model,
+                                 enc_seq=self.cfg.enc_seq)
+        return make_pipeline(ds)
 
     def init_state(self) -> Tuple[Any, Any]:
         """Seeded model init (``RunSpec.seed``) under this context."""
@@ -277,6 +280,15 @@ class RunContext:
             wire_fused=self.spec.compression.fused)
         return self.wrap(step)
 
+    def _batch_shardings(self, mesh) -> Dict[str, Any]:
+        """Batch-dim shardings for the pipeline's batch dict (tokens are
+        ``[B, S]``; ASR batches add ``[B, T, d]`` frame embeddings)."""
+        b = self.spec.data.batch
+        sh = {"tokens": batch_sharding(mesh, b, 2)}
+        if self.spec.data.kind == "asr":
+            sh["frame_embeds"] = batch_sharding(mesh, b, 3)
+        return sh
+
     def train_shardings(self, params, qstate, opt,
                         ef_state: Optional[EFState],
                         comp: GradCompression) -> Tuple[tuple, tuple]:
@@ -287,8 +299,7 @@ class RunContext:
                         type(opt)(step=replicated(mesh),
                                   mu=shard_tree(opt.mu, mesh, "train"),
                                   nu=shard_tree(opt.nu, mesh, "train")),
-                        {"tokens": batch_sharding(
-                            mesh, self.spec.data.batch, 2)},
+                        self._batch_shardings(mesh),
                         replicated(mesh))
         donate = (0, 2)
         if ef_state is not None:
@@ -331,34 +342,39 @@ class RunContext:
 
     def make_engine(self, params, qstate, **kwargs):
         """A continuous-batching ``serving.Engine`` serving this spec:
-        slot count, packing, KV-cache storage and prefix reuse all come
-        from ``spec.serving`` (plus the spec's precision plan), and the
-        engine snapshots this context's trace flags, so engines from
-        different contexts coexist in one process.
-
-        ``batch_slots`` / ``packed`` / ``plan`` kwargs are deprecated
-        (one release): they shadow ``ServingSpec`` fields — put them in
-        the spec.  Workload knobs the spec does not own (``max_len``,
-        ``eos_id``, ``prefill_chunk``, ``seed``) pass through."""
-        from ..serving import Engine, resolve_kv_bits
+        slot count, packing, KV-cache storage, prefix reuse and admitted
+        workloads all come from ``spec.serving`` (plus the spec's
+        precision plan), and the engine snapshots this context's trace
+        flags, so engines from different contexts coexist in one
+        process.  When ``spec.serving.workloads`` includes ``"asr"``
+        this builds a :class:`serving.StreamingEngine` — audio-chunk
+        requests admitted beside LM traffic, with ``spec.serving.audio``
+        setting the arrival chunk and admission cap.  Workload knobs the
+        spec does not own (``max_len``, ``eos_id``, ``prefill_chunk``,
+        ``seed``) pass through."""
+        from ..serving import Engine, StreamingEngine, resolve_kv_bits
         sv = self.spec.serving
-        for kw, field in (("batch_slots", "serving.slots"),
-                          ("packed", "serving.packed"),
-                          ("plan", "RunSpec.plan")):
+        removed = {"batch_slots": "serving.slots",
+                   "packed": "serving.packed", "plan": "RunSpec.plan"}
+        for kw in removed:
             if kw in kwargs:
-                warnings.warn(
-                    f"make_engine({kw}=...) is deprecated: set "
-                    f"RunSpec.{field} instead (the kwarg still wins for "
-                    f"one release)", DeprecationWarning, stacklevel=2)
-        kwargs.setdefault("batch_slots", sv.slots)
-        kwargs.setdefault("packed", sv.resolved_packed(self.spec.precision))
-        kwargs.setdefault("plan", self.plan)
+                raise TypeError(f"make_engine({kw}=...) was removed: set "
+                                f"RunSpec.{removed[kw]} in the spec "
+                                f"instead")
         kwargs.setdefault("kv_bits",
                           resolve_kv_bits(sv.kv_cache, self._full_plan))
         kwargs.setdefault("ring_slack", sv.ring_slack or None)
         kwargs.setdefault("prefix_reuse", sv.prefix_reuse)
+        cls = Engine
+        if "asr" in sv.workloads:
+            cls = StreamingEngine
+            kwargs.setdefault("audio_chunk", sv.audio.chunk_frames)
+            kwargs.setdefault("max_frames", sv.audio.max_frames or None)
         with self.activate(packed=False):
-            return Engine(self.model, params, qstate, self.cfg, **kwargs)
+            return cls(self.model, params, qstate, self.cfg,
+                       batch_slots=sv.slots,
+                       packed=sv.resolved_packed(self.spec.precision),
+                       plan=self.plan, **kwargs)
 
     def plan_summary(self) -> Optional[Dict[str, Any]]:
         """Reporting view of the effective plan (None == uniform int8):

@@ -12,7 +12,8 @@ frozen composition of:
 * :class:`CompressionSpec` — gradient compression kind, wire exchange
   layout, error-feedback residual layout;
 * :class:`ServingSpec` — continuous-batching slot count, ring-buffer
-  slack, packed-weight serving, KV-cache storage mode, prefix reuse;
+  slack, packed-weight serving, KV-cache storage mode, prefix reuse,
+  admitted workloads (LM and/or streaming ASR audio);
 * the existing :class:`repro.train.TrainConfig` and
   :class:`repro.data.DataSpec`.
 
@@ -46,6 +47,7 @@ WIRE_LAYOUTS = ("auto", "1d", "2d")
 COMPUTE_DTYPES = (None, "bfloat16", "float32")
 # mirrors serving.kvcache.KV_CACHE_MODES (this module stays jax-free)
 KV_CACHE_MODES = ("fp", "int8", "plan")
+SERVING_WORKLOADS = ("lm", "asr")
 
 
 def _check(cond: bool, msg: str) -> None:
@@ -206,9 +208,33 @@ class CompressionSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class AudioSpec:
+    """Streaming-audio admission parameters for the ``"asr"`` serving
+    workload (``serving/streaming.py``).
+
+    * ``chunk_frames`` — default arrival granularity, in encoder frames:
+      each engine tick delivers one ``chunk_frames``-frame block per
+      in-flight stream; ``0`` = whole audio arrives at once (offline
+      admission through the streaming path);
+    * ``max_frames`` — admission cap on total frames per request; ``0``
+      resolves to the architecture's ``enc_seq`` at build time.
+    """
+    chunk_frames: int = 0
+    max_frames: int = 0
+
+    def __post_init__(self):
+        _check(self.chunk_frames >= 0,
+               f"AudioSpec.chunk_frames must be >= 0, "
+               f"got {self.chunk_frames}")
+        _check(self.max_frames >= 0,
+               f"AudioSpec.max_frames must be >= 0, "
+               f"got {self.max_frames}")
+
+
+@dataclasses.dataclass(frozen=True)
 class ServingSpec:
-    """Serving configuration as data: replaces the ad-hoc
-    ``make_engine(batch_slots=..., packed=..., plan=...)`` kwarg surface.
+    """Serving configuration as data — the whole ``RunContext
+    .make_engine`` surface.
 
     * ``slots`` — continuous-batching slot count (``Engine`` batch rows);
     * ``ring_slack`` — extra ring-buffer slots beyond the attention
@@ -222,13 +248,21 @@ class ServingSpec:
       run's :class:`core.plan.PrecisionPlan` resolves — nibble-packed
       two-per-byte at <= 4 bits);
     * ``prefix_reuse`` — cache prefilled prompt slices keyed by the
-      exact prompt, so re-submitting an identical prompt skips prefill.
+      exact prompt, so re-submitting an identical prompt skips prefill;
+    * ``workloads`` — request types the engine admits: ``("lm",)`` is
+      the classic text engine; adding ``"asr"`` routes ``make_engine``
+      to :class:`serving.StreamingEngine`, which also accepts streaming
+      audio-chunk requests (needs an encoder-decoder arch);
+    * ``audio`` — :class:`AudioSpec` admission parameters; auto-filled
+      with defaults when ``"asr"`` is enabled.
     """
     slots: int = 8
     ring_slack: int = 0
     packed: Optional[bool] = None
     kv_cache: str = "fp"
     prefix_reuse: bool = False
+    workloads: Tuple[str, ...] = ("lm",)
+    audio: Optional[AudioSpec] = None
 
     def __post_init__(self):
         _check(self.slots >= 1,
@@ -242,6 +276,29 @@ class ServingSpec:
         _check(self.packed is None or isinstance(self.packed, bool),
                f"ServingSpec.packed must be None or a bool, "
                f"got {self.packed!r}")
+        # JSON round-trip coercion: lists arrive from from_json, dicts
+        # from the nested-spec loader (RunSpec.from_dict only constructs
+        # the top-level parts)
+        if isinstance(self.workloads, list):
+            object.__setattr__(self, "workloads", tuple(self.workloads))
+        if isinstance(self.audio, dict):
+            known = {f.name for f in dataclasses.fields(AudioSpec)}
+            unknown = set(self.audio) - known
+            _check(not unknown,
+                   f"unknown AudioSpec fields: {sorted(unknown)}")
+            object.__setattr__(self, "audio", AudioSpec(**self.audio))
+        _check(len(self.workloads) >= 1,
+               "ServingSpec.workloads must name at least one workload")
+        bad = [w for w in self.workloads if w not in SERVING_WORKLOADS]
+        _check(not bad,
+               f"ServingSpec.workloads must be drawn from "
+               f"{SERVING_WORKLOADS}, got {bad}")
+        _check(len(set(self.workloads)) == len(self.workloads),
+               f"duplicate ServingSpec.workloads: {self.workloads}")
+        _check(self.audio is None or "asr" in self.workloads,
+               "ServingSpec.audio is set but 'asr' is not in workloads")
+        if "asr" in self.workloads and self.audio is None:
+            object.__setattr__(self, "audio", AudioSpec())
 
     def resolved_packed(self, precision: PrecisionSpec) -> bool:
         """The concrete packed-weight flag (``None`` follows

@@ -78,19 +78,47 @@ def lm_batch(seed: int, step, batch: int, seq: int, vocab: int
     return {"tokens": tokens}
 
 
+# ----------------------------- ASR generator -------------------------------
+
+def asr_batch(seed: int, step, batch: int, seq: int, vocab: int,
+              d_model: int, frames: int) -> Dict[str, jax.Array]:
+    """Paired (frame_embeds, tokens) for encoder-decoder ASR smoke runs:
+    the transcript is the same Markov-ish stream :func:`lm_batch` emits,
+    and each of the ``frames`` frame embeddings is a fixed per-token code
+    (of the token whose window covers that frame) plus noise — so the
+    audio genuinely *encodes* the transcript and cross-attention has
+    something to learn."""
+    k1, k2, k3 = jax.random.split(_key(seed, step), 3)
+    base = jax.random.randint(k1, (batch, seq), 0, vocab)
+    shifted = jnp.roll(base, 1, axis=1) * 31 % vocab
+    tokens = jnp.where(jax.random.bernoulli(k2, 0.7, (batch, seq)),
+                       shifted, base)
+    codes = jax.random.normal(jax.random.PRNGKey(13), (vocab, d_model))
+    tok_at = tokens[:, (jnp.arange(frames) * seq) // frames]
+    x = codes[tok_at] + 0.1 * jax.random.normal(k3,
+                                                (batch, frames, d_model))
+    return {"frame_embeds": x, "tokens": tokens}
+
+
 # ----------------------------- pipeline API --------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class DataSpec:
-    kind: str           # jet | svhn | muon | lm
+    kind: str           # jet | svhn | muon | lm | asr
     batch: int
     seq: int = 0
     vocab: int = 0
     seed: int = 0
 
 
-def make_pipeline(spec: DataSpec) -> Callable[[int], Dict[str, jax.Array]]:
-    """step -> batch dict.  jit-able; resumable by construction."""
+def make_pipeline(spec: DataSpec, *, d_model: int = 0,
+                  enc_seq: int = 0) -> Callable[[int], Dict[str, jax.Array]]:
+    """step -> batch dict.  jit-able; resumable by construction.
+
+    ``kind="asr"`` additionally needs the architecture's frame embedding
+    dims (``d_model``, ``enc_seq``) — model facts, not data facts, so
+    they ride in as kwargs (``RunContext.make_pipeline`` fills them)
+    rather than as :class:`DataSpec` fields."""
     if spec.kind == "jet":
         return lambda step: jet_batch(spec.seed, step, spec.batch)
     if spec.kind == "svhn":
@@ -100,4 +128,10 @@ def make_pipeline(spec: DataSpec) -> Callable[[int], Dict[str, jax.Array]]:
     if spec.kind == "lm":
         return lambda step: lm_batch(spec.seed, step, spec.batch, spec.seq,
                                      spec.vocab)
+    if spec.kind == "asr":
+        if d_model < 1 or enc_seq < 1:
+            raise ValueError("kind='asr' needs the architecture dims: "
+                             "make_pipeline(spec, d_model=..., enc_seq=...)")
+        return lambda step: asr_batch(spec.seed, step, spec.batch, spec.seq,
+                                      spec.vocab, d_model, enc_seq)
     raise ValueError(spec.kind)

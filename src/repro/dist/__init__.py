@@ -30,14 +30,14 @@ import jax
 import jax.numpy as jnp
 
 from .axes import (AxisRegistry, axis_scope, constrain,  # noqa: F401
-                   get_model_size, registry_for_mesh, set_axes)
+                   get_model_size, registry_for_mesh)
 from .collectives import (WIRE_KINDS, ef_wire2d_init,  # noqa: F401
                           ef_wire_init, ef_wire_pmean, ef_wire_pmean_2d,
                           model_axis_size, simulate_wire_pmean,
                           simulate_wire_pmean_2d)
 from .perf import (cast_for_matmul, compute_dtype_scope,  # noqa: F401
                    get_compute_dtype, pack_params_for_serving,
-                   set_compute_dtype, unpack_weight)
+                   unpack_weight)
 from .sharding import (batch_sharding, batch_spec, cache_sharding,  # noqa: F401
                        ef_residual_sharding, is_stacked_path, replicated,
                        shard_tree, spec_for_param, stacked_tree)

@@ -17,14 +17,10 @@ trace via :func:`axis_scope`, so two contexts with different meshes
 coexist in one process.  Outside any scope the immutable default applies
 (single-device identity), so library code is importable and testable with
 no mesh at all.
-
-``set_axes`` — the old module-global mutation — survives one release as a
-deprecated shim that rebinds the default registry.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Tuple
 
 import jax
@@ -50,23 +46,6 @@ def axis_scope(registry: AxisRegistry):
     ``repro.api.RunContext`` binds a mesh's logical axes with no global
     state."""
     return _AXES.scope(registry)
-
-
-def set_axes(data_axes: Tuple[str, ...], model_axis: str, *,
-             data_size: int, model_size: int) -> None:
-    """Deprecated: rebind the *default* axis registry.
-
-    Build a :class:`repro.api.RunSpec` (its ``MeshSpec`` field) and trace
-    under ``RunContext.activate()`` / :func:`axis_scope` instead — scoped
-    registration composes across contexts; this shim mutates the ambient
-    default exactly like the old global did.
-    """
-    warnings.warn(
-        "set_axes is deprecated: put the mesh in repro.api.RunSpec.mesh "
-        "and trace under RunContext.activate() (or dist.axes.axis_scope)",
-        DeprecationWarning, stacklevel=2)
-    _AXES.set_default(AxisRegistry(tuple(data_axes), model_axis,
-                                   int(data_size), int(model_size)))
 
 
 def reset_axes() -> None:

@@ -6,8 +6,7 @@ fp32-master FSDP gathers and TP partial-sum all-reduces move bf16 bytes
 is *scoped*: ``repro.api.RunContext`` activates its ``PrecisionSpec``
 around every trace (:func:`compute_dtype_scope`), so two contexts with
 different precisions coexist in one process.  The unscoped default is
-``None`` (no cast); ``set_compute_dtype`` survives one release as a
-deprecated shim that rebinds that default.
+``None`` (no cast).
 
 Packing: :func:`pack_params_for_serving` rewrites every matmul weight dict
 ``{'w', 'f'}`` into ``{'w_int8', 'scale', 'f'}`` — int8 mantissas plus a
@@ -24,7 +23,6 @@ retrace it.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Any, Dict, Optional
 
 import jax
@@ -40,21 +38,6 @@ def compute_dtype_scope(dtype):
     """Context manager: trace the enclosed computation with ``dtype`` as
     the matmul compute dtype (``None`` = no cast); restores on exit."""
     return _COMPUTE.scope(dtype)
-
-
-def set_compute_dtype(dtype) -> None:
-    """Deprecated: rebind the *default* matmul compute dtype.
-
-    Put the dtype in ``repro.api.RunSpec.precision.compute_dtype`` and
-    trace under ``RunContext.activate()`` (or
-    :func:`compute_dtype_scope`) instead.
-    """
-    warnings.warn(
-        "set_compute_dtype is deprecated: put the dtype in "
-        "repro.api.RunSpec.precision and trace under "
-        "RunContext.activate() (or dist.perf.compute_dtype_scope)",
-        DeprecationWarning, stacklevel=2)
-    _COMPUTE.set_default(dtype)
 
 
 def reset_precision() -> None:
@@ -80,20 +63,6 @@ def cast_for_matmul(x: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 # packed-matmul routing (serving/packed.py)
 # ---------------------------------------------------------------------------
-
-def set_packed_matmul(on: bool) -> None:
-    """Deprecated: rebind the *default* packed-kernel routing flag.
-
-    Put the flag in ``repro.api.RunSpec.precision.packed_matmul`` (the
-    ``Engine`` activates it per trace) or use the :class:`packed_matmul`
-    context manager.
-    """
-    warnings.warn(
-        "set_packed_matmul is deprecated: put the flag in "
-        "repro.api.RunSpec.precision or use the packed_matmul context "
-        "manager", DeprecationWarning, stacklevel=2)
-    _PACKED.set_default(bool(on))
-
 
 def get_packed_matmul() -> bool:
     return _PACKED.get()

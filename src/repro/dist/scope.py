@@ -17,9 +17,10 @@ the last caller left behind.
   for the dynamic extent of a trace — how :class:`repro.api.RunContext`
   activates its configuration, and how two contexts with different
   precision/axes coexist in one process without touching each other;
-* ``set_default(value)`` rebinds the process default — reserved for the
-  deprecated ``set_axes`` / ``set_compute_dtype`` shims, which delegate
-  the old global-mutation behavior to the default slot for one release.
+* ``set_default(value)`` / ``reset_default()`` rebind the process
+  default — the escape hatch the (now removed) one-release ``set_*``
+  deprecation shims delegated to; kept for tests that need to restore
+  the pristine default.
 
 ``ContextVar`` (rather than a bare global) makes overrides task- and
 thread-local, and ``tools/check_no_globals.py`` gates the repo so no new

@@ -3,9 +3,22 @@
 The conv/mel frontend is a STUB per the assignment brief — ``input_specs``
 provides precomputed frame embeddings [B, enc_seq, d] (enc_seq = 1500).
 Full MHA (n_kv == n_heads), LayerNorm + biases, gelu MLP, learned positions.
+
+Serving shape: the decoder runs through the Engine's ragged decode path
+(``decode_step`` with per-slot ``cache_pos``), and the encoder memory is
+*streamable* — ``append_cross`` encodes one audio chunk block-locally at
+the cache's absolute frame offset and appends its cross-attention K/V
+rows, advancing the per-slot fill level ``mem_len``.  Decode-path
+cross-attention reads through the same ``tpos``-masked kernels the ring
+caches use (``nn.attention.memory_tpos``), so partially-streamed memory
+is masked exactly and rows with ``mem_len == 0`` (LM traffic sharing the
+batch) get a zero attention read.  Under a quantized KV plan the cross
+rows are stored on the same int8 2^-f grids as the self-attention ring
+(``cross_kf``/``cross_vf``), read through ``kernels.kv_dequant``.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, NamedTuple, Optional
 
 import jax
@@ -15,7 +28,7 @@ from ..core import hgq
 from ..core.hgq import Aux, QTensor
 from ..dist.axes import constrain
 from ..nn.attention import (AttnConfig, GQAAttention, KVCache, QKVCache,
-                            decode_positions)
+                            _decode_attention, decode_positions, memory_tpos)
 from ..nn.basic import HDense, HEmbedding, LayerNorm
 from ..nn.mlp import MLP
 from .config import ModelConfig
@@ -24,11 +37,13 @@ from .config import ModelConfig
 class WhisperCaches(NamedTuple):
     self_k: jax.Array    # [L, B, S_max, H, hd] (int8 mantissas quantized)
     self_v: jax.Array
-    cross_k: jax.Array   # [L, B, enc_seq, H, hd] (always fp: written once)
+    cross_k: jax.Array   # [L, B, enc_seq, H, hd] (int8 mantissas quantized)
     cross_v: jax.Array
-    memory_ready: jax.Array  # scalar bool — cross K/V computed?
+    mem_len: jax.Array   # [1, B] int32 — encoder frames written per slot
     self_kf: Optional[jax.Array] = None  # [L, B, S_max, H] grid exponents
     self_vf: Optional[jax.Array] = None  # (None = legacy fp self cache)
+    cross_kf: Optional[jax.Array] = None  # [L, B, enc_seq, H] exponents
+    cross_vf: Optional[jax.Array] = None  # (None = fp cross memory)
 
 
 def _attn_cfg(cfg: ModelConfig, causal: bool) -> AttnConfig:
@@ -103,6 +118,41 @@ class CrossAttention:
             aux.add(l1=jax.nn.relu(p["probs_f"]))
         return yo, newq
 
+    @staticmethod
+    def decode(p, q, x: QTensor, ck, cv, mem, cfg: ModelConfig, mode, aux,
+               ckf=None, cvf=None):
+        """Decode-path cross read over the (possibly partially-streamed,
+        possibly quantized) memory cache: only the ``mem[b]`` written
+        rows are visible — empty slots are masked via ``memory_tpos``,
+        and a row with ``mem == 0`` gets an exactly-zero attention read
+        (how LM slots ride a shared batch without touching the memory
+        buffer).  ``ckf``/``cvf`` select the fused dequant-attention
+        kernel path over int8 2^-f mantissas (``kernels.kv_dequant``)."""
+        B, S, _ = x.q.shape
+        H, hd = cfg.n_heads, cfg.hd
+        newq: Dict[str, Any] = {}
+        qt, newq["wq"] = HDense.apply(p["wq"], q["wq"], x, mode=mode, aux=aux)
+        qh = qt.q.reshape(B, S, H, hd)
+        T = ck.shape[1]
+        tpos = memory_tpos(mem, T)
+        # every valid memory row is visible to every query position
+        qpos = jnp.full((B, S), T, jnp.int32)
+        probs_f = p.get("probs_f")
+        if ckf is not None:
+            from ..kernels.kv_dequant.ops import kv_attention_decode
+            out = kv_attention_decode(qh, ck, ckf, cv, cvf, qpos, tpos,
+                                      window=None, n_kv=H, probs_f=probs_f)
+        else:
+            acfg = dataclasses.replace(_attn_cfg(cfg, causal=False), n_kv=H)
+            out = _decode_attention(qh, ck, cv, qpos, acfg, probs_f, mode,
+                                    tpos=tpos)
+        o = out.reshape(B, S, H * hd).astype(x.q.dtype)
+        yo, newq["wo"] = HDense.apply(p["wo"], q["wo"], QTensor(o, None),
+                                      mode=mode, aux=aux)
+        if probs_f is not None:
+            aux.add(l1=jax.nn.relu(p["probs_f"]))
+        return yo, newq
+
 
 class WhisperModel:
     @staticmethod
@@ -158,11 +208,24 @@ class WhisperModel:
 
     # ------------------------------------------------------------------
     @staticmethod
-    def encode(p, q, frame_embeds: jax.Array, cfg: ModelConfig, mode, aux):
-        x = constrain(frame_embeds + p["enc_pos"][None,
-                                                   :frame_embeds.shape[1]],
-                      "b..")
-        positions = jnp.arange(frame_embeds.shape[1])
+    def encode(p, q, frame_embeds: jax.Array, cfg: ModelConfig, mode, aux,
+               offset=0):
+        """Encode a block of frames at absolute frame position
+        ``offset``: learned positions are sliced there and RoPE phases
+        start there, so streaming (one call per arriving chunk,
+        block-local self-attention) and whole-audio encoding agree on
+        any block they both encode.  ``offset=0`` with the full audio is
+        the classic offline encoder."""
+        T = frame_embeds.shape[1]
+        if isinstance(offset, int) and offset == 0:
+            pe = p["enc_pos"][None, :T]
+            positions = jnp.arange(T)
+        else:
+            off = jnp.asarray(offset, jnp.int32)
+            pe = jax.lax.dynamic_slice_in_dim(p["enc_pos"], off, T,
+                                              axis=0)[None]
+            positions = off + jnp.arange(T)
+        x = constrain(frame_embeds + pe, "b..")
 
         def body(carry, xs):
             h, eb, l1 = carry
@@ -198,11 +261,14 @@ class WhisperModel:
                       mode, aux, caches=None, cache_pos=None, kv_bits=None):
         decode = caches is not None
         quant = decode and caches.self_kf is not None
+        # per-slot memory fill level [B]: not scanned over layers
+        mem = caches.mem_len[0] if decode else None
 
         def body(carry, xs):
             h, eb, l1 = carry
+            ckf = cvf = None
             if quant:
-                lp, lq, (sk, sv, skf, svf, ck, cv) = xs
+                lp, lq, (sk, sv, skf, svf, ck, cv, ckf, cvf) = xs
                 kvc = QKVCache(sk, sv, skf, svf)
             elif decode:
                 lp, lq, (sk, sv, ck, cv) = xs
@@ -222,13 +288,15 @@ class WhisperModel:
             nx, nq["ln_x"] = LayerNorm.apply(lp["ln_x"], lq["ln_x"], h,
                                              mode=mode, aux=a)
             if decode:
-                kh, vh = ck, cv
                 nq["xattn_kv"] = {}
+                xt, nq["xattn"] = CrossAttention.decode(
+                    lp["xattn"], lq["xattn"], nx, ck, cv, mem, cfg, mode,
+                    a, ckf=ckf, cvf=cvf)
             else:
                 kh, vh, nq["xattn_kv"] = CrossAttention.kv(
                     lp["xattn"], lq["xattn"], memory, cfg, mode, a)
-            xt, nq["xattn"] = CrossAttention.apply(lp["xattn"], lq["xattn"],
-                                                   nx, kh, vh, cfg, mode, a)
+                xt, nq["xattn"] = CrossAttention.apply(
+                    lp["xattn"], lq["xattn"], nx, kh, vh, cfg, mode, a)
             h = h + xt.q
             n2, nq["ln2"] = LayerNorm.apply(lp["ln2"], lq["ln2"], h,
                                             mode=mode, aux=a)
@@ -249,7 +317,8 @@ class WhisperModel:
         if quant:
             xs = (p["dec_layers"], q["dec_layers"],
                   (caches.self_k, caches.self_v, caches.self_kf,
-                   caches.self_vf, caches.cross_k, caches.cross_v))
+                   caches.self_vf, caches.cross_k, caches.cross_v,
+                   caches.cross_kf, caches.cross_vf))
         elif decode:
             xs = (p["dec_layers"], q["dec_layers"],
                   (caches.self_k, caches.self_v, caches.cross_k,
@@ -299,27 +368,45 @@ class WhisperModel:
         del ring_slack  # decoder self-attn cache is not windowed
         L, H, hd = cfg.n_layers, cfg.n_heads, cfg.hd
         self_shape = (L, batch, max_len, H, hd)
+        cross_shape = (L, batch, cfg.enc_seq, H, hd)
         if kv_bits is not None:
-            # cross K/V stays fp: written once at prefill, not the
-            # per-tick bandwidth the ring quantization targets
+            # the cross memory rides the same quantized-cache machinery
+            # as the self-attention ring: int8 mantissas on per-row 2^-f
+            # grids (nibble-packed at kv_bits <= 4), exponents alongside
             from ..serving.kvcache import quantized_cache
             qkv = quantized_cache(self_shape, kv_bits)
             selfkv = dict(self_k=qkv.k, self_v=qkv.v,
                           self_kf=qkv.kf, self_vf=qkv.vf)
+            qx = quantized_cache(cross_shape, kv_bits)
+            cross = dict(cross_k=qx.k, cross_v=qx.v,
+                         cross_kf=qx.kf, cross_vf=qx.vf)
         else:
             selfkv = dict(self_k=jnp.zeros(self_shape, dtype),
                           self_v=jnp.zeros(self_shape, dtype))
+            cross = dict(cross_k=jnp.zeros(cross_shape, dtype),
+                         cross_v=jnp.zeros(cross_shape, dtype))
         return WhisperCaches(
-            cross_k=jnp.zeros((L, batch, cfg.enc_seq, H, hd), dtype),
-            cross_v=jnp.zeros((L, batch, cfg.enc_seq, H, hd), dtype),
-            memory_ready=jnp.zeros((), jnp.bool_), **selfkv)
+            mem_len=jnp.zeros((1, batch), jnp.int32), **selfkv, **cross)
 
     @staticmethod
-    def prefill_cross(p, q, caches: WhisperCaches, frame_embeds, cfg,
-                      mode: str = hgq.EVAL) -> WhisperCaches:
-        """Run the encoder once and populate the cross-attention K/V cache."""
+    def append_cross(p, q, caches: WhisperCaches, frame_chunk, cfg,
+                     mode: str = hgq.EVAL, kv_bits=None) -> WhisperCaches:
+        """Encode one audio chunk block-locally at the cache's current
+        memory offset and append its cross-attention K/V rows,
+        advancing ``mem_len``.
+
+        Streaming contract: chunks are self-attended only within their
+        own block (at absolute positions — ``encode(offset=...)``), so
+        feeding N chunks one call at a time writes bit-for-bit the rows
+        that one call per chunk over the whole audio would — the
+        chunk *decomposition* is the semantic unit, not the arrival
+        schedule.  All batch rows advance together (the Engine appends
+        on single-slot cache slices; ``serving.streaming.generate_asr``
+        is the B=1 offline reference)."""
         aux = Aux.zero()
-        mem, _ = WhisperModel.encode(p, q, frame_embeds, cfg, mode, aux)
+        off = caches.mem_len[0, 0]
+        mem, _ = WhisperModel.encode(p, q, frame_chunk, cfg, mode, aux,
+                                     offset=off)
 
         def one_layer(lp, lq):
             kh, vh, _ = CrossAttention.kv(lp["xattn"], lq["xattn"], mem, cfg,
@@ -327,9 +414,36 @@ class WhisperModel:
             return kh, vh
 
         ck, cv = jax.vmap(one_layer)(p["dec_layers"], q["dec_layers"])
-        return caches._replace(cross_k=ck.astype(caches.cross_k.dtype),
-                               cross_v=cv.astype(caches.cross_v.dtype),
-                               memory_ready=jnp.ones((), jnp.bool_))
+
+        def upd(a, u):
+            return jax.lax.dynamic_update_slice_in_dim(a, u, off, axis=2)
+
+        if caches.cross_kf is not None:
+            from ..kernels.kv_dequant.ops import kv_pack, kv_quantize
+            km, kf = kv_quantize(ck, kv_bits or 8)
+            vm, vf = kv_quantize(cv, kv_bits or 8)
+            if caches.cross_k.shape[-1] != ck.shape[-1]:
+                km, vm = kv_pack(km), kv_pack(vm)
+            new = dict(cross_k=upd(caches.cross_k, km),
+                       cross_v=upd(caches.cross_v, vm),
+                       cross_kf=upd(caches.cross_kf, kf),
+                       cross_vf=upd(caches.cross_vf, vf))
+        else:
+            new = dict(
+                cross_k=upd(caches.cross_k,
+                            ck.astype(caches.cross_k.dtype)),
+                cross_v=upd(caches.cross_v,
+                            cv.astype(caches.cross_v.dtype)))
+        n = jnp.int32(frame_chunk.shape[1])
+        return caches._replace(mem_len=caches.mem_len + n, **new)
+
+    @staticmethod
+    def prefill_cross(p, q, caches: WhisperCaches, frame_embeds, cfg,
+                      mode: str = hgq.EVAL, kv_bits=None) -> WhisperCaches:
+        """Whole-audio memory prefill: one block-local ``append_cross``
+        covering the full audio on a fresh cache — the offline encoder."""
+        return WhisperModel.append_cross(p, q, caches, frame_embeds, cfg,
+                                         mode=mode, kv_bits=kv_bits)
 
     @staticmethod
     def decode_step(p, q, caches: WhisperCaches, tokens, cache_pos,

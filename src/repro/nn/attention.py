@@ -92,6 +92,20 @@ def decode_positions(cache_pos: jax.Array, S: int) -> jax.Array:
     return cp[:, None] + ar[None, :] if cp.ndim == 1 else cp + ar
 
 
+def memory_tpos(mem_len: jax.Array, T: int) -> jax.Array:
+    """Slot positions for a linearly-filled (non-ring) memory buffer of
+    width ``T`` holding ``mem_len[b]`` valid rows: slot t carries global
+    position t while t < mem_len, else -1 (the empty-slot sentinel the
+    decode masks share).  This is how encoder-decoder cross-attention
+    reads a partially-streamed memory through the same ``tpos``-masked
+    decode kernels the ring caches use — ``mem_len == 0`` masks every
+    slot, so rows with no memory (e.g. LM traffic sharing a batch with
+    ASR) get an exactly-zero attention read."""
+    ar = jnp.arange(T, dtype=jnp.int32)
+    mem = jnp.asarray(mem_len, jnp.int32)
+    return jnp.where(ar[None, :] < mem[:, None], ar[None, :], -1)
+
+
 def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     """x: [B, S, H, hd]; positions: [B, S] or [S]."""
     hd = x.shape[-1]

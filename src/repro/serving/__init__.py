@@ -1,5 +1,8 @@
 from .engine import (Engine, Request, RequestHandle, SamplingConfig,
                      generate)
-from .kvcache import (KV_CACHE_MODES, kv_bytes_per_token, quantized_cache,
+from .kvcache import (KV_CACHE_MODES, kv_bytes_per_token,
+                      kv_cross_bytes_per_request, quantized_cache,
                       resolve_kv_bits)
 from .packed import pack_for_serving, pack_tree
+from .streaming import (AudioRequest, StreamingEngine, generate_asr,
+                        split_audio)

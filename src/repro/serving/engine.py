@@ -245,12 +245,16 @@ class Engine:
         self._key, sub = jax.random.split(self._key)
         return sub
 
-    def _prefill_prompt(self, prompt: List[int]):
-        """Chunked prefill of one prompt into a fresh slot slice at
-        offset 0: (slice, last-position logits)."""
+    def _prefill_prompt(self, prompt: List[int], cs=None):
+        """Chunked prefill of one prompt into a single-slot slice at
+        offset 0: (slice, last-position logits).  ``cs`` starts from a
+        caller-held slice instead of the fresh one (streaming ASR: the
+        decoder prompt prefills into the slice whose encoder memory was
+        already streamed in)."""
         plen = len(prompt)
         C = self.prefill_chunk
-        cs = self._fresh_slot
+        if cs is None:
+            cs = self._fresh_slot
         last_logits = None
         start = 0
         # pad-free chunking: full chunks, then power-of-two tail chunks.

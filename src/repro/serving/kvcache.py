@@ -70,12 +70,35 @@ def resolve_kv_bits(kv_cache: str,
     return min(e.kv_bits for e in entries)
 
 
+def _kv_row_bytes(n_kv: int, hd: int, kv_bits: Optional[int]) -> int:
+    """Stored bytes of one K+V cache row (one token or one memory frame,
+    one layer): ``2 * KV * (hd / pack + 1)`` quantized (mantissas plus
+    one grid-exponent byte), ``2 * KV * hd * 2`` fp (bf16)."""
+    if kv_bits is None:
+        return 2 * n_kv * hd * 2
+    return 2 * n_kv * ((hd // 2 if kv_bits <= NIBBLE_BITS else hd) + 1)
+
+
 def kv_bytes_per_token(n_kv: int, hd: int, n_layers: int,
                        kv_bits: Optional[int]) -> int:
-    """Stored cache bytes per token row across a model's attention
-    layers: ``2 * KV * (hd * b/8 + 1)`` per layer quantized (mantissas
-    plus one grid-exponent byte), ``2 * KV * hd * 2`` fp (bf16)."""
-    if kv_bits is None:
-        return 2 * n_kv * hd * 2 * n_layers
-    per_head = (hd // 2 if kv_bits <= NIBBLE_BITS else hd) + 1
-    return 2 * n_kv * per_head * n_layers
+    """Stored **self-attention ring** bytes per decoded token across a
+    model's attention layers — the per-token marginal cache cost.
+
+    Encoder-decoder models additionally hold a cross-attention memory
+    cache, but that one is written once per request and never grows with
+    decoded tokens: it is a *per-request static* cost, accounted
+    separately by :func:`kv_cross_bytes_per_request` (folding it in here
+    would overstate the per-token bandwidth an ASR decode actually
+    moves... and understate the admission footprint)."""
+    return _kv_row_bytes(n_kv, hd, kv_bits) * n_layers
+
+
+def kv_cross_bytes_per_request(n_kv: int, hd: int, n_layers: int,
+                               frames: int,
+                               kv_bits: Optional[int]) -> int:
+    """Stored **cross-attention memory** bytes one encoder-decoder
+    request pins for its lifetime: ``frames`` K+V rows per decoder
+    layer, written once as the audio streams in (quantized on the same
+    2^-f grids as the self ring when ``kv_bits`` is set).  Static per
+    request — decoded tokens read it every tick but never grow it."""
+    return _kv_row_bytes(n_kv, hd, kv_bits) * n_layers * frames

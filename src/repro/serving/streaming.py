@@ -1,0 +1,263 @@
+"""Streaming ASR serving: audio-chunk requests in the continuous-batching
+Engine, with bounded-latency accounting.
+
+The second request type the Engine admits: audio arrives in chunks (the
+conv/mel frontend is a stub, so "audio" is precomputed frame embeddings
+``[T, d_model]``), the Whisper encoder runs incrementally per chunk —
+block-local self-attention at absolute frame offsets
+(``WhisperModel.append_cross``) — and the cross-attention K/V rows are
+appended into the request's slot slice under the same quantized-cache
+machinery the self-attention ring uses.  When the last chunk lands, the
+decoder prompt prefills into that slice, the slice splices into the
+batch cache, and the request joins the ordinary ragged decode tick —
+ASR and LM slots decode together in ONE jitted step (LM rows carry
+``mem_len == 0`` and read exactly zero from the memory buffer).
+
+Request lifecycle (see README "Serving > Streaming ASR"):
+
+    submit_audio -> [slot reserved] -> chunk 0..N appended (one per
+    engine tick: the per-chunk *arrival simulation*) -> decoder prompt
+    prefill -> splice -> shared ragged decode -> done
+
+Latency accounting, filled per request:
+
+* ``t_chunks`` — wall seconds per appended chunk (encode + quantize +
+  append, blocked until ready): the bounded per-event latency HGQ-style
+  streaming workloads care about;
+* ``ttft_s`` — last chunk appended -> first decoded token sampled
+  (decoder prompt prefill + first sample): time-to-first-token.
+
+:func:`generate_asr` is the offline (whole-audio) greedy reference the
+streaming path is tested token-for-token against: it encodes with the
+SAME chunk decomposition (:func:`split_audio` is the shared semantic
+unit), then decodes the prompt in one block — so chunked streaming
+through the slot scheduler must reproduce it exactly, on fp and
+quantized-KV caches alike.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from .engine import Engine, RequestHandle, SamplingConfig
+
+
+@dataclasses.dataclass
+class AudioRequest:
+    """One streaming transcription request.
+
+    ``frames`` is ``[T, d_model]`` (or ``[1, T, d_model]``) precomputed
+    frame embeddings; ``chunk`` is the arrival granularity in frames
+    (``0`` = the whole audio arrives at once); ``prompt`` is the decoder
+    prompt (BOS/task tokens).  ``t_chunks``/``ttft_s`` are filled by the
+    engine as the request streams (see module docstring)."""
+    frames: Any
+    prompt: List[int]
+    max_new: int
+    chunk: int = 0
+    sampling: Optional[SamplingConfig] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    t_chunks: List[float] = dataclasses.field(default_factory=list)
+    ttft_s: Optional[float] = None
+
+
+def split_audio(frames: jax.Array, chunk: int) -> List[jax.Array]:
+    """The shared chunk decomposition: full ``chunk``-frame blocks, then
+    power-of-two tail blocks (bounds compile count at O(log chunk), the
+    same policy as the Engine's pad-free prompt prefill).  Streaming and
+    the offline reference both encode exactly these blocks, so their
+    block-local encoder outputs are bit-identical."""
+    if frames.ndim == 2:
+        frames = frames[None]
+    T = frames.shape[1]
+    C = chunk if chunk > 0 else T
+    blocks = []
+    start = 0
+    while start < T:
+        n = C if T - start >= C else 1 << ((T - start).bit_length() - 1)
+        blocks.append(frames[:, start:start + n])
+        start += n
+    return blocks
+
+
+@dataclasses.dataclass
+class _AudioState:
+    """Engine-side state of one in-flight audio stream: the held
+    single-slot cache slice the chunks append into, and the blocks not
+    yet 'arrived'."""
+    req: AudioRequest
+    cs: Any
+    blocks: List[jax.Array]
+
+
+class StreamingEngine(Engine):
+    """Engine extension admitting :class:`AudioRequest` alongside LM
+    :class:`~repro.serving.Request` traffic.
+
+    A submitted audio request reserves a slot immediately (so admission
+    order is fair against LM traffic) but does NOT join the decode batch
+    until its audio is complete: each engine tick 'delivers' one pending
+    chunk per streaming slot (arrival simulation) and appends it to the
+    slot's held cache slice via the jitted ``append_cross``.  On the
+    last chunk the decoder prompt prefills into that slice, the slice
+    splices into the batch cache, and the slot decodes in the same
+    jitted ragged step as every LM slot."""
+
+    def __init__(self, *args, audio_chunk: int = 0,
+                 max_frames: Optional[int] = None, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.audio_chunk = audio_chunk
+        self.max_frames = (self.cfg.enc_seq if not max_frames
+                           else min(max_frames, self.cfg.enc_seq))
+        self._audio: Dict[int, _AudioState] = {}
+        model, cfg, kv_bits = self.model, self.cfg, self.kv_bits
+
+        def append(p, q, cs, fr):
+            return model.append_cross(p, q, cs, fr, cfg, kv_bits=kv_bits)
+
+        # like _prefill, the first cs may be the shared _fresh_slot —
+        # never donate it
+        self._append_cross = jax.jit(append)
+
+    # ------------------------------------------------------------------
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slot_req):
+            if r is None and i not in self._audio:
+                return i
+        return None
+
+    def submit(self, req):
+        """Admit either request type (``run`` and mixed workloads feed
+        through here)."""
+        if isinstance(req, AudioRequest):
+            return self.submit_audio(req)
+        return super().submit(req)
+
+    def submit_audio(self, req: AudioRequest) -> Optional[RequestHandle]:
+        """Reserve a slot for one audio stream.  Chunks are appended on
+        subsequent ``step()`` ticks (one per tick); the handle's
+        ``tokens()`` reader starts yielding once decoding begins.
+        Returns None when no slot is free."""
+        slot = self._free_slot()
+        if slot is None:
+            return None
+        frames = jnp.asarray(req.frames)
+        if frames.ndim == 2:
+            frames = frames[None]
+        T = frames.shape[1]
+        plen = len(req.prompt)
+        if T < 1 or T > self.max_frames:
+            raise ValueError(f"need 1 <= frames <= {self.max_frames} "
+                             f"(got {T})")
+        if plen < 1 or req.max_new < 1 or plen + req.max_new > self.max_len:
+            raise ValueError(
+                f"need prompt >= 1 ({plen}), max_new >= 1 ({req.max_new}), "
+                f"and prompt + max_new <= max_len ({self.max_len})")
+        blocks = split_audio(frames, req.chunk or self.audio_chunk)
+        self._audio[slot] = _AudioState(req=req, cs=self._fresh_slot,
+                                        blocks=blocks)
+        return RequestHandle(req)
+
+    # ------------------------------------------------------------------
+    def _finish_audio(self, slot: int, st: _AudioState) -> None:
+        """Audio complete: decoder-prompt chunked prefill into the held
+        slice, splice into the batch cache, sample the first token — the
+        slot joins the shared ragged decode tick.  TTFT is the wall time
+        of exactly this transition."""
+        req = st.req
+        t0 = time.perf_counter()
+        cs, last_logits = self._prefill_prompt(req.prompt, cs=st.cs)
+        self.caches = self._write_slot(self.caches, cs, jnp.int32(slot))
+        sc = self._sampling(req)
+        first = self._run(
+            self._sample1, last_logits, self._split_key(),
+            jnp.asarray([sc.temperature], jnp.float32),
+            jnp.asarray([sc.top_k], jnp.int32), sc.temperature > 0)
+        tok = int(first[0])
+        req.ttft_s = time.perf_counter() - t0
+        del self._audio[slot]
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = len(req.prompt)
+        self._next_tok[slot] = tok
+        self._record(slot, tok)
+
+    def step(self) -> None:
+        """One engine tick: deliver one pending chunk per streaming slot
+        (finishing streams whose audio completed), then the ordinary
+        jitted ragged decode step over every active slot."""
+        for slot, st in list(self._audio.items()):
+            t0 = time.perf_counter()
+            st.cs = self._run(self._append_cross, self.p, self.q, st.cs,
+                              st.blocks.pop(0))
+            jax.block_until_ready(st.cs.mem_len)
+            st.req.t_chunks.append(time.perf_counter() - t0)
+            if not st.blocks:
+                self._finish_audio(slot, st)
+        super().step()
+
+    def run(self, requests) -> list:
+        """Serve a mixed ASR + LM workload to completion."""
+        pending = list(requests)
+        while pending or self._audio \
+                or any(r is not None for r in self.slot_req):
+            while pending and self._free_slot() is not None:
+                self.submit(pending.pop(0))
+            self.step()
+        return requests
+
+
+# ----------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _asr_decode_fn(model, cfg: ModelConfig, kv_bits: Optional[int]):
+    if kv_bits is None:
+        return jax.jit(lambda p, q, c, t, pos:
+                       model.decode_step(p, q, c, t, pos, cfg))
+    return jax.jit(lambda p, q, c, t, pos:
+                   model.decode_step(p, q, c, t, pos, cfg,
+                                     kv_bits=kv_bits))
+
+
+@functools.lru_cache(maxsize=None)
+def _asr_append_fn(model, cfg: ModelConfig, kv_bits: Optional[int]):
+    return jax.jit(lambda p, q, c, fr:
+                   model.append_cross(p, q, c, fr, cfg, kv_bits=kv_bits))
+
+
+def generate_asr(model, params, qstate, cfg: ModelConfig, frames,
+                 prompt: List[int], max_new: int, *, chunk: int = 0,
+                 cache_len: Optional[int] = None,
+                 kv_bits: Optional[int] = None) -> jax.Array:
+    """Offline (whole-audio) greedy ASR reference: encode the audio in
+    the same block decomposition streaming uses (:func:`split_audio`),
+    prefill the decoder prompt in one block, decode greedily.  Returns
+    ``[1, max_new]`` token ids — what the streaming path must reproduce
+    token-for-token."""
+    frames = jnp.asarray(frames)
+    if frames.ndim == 2:
+        frames = frames[None]
+    plen = len(prompt)
+    caches = model.init_cache(cfg, 1, cache_len or (plen + max_new),
+                              ring_slack=plen, kv_bits=kv_bits)
+    append = _asr_append_fn(model, cfg, kv_bits)
+    for blk in split_audio(frames, chunk):
+        caches = append(params, qstate, caches, blk)
+    decode = _asr_decode_fn(model, cfg, kv_bits)
+    tok = jnp.asarray([prompt], jnp.int32)
+    logits, caches = decode(params, qstate, caches, tok, jnp.int32(0))
+    pos = plen
+    last = jnp.argmax(logits[:, -1:], axis=-1)
+    outs = [last]
+    for _ in range(max_new - 1):
+        logits, caches = decode(params, qstate, caches, last,
+                                jnp.int32(pos))
+        last = jnp.argmax(logits[:, -1:], axis=-1)
+        outs.append(last)
+        pos += 1
+    return jnp.concatenate(outs, axis=1)

@@ -9,7 +9,6 @@ program as the legacy global-state setup (``--spec`` file == classic
 flags), on 1x1 here and on the 2x4/4x2 meshes in the multi-device CI job.
 """
 import dataclasses
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -231,12 +230,14 @@ _spec_hlo_from_spec = train_step_hlo  # RunSpec   -> compiled HLO text
 
 
 def _legacy_step_hlo(mesh_str, grad_compression):
-    """The pre-RunSpec launcher wiring, verbatim: module-global set_axes
-    + hand-built shardings (what launch.train did before repro.api)."""
+    """The pre-RunSpec launcher wiring: hand-built shardings + the axis
+    registry bound directly (what launch.train did before repro.api,
+    with the removed ``set_axes`` global swapped for its scoped
+    equivalent — same registry value, same trace)."""
     from repro.configs import get
     from repro.data import DataSpec, make_pipeline
     from repro.dist import EFState, collectives, ef_compress, ef_init
-    from repro.dist.axes import reset_axes, set_axes
+    from repro.dist.axes import AxisRegistry, axis_scope
     from repro.dist.sharding import (batch_sharding, ef_residual_sharding,
                                      replicated, shard_tree)
     from repro.models import model_for
@@ -247,10 +248,7 @@ def _legacy_step_hlo(mesh_str, grad_compression):
     M = model_for(cfg)
     d, m = (int(v) for v in mesh_str.split("x"))
     mesh = jax.make_mesh((d, m), ("data", "model"))
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        set_axes(("data",), "model", data_size=d, model_size=m)
-    try:
+    with axis_scope(AxisRegistry(("data",), "model", d, m)):
         params, qstate = M.init(jax.random.PRNGKey(0), cfg)
         opt = adamw_init(params)
         pipe = make_pipeline(DataSpec(kind="lm", batch=4, seq=32,
@@ -305,8 +303,6 @@ def _legacy_step_hlo(mesh_str, grad_compression):
             jitted = jax.jit(step_fn, in_shardings=in_shardings,
                              donate_argnums=donate)
             return jitted.lower(*args).compile().as_text()
-    finally:
-        reset_axes()
 
 
 def test_hlo_identity_1x1():
@@ -453,16 +449,19 @@ def test_serving_spec_roundtrip_and_validation():
         PrecisionSpec(packed_serving=True))
 
 
-def test_make_engine_legacy_kwargs_warn():
-    """batch_slots/packed/plan kwargs are one-release shims: they must
-    warn DeprecationWarning and still win over the spec."""
+def test_make_engine_removed_kwargs_rejected():
+    """The one-release batch_slots/packed/plan kwarg shims are gone:
+    make_engine must reject them with a pointer to the spec field, not
+    silently pass them through to Engine."""
     ctx = build(RunSpec(arch="qwen2-0.5b", serving=ServingSpec(slots=4)))
     params, qstate = ctx.init_state()
-    with pytest.warns(DeprecationWarning, match="batch_slots"):
-        eng = ctx.make_engine(params, qstate, batch_slots=2, max_len=32)
-    assert eng.slots == 2
-    with pytest.warns(DeprecationWarning, match="packed"):
-        ctx.make_engine(params, qstate, packed=False, max_len=32)
+    for kw, field in (("batch_slots", "serving.slots"),
+                      ("packed", "serving.packed"),
+                      ("plan", "RunSpec.plan")):
+        with pytest.raises(TypeError, match=field.replace(".", r"\.")):
+            ctx.make_engine(params, qstate, max_len=32, **{kw: 2})
+    eng = ctx.make_engine(params, qstate, max_len=32)
+    assert eng.slots == 4      # the spec field governs
 
 
 def test_kv_cache_fp_hlo_identical_to_legacy_engine():

@@ -12,10 +12,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro.dist import EFState, ef_compress, ef_init
 from repro.dist.axes import (AxisRegistry, axis_scope, constrain,
-                             get_model_size, reset_axes, set_axes)
+                             get_model_size)
 from repro.dist.perf import (cast_for_matmul, compute_dtype_scope,
                              get_compute_dtype, pack_params_for_serving,
-                             set_compute_dtype, unpack_weight)
+                             unpack_weight)
 from repro.dist.sharding import spec_for_param, shard_tree, stacked_tree
 
 
@@ -53,20 +53,6 @@ def test_axes_scope_roundtrip():
         with axis_scope(AxisRegistry(("data",), "model", 2, 4)):
             assert get_model_size() == 4
         assert get_model_size() == 16
-    assert get_model_size() == 1
-
-
-def test_set_axes_shim_warns_and_delegates():
-    """The deprecated global-mutation shim still works for one release:
-    it rebinds the *default* registry (scoped overrides still win)."""
-    with pytest.warns(DeprecationWarning, match="set_axes is deprecated"):
-        set_axes(("pod", "data"), "model", data_size=32, model_size=16)
-    try:
-        assert get_model_size() == 16
-        with axis_scope(AxisRegistry()):
-            assert get_model_size() == 1   # scope beats the default
-    finally:
-        reset_axes()
     assert get_model_size() == 1
 
 
@@ -147,20 +133,6 @@ def test_compute_dtype_cast():
         assert cast_for_matmul(x).dtype == jnp.bfloat16
         assert cast_for_matmul(ids).dtype == jnp.int32  # ints untouched
     assert cast_for_matmul(x).dtype == jnp.float32
-
-
-def test_set_compute_dtype_shim_warns_and_delegates():
-    from repro.dist.perf import reset_precision
-    with pytest.warns(DeprecationWarning,
-                      match="set_compute_dtype is deprecated"):
-        set_compute_dtype(jnp.bfloat16)
-    try:
-        assert get_compute_dtype() == jnp.bfloat16
-        with compute_dtype_scope(None):    # scope beats the default
-            assert get_compute_dtype() is None
-    finally:
-        reset_precision()
-    assert get_compute_dtype() is None
 
 
 def test_pack_unpack_roundtrip_on_grid():

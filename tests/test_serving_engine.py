@@ -314,6 +314,66 @@ def test_prefix_reuse_token_identical():
     assert tuple(prompt) in eng._prefix_cache
 
 
+def test_prefix_lru_eviction_and_refresh():
+    """Bounded prefix cache under capacity pressure: filling past
+    ``_prefix_cap`` evicts the least-recently-used entry, and a cache
+    hit refreshes recency so the eviction victim is the true LRU."""
+    cfg = get("qwen2-0.5b", smoke=True)
+    M = model_for(cfg)
+    p, q = M.init(KEY, cfg)
+    eng = Engine(M, p, q, cfg, batch_slots=1, max_len=32,
+                 prefix_reuse=True)
+    eng._prefix_cap = 3
+    prompts = [[1 + i, 7, 3 + i] for i in range(4)]
+    for pr in prompts[:3]:
+        eng.run([Request(prompt=list(pr), max_new=2)])
+    assert [list(k) for k in eng._prefix_cache] == prompts[:3]
+    # hit prompt 0 -> refreshed to most-recent; prompt 1 becomes LRU
+    eng.run([Request(prompt=list(prompts[0]), max_new=2)])
+    assert next(iter(eng._prefix_cache)) == tuple(prompts[1])
+    # a 4th distinct prompt evicts prompt 1, not the refreshed prompt 0
+    eng.run([Request(prompt=list(prompts[3]), max_new=2)])
+    assert len(eng._prefix_cache) == 3
+    assert tuple(prompts[1]) not in eng._prefix_cache
+    assert tuple(prompts[0]) in eng._prefix_cache
+    assert tuple(prompts[3]) in eng._prefix_cache
+
+
+def test_prefix_reuse_across_recycled_slots_matches_cold():
+    """A prefix served from the cache into a *recycled* slot must be
+    token-for-token what a cold prefill produces — and must actually
+    skip the prefill (counted), not just happen to agree."""
+    cfg = get("qwen2-0.5b", smoke=True)
+    M = model_for(cfg)
+    p, q = M.init(KEY, cfg)
+    prompt = [int(t) for t in
+              jax.random.randint(KEY, (6,), 0, cfg.vocab)]
+    other = [int(t) for t in
+             jax.random.randint(jax.random.fold_in(KEY, 1), (4,), 0,
+                                cfg.vocab)]
+    eng = Engine(M, p, q, cfg, batch_slots=1, max_len=32,
+                 prefix_reuse=True)
+    calls = []
+    inner = eng._prefill_prompt
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return inner(*a, **kw)
+
+    eng._prefill_prompt = counting
+    first = Request(prompt=list(prompt), max_new=5)
+    eng.run([first])                                  # cold prefill
+    eng.run([Request(prompt=list(other), max_new=3)])  # recycle slot 0
+    reused = Request(prompt=list(prompt), max_new=5)
+    eng.run([reused])                                 # cache hit
+    assert len(calls) == 2, "reuse path ran a third prefill"
+    assert reused.out == first.out
+    cold_eng = Engine(M, p, q, cfg, batch_slots=1, max_len=32)
+    cold = Request(prompt=list(prompt), max_new=5)
+    cold_eng.run([cold])
+    assert reused.out == cold.out
+
+
 def test_qmatmul_backend_interpret_default():
     from repro.kernels.qmatmul.ops import default_interpret
     # this suite runs on CPU: the Pallas kernel must select interpret mode

@@ -1,0 +1,233 @@
+"""Streaming ASR serving: audio-chunk requests in the continuous-batching
+Engine.
+
+The tentpole contract: audio streamed chunk-by-chunk through
+``StreamingEngine`` — encoder blocks appended incrementally into the
+slot's quantized cross-attention cache, decoder joining the shared
+ragged decode tick — must reproduce the offline whole-audio
+:func:`repro.serving.generate_asr` reference token-for-token, on the fp
+AND the quantized-KV cache paths, including while LM requests decode
+concurrently in the same jitted step.  Plus the surfaces around it:
+``split_audio`` block decomposition, the ``submit_audio`` handle API,
+admission validation, the ServingSpec workloads/audio routing through
+``RunContext.make_engine``, and the latency accounting the serving
+bench gates.
+"""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.models import model_for
+from repro.serving import (AudioRequest, Engine, Request, StreamingEngine,
+                           generate_asr, kv_cross_bytes_per_request,
+                           split_audio)
+
+KEY = jax.random.PRNGKey(5)
+SPEC_PATH = (pathlib.Path(__file__).resolve().parents[1] / "examples" /
+             "specs" / "serving_asr_stream.json")
+
+
+def _whisper():
+    cfg = get("whisper-large-v3", smoke=True)
+    M = model_for(cfg)
+    p, q = M.init(KEY, cfg)
+    return cfg, M, p, q
+
+
+def _frames(cfg, T, seed=9):
+    return jax.random.normal(jax.random.fold_in(KEY, seed),
+                             (T, cfg.d_model)) * 0.3
+
+
+def _lm_reqs(vocab, lens, max_news, seed=21):
+    k = jax.random.fold_in(KEY, seed)
+    return [Request(prompt=[int(t) for t in jax.random.randint(
+                jax.random.fold_in(k, i), (n,), 1, vocab)], max_new=mn)
+            for i, (n, mn) in enumerate(zip(lens, max_news))]
+
+
+def test_split_audio_blocks():
+    """Full chunk-size blocks then power-of-two tails; chunk=0 is one
+    block.  This decomposition is THE shared semantic unit between
+    streaming and the offline reference."""
+    fr = jnp.zeros((16, 4))
+    assert [b.shape[1] for b in split_audio(fr, 5)] == [5, 5, 5, 1]
+    assert [b.shape[1] for b in split_audio(fr, 6)] == [6, 6, 4]
+    assert [b.shape[1] for b in split_audio(fr, 0)] == [16]
+    assert [b.shape[1] for b in split_audio(fr, 16)] == [16]
+    blocks = split_audio(fr, 7)
+    assert sum(b.shape[1] for b in blocks) == 16
+    assert all(b.ndim == 3 for b in blocks)
+
+
+@pytest.mark.parametrize("kv_bits", [None, 4])
+def test_streaming_matches_offline(kv_bits):
+    """Chunked audio through the slot scheduler == offline whole-audio
+    generate_asr, token-for-token, with a concurrent LM request decoding
+    in the same jitted step — fp and quantized-KV caches."""
+    cfg, M, p, q = _whisper()
+    chunk, prompt, max_new = 5, [1, 2], 6
+    frames = _frames(cfg, cfg.enc_seq)
+    eng = StreamingEngine(M, p, q, cfg, batch_slots=2, max_len=32,
+                          kv_bits=kv_bits, audio_chunk=chunk)
+    req = AudioRequest(frames=frames, prompt=list(prompt), max_new=max_new)
+    lm = _lm_reqs(cfg.vocab, [3], [5])[0]
+    eng.run([req, lm])
+    assert req.done and lm.done and len(lm.out) == 5
+    ref = generate_asr(M, p, q, cfg, frames, prompt, max_new,
+                       chunk=chunk, cache_len=32, kv_bits=kv_bits)
+    assert req.out == [int(t) for t in np.asarray(ref)[0]]
+    # latency accounting: one entry per delivered chunk, ttft recorded
+    assert len(req.t_chunks) == len(split_audio(frames, chunk))
+    assert all(t > 0 for t in req.t_chunks)
+    assert req.ttft_s is not None and req.ttft_s > 0
+
+
+def test_lm_traffic_unaffected_by_streaming_engine():
+    """An LM request served by StreamingEngine (mem_len == 0 rows read
+    exactly zero from the memory buffer) matches the plain Engine."""
+    cfg, M, p, q = _whisper()
+    a = _lm_reqs(cfg.vocab, [4], [6])[0]
+    b = Request(prompt=list(a.prompt), max_new=6)
+    Engine(M, p, q, cfg, batch_slots=1, max_len=32).run([a])
+    StreamingEngine(M, p, q, cfg, batch_slots=1, max_len=32,
+                    audio_chunk=5).run([b])
+    assert a.done and b.done and a.out == b.out
+
+
+@pytest.mark.parametrize("kv_bits", [None, 4])
+def test_mixed_workload_slot_churn(kv_bits):
+    """More streams + LM requests than slots: every audio stream still
+    reproduces its offline reference and every LM request its
+    generate() reference, across slot recycling."""
+    cfg, M, p, q = _whisper()
+    chunk = 5
+    auds = [AudioRequest(frames=_frames(cfg, T, seed=30 + i),
+                         prompt=[1, 2 + i], max_new=4, chunk=chunk)
+            for i, T in enumerate([cfg.enc_seq, 7, 11])]
+    lms = _lm_reqs(cfg.vocab, [3, 5], [4, 3])
+    reqs = [auds[0], lms[0], auds[1], lms[1], auds[2]]
+    eng = StreamingEngine(M, p, q, cfg, batch_slots=2, max_len=32,
+                          kv_bits=kv_bits, audio_chunk=chunk)
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+    for a in auds:
+        ref = generate_asr(M, p, q, cfg, a.frames, a.prompt, a.max_new,
+                           chunk=chunk, cache_len=32, kv_bits=kv_bits)
+        assert a.out == [int(t) for t in np.asarray(ref)[0]]
+    # LM rows decode on the engine's (possibly quantized) self-KV cache:
+    # the exact reference is a plain Engine at the same kv_bits, which
+    # pins the streaming machinery as invisible to LM traffic
+    for r in lms:
+        ref = Request(prompt=list(r.prompt), max_new=r.max_new)
+        Engine(M, p, q, cfg, batch_slots=1, max_len=32,
+               kv_bits=kv_bits).run([ref])
+        assert r.out == ref.out
+
+
+def test_submit_audio_handle_tokens():
+    """The handle API over streaming: submit_audio returns a truthy
+    RequestHandle and tokens(handle) yields the same stream run()
+    produces, one token at a time while chunks keep arriving."""
+    cfg, M, p, q = _whisper()
+    frames = _frames(cfg, cfg.enc_seq)
+    ref_req = AudioRequest(frames=frames, prompt=[1, 2], max_new=5,
+                           chunk=5)
+    StreamingEngine(M, p, q, cfg, batch_slots=1, max_len=32,
+                    audio_chunk=5).run([ref_req])
+    eng = StreamingEngine(M, p, q, cfg, batch_slots=1, max_len=32,
+                          audio_chunk=5)
+    h = eng.submit_audio(AudioRequest(frames=frames, prompt=[1, 2],
+                                      max_new=5))
+    assert h
+    assert list(eng.tokens(h)) == ref_req.out
+    assert h.done and h.out == ref_req.out
+
+
+def test_submit_audio_validation_and_admission():
+    cfg, M, p, q = _whisper()
+    eng = StreamingEngine(M, p, q, cfg, batch_slots=1, max_len=16,
+                          audio_chunk=5, max_frames=8)
+    ok = AudioRequest(frames=_frames(cfg, 6), prompt=[1], max_new=2)
+    with pytest.raises(ValueError, match="frames"):
+        eng.submit_audio(AudioRequest(frames=_frames(cfg, 9),
+                                      prompt=[1], max_new=2))
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit_audio(AudioRequest(frames=_frames(cfg, 6),
+                                      prompt=[1] * 10, max_new=8))
+    assert eng.submit_audio(ok)
+    # slot reserved during streaming: both request types are refused
+    assert eng.submit_audio(AudioRequest(frames=_frames(cfg, 6),
+                                         prompt=[1], max_new=2)) is None
+    assert eng.submit(Request(prompt=[1, 2], max_new=2)) is None
+    eng.run([])
+    assert ok.done and len(ok.out) == 2
+
+
+def test_spec_routing_builds_streaming_engine():
+    """The golden spec routes through RunContext.make_engine to a
+    StreamingEngine carrying the spec's audio chunking and plan KV
+    width; the asr data pipeline yields encoder-shaped batches."""
+    from repro.api import RunSpec, build
+    spec = RunSpec.from_file(str(SPEC_PATH))
+    assert spec.serving.workloads == ("lm", "asr")
+    ctx = build(spec)
+    params, qstate = ctx.init_state()
+    eng = ctx.make_engine(params, qstate, max_len=32)
+    assert isinstance(eng, StreamingEngine)
+    assert eng.audio_chunk == spec.serving.audio.chunk_frames
+    assert eng.kv_bits == 4
+    batch = ctx.make_pipeline()(0)
+    assert batch["frame_embeds"].shape == (
+        spec.data.batch, ctx.cfg.enc_seq, ctx.cfg.d_model)
+    assert batch["tokens"].shape == (spec.data.batch, spec.data.seq)
+    # e2e through the spec-built engine: streamed == offline
+    frames = _frames(ctx.cfg, ctx.cfg.enc_seq)
+    req = AudioRequest(frames=frames, prompt=[1, 2], max_new=4)
+    eng.run([req])
+    ref = generate_asr(ctx.model, params, qstate, ctx.cfg, frames,
+                       [1, 2], 4, chunk=eng.audio_chunk, cache_len=32,
+                       kv_bits=eng.kv_bits)
+    assert req.out == [int(t) for t in np.asarray(ref)[0]]
+
+
+def test_serving_spec_workload_validation():
+    from repro.api import AudioSpec, ServingSpec
+    assert ServingSpec().workloads == ("lm",)
+    asr = ServingSpec(workloads=("lm", "asr"))
+    assert asr.audio == AudioSpec()          # auto-filled default
+    with pytest.raises(ValueError, match="drawn from"):
+        ServingSpec(workloads=("lm", "tts"))
+    with pytest.raises(ValueError, match="duplicate|unique"):
+        ServingSpec(workloads=("lm", "lm"))
+    with pytest.raises(ValueError, match="asr"):
+        ServingSpec(audio=AudioSpec(chunk_frames=4))
+    with pytest.raises(ValueError, match="chunkz"):
+        ServingSpec(workloads=("asr",), audio={"chunkz": 3})
+
+
+def test_golden_spec_round_trips():
+    from repro.api import RunSpec
+    spec = RunSpec.from_file(str(SPEC_PATH))
+    assert RunSpec.from_dict(json.loads(spec.to_json())) == spec
+
+
+def test_cross_kv_bytes_model():
+    """Cross-attention memory is a per-request static pin (frames rows,
+    K+V, all layers): exactly frames x the per-token self-ring row cost,
+    scaling with kv_bits incl. nibble packing."""
+    from repro.serving import kv_bytes_per_token
+    full = kv_cross_bytes_per_request(4, 16, 2, 16, None)
+    int8 = kv_cross_bytes_per_request(4, 16, 2, 16, 8)
+    nib = kv_cross_bytes_per_request(4, 16, 2, 16, 4)
+    assert full > int8 > nib
+    # same row model as the self ring, times the static frame count
+    for bits, v in ((None, full), (8, int8), (4, nib)):
+        assert v == kv_bytes_per_token(4, 16, 2, bits) * 16
+    # doubling frames doubles the pin
+    assert kv_cross_bytes_per_request(4, 16, 2, 32, 8) == 2 * int8
